@@ -1,0 +1,28 @@
+"""Figure-4 analogue: DMM test ELBO with 0/1/2 IAF flows in the guide.
+
+The paper's point: Pyro reproduces the DMM exactly and then improves it
+"with a few lines of code" by adding IAF flows to the guide. We train the
+DMM (examples/dmm.py) on synthetic chorales with 0/1/2 flows and report
+held-out ELBO per frame (higher = better, as in Fig 4)."""
+from __future__ import annotations
+
+import sys
+
+sys.path.insert(0, "examples")
+
+from dmm import run as dmm_run  # noqa: E402
+
+
+def main(steps: int = 250, log=print):
+    log("# Fig-4 analogue: DMM heldout ELBO/frame vs number of IAF flows")
+    rows = []
+    for n_iaf in (0, 1, 2):
+        log(f"DMM + {n_iaf} IAF:")
+        elbo = dmm_run(n_iaf, steps, log=lambda s: None)
+        log(f"  heldout ELBO/frame = {elbo:.4f}")
+        rows.append({"iaf": n_iaf, "heldout_elbo_frame": elbo})
+    return rows
+
+
+if __name__ == "__main__":
+    main()

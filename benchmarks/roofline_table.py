@@ -1,0 +1,56 @@
+"""Assemble the §Roofline table from the dry-run JSON dumps.
+
+Reads dryrun_single.json (+ dryrun_multi.json if present) produced by
+`python -m repro.launch.dryrun --all --out ...` and prints the per-cell
+three-term roofline with bottleneck + useful-flops ratio."""
+from __future__ import annotations
+
+import json
+import os
+
+
+def load(path):
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        return json.load(f)
+
+
+def fmt_row(r):
+    rf = r.get("roofline")
+    if not rf:
+        return f"| {r['arch']} | {r['shape']} | {r['mesh']} | ERROR {r.get('error','')[:40]} |"
+    return (
+        f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+        f"{rf['t_compute']*1e3:9.1f} | {rf['t_memory']*1e3:9.1f} | "
+        f"{rf['t_collective']*1e3:9.1f} | {rf['bottleneck']:>10} | "
+        f"{rf['useful_flops_ratio']:5.2f} | {rf['roofline_fraction']:5.3f} |"
+    )
+
+
+def main(log=print):
+    groups = [
+        ("single-pod (optimized)", load("dryrun_single.json")),
+        ("single-pod (paper-faithful baseline)", load("dryrun_baseline.json")),
+        ("multi-pod (optimized)", load("dryrun_multi.json")),
+    ]
+    if not any(rows for _, rows in groups):
+        log("no dryrun JSON found — run `python -m repro.launch.dryrun --all "
+            "--out dryrun_single.json` first")
+        return []
+    out = []
+    for title, rows in groups:
+        if not rows:
+            continue
+        log(f"\n## {title}")
+        log("| arch | shape | mesh | compute ms | memory ms | collective ms | "
+            "bottleneck | useful | frac |")
+        log("|---|---|---|---|---|---|---|---|---|")
+        for r in rows:
+            log(fmt_row(r))
+        out.extend(rows)
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Benchmark harness — one entry per paper table/figure:
+
+  fig3      Pyro-vs-raw overhead (paper Fig. 3)   -> fig3_overhead.py
+  fig4      DMM + IAF test ELBO (paper Fig. 4)    -> fig4_dmm.py
+  kernels   Pallas hot-spot accounting            -> kernel_bench.py
+  roofline  40-cell dry-run roofline table        -> roofline_table.py
+
+`python -m benchmarks.run` runs everything; `--only fig3` filters."""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    choices=[None, "fig3", "fig4", "kernels", "roofline"])
+    ap.add_argument("--fig4-steps", type=int, default=400)
+    args = ap.parse_args()
+
+    from . import fig3_overhead, fig4_dmm, kernel_bench, roofline_table
+
+    jobs = {
+        "fig3": fig3_overhead.main,
+        "fig4": lambda: fig4_dmm.main(steps=args.fig4_steps),
+        "kernels": kernel_bench.main,
+        "roofline": roofline_table.main,
+    }
+    selected = [args.only] if args.only else list(jobs)
+    for name in selected:
+        print(f"\n===== {name} =====")
+        t0 = time.time()
+        jobs[name]()
+        print(f"===== {name} done in {time.time()-t0:.0f}s =====")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

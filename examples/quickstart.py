@@ -1,0 +1,101 @@
+"""Quickstart: the paper's Figure-1 example — a VAE trained with SVI.
+
+    model:  z ~ N(0, I);  x ~ Bernoulli(decoder(z))        (generative)
+    guide:  z ~ N(encoder_loc(x), encoder_scale(x))        (amortized posterior)
+
+Run:  PYTHONPATH=src python examples/quickstart.py [--steps 500]
+"""
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+sys.path.insert(0, "src")
+
+from repro import distributions as dist
+from repro.core import primitives as P
+from repro.infer import SVI, Trace_ELBO
+from repro import optim
+
+LATENT, HIDDEN, OBS = 8, 64, 196  # 14x14 synthetic digits
+
+
+def mlp_init(key, sizes):
+    params = {}
+    for i, (a, b) in enumerate(zip(sizes[:-1], sizes[1:])):
+        k1, k2, key = jax.random.split(key, 3)
+        params[f"w{i}"] = jax.random.normal(k1, (a, b)) * (2.0 / a) ** 0.5
+        params[f"b{i}"] = jnp.zeros(b)
+    return params
+
+
+def mlp_apply(params, x, n, final=None):
+    for i in range(n):
+        x = x @ params[f"w{i}"] + params[f"b{i}"]
+        if i < n - 1:
+            x = jax.nn.softplus(x)
+    return x if final is None else final(x)
+
+
+def model(batch):
+    """p(x, z) — the decoder is registered via `module` (pyro.module)."""
+    dec = P.module("decoder", mlp_init(jax.random.PRNGKey(1), [LATENT, HIDDEN, OBS]))
+    B = batch.shape[0]
+    with P.plate("data", B, dim=-1):
+        z = P.sample("z", dist.Normal(jnp.zeros((B, LATENT)), 1.0).to_event(1))
+        probs = mlp_apply(dec, z, 2, jax.nn.sigmoid)
+        P.sample("x", dist.Bernoulli(probs=probs).to_event(1), obs=batch)
+
+
+def guide(batch):
+    """q(z | x) — amortized encoder."""
+    enc = P.module("encoder", mlp_init(jax.random.PRNGKey(2), [OBS, HIDDEN, 2 * LATENT]))
+    B = batch.shape[0]
+    h = mlp_apply(enc, batch, 2)
+    loc, log_scale = h[:, :LATENT], h[:, LATENT:]
+    with P.plate("data", B, dim=-1):
+        P.sample("z", dist.Normal(loc, jnp.exp(0.5 * log_scale)).to_event(1))
+
+
+def synthetic_digits(key, n):
+    """Blobby binary images with latent structure (stands in for MNIST)."""
+    k1, k2 = jax.random.split(key)
+    centers = jax.random.uniform(k1, (n, 2), minval=3, maxval=11)
+    yy, xx = jnp.mgrid[0:14, 0:14]
+    d2 = (xx[None] - centers[:, 0, None, None]) ** 2 + (yy[None] - centers[:, 1, None, None]) ** 2
+    probs = jnp.exp(-d2 / 8.0)
+    return (jax.random.uniform(k2, (n, 14, 14)) < probs).astype(jnp.float32).reshape(n, OBS)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=500)
+    ap.add_argument("--batch", type=int, default=128)
+    args = ap.parse_args()
+
+    data = synthetic_digits(jax.random.PRNGKey(0), 4096)
+    svi = SVI(model, guide, optim.Adam(1e-3), Trace_ELBO())
+    state = svi.init(jax.random.PRNGKey(3), data[: args.batch])
+
+    @jax.jit
+    def step(state, batch):
+        return svi.update(state, batch)
+
+    t0, losses = time.time(), []
+    for i in range(args.steps):
+        idx = jax.random.choice(jax.random.fold_in(jax.random.PRNGKey(4), i),
+                                data.shape[0], (args.batch,), replace=False)
+        state, loss = step(state, data[idx])
+        losses.append(float(loss))
+        if i % 100 == 0:
+            print(f"step {i:4d}  -ELBO/example {loss / args.batch:8.4f}")
+    print(f"final -ELBO/example {losses[-1]/args.batch:.4f} "
+          f"(start {losses[0]/args.batch:.4f}) in {time.time()-t0:.1f}s")
+    assert losses[-1] < losses[0] * 0.8, "VAE did not converge"
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""repro — Deep Universal Probabilistic Programming on JAX/TPU.
+
+A production-scale JAX reimplementation of the Pyro PPL (Bingham et al. 2018):
+effect-handler runtime (repro.core), distributions (repro.distributions),
+inference (repro.infer), plus the distributed LM training/serving framework
+that exercises the PPL at 512-chip scale (repro.models / launch / configs).
+"""
+from . import core
+from .core import (
+    deterministic,
+    factor,
+    module,
+    param,
+    plate,
+    prng_key,
+    sample,
+    subsample,
+)
+from .core import handlers
+
+__version__ = "0.1.0"
+
+__all__ = [
+    "core",
+    "handlers",
+    "sample",
+    "param",
+    "plate",
+    "deterministic",
+    "factor",
+    "module",
+    "prng_key",
+    "subsample",
+]

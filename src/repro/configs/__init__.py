@@ -1,0 +1,83 @@
+"""Architecture registry: the 10 assigned architectures, their input-shape
+sets, and the (arch x shape) dry-run cell enumeration.
+
+Shapes (per assignment):
+    train_4k     seq 4,096   global_batch 256   -> train_step
+    prefill_32k  seq 32,768  global_batch 32    -> prefill_step
+    decode_32k   seq 32,768  global_batch 128   -> decode_step (1 new token)
+    long_500k    seq 524,288 global_batch 1     -> decode_step; SSM/hybrid only
+"""
+from __future__ import annotations
+
+import importlib
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+from ..models.config import ModelConfig
+
+_MODULES = {
+    "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
+    "dbrx-132b": "dbrx_132b",
+    "deepseek-coder-33b": "deepseek_coder_33b",
+    "smollm-135m": "smollm_135m",
+    "qwen1.5-0.5b": "qwen15_05b",
+    "qwen3-32b": "qwen3_32b",
+    "musicgen-large": "musicgen_large",
+    "mamba2-130m": "mamba2_130m",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "pixtral-12b": "pixtral_12b",
+}
+
+ARCHS: Tuple[str, ...] = tuple(_MODULES)
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+# long_500k needs sub-quadratic attention: only constant-state (ssm) and
+# bounded-window (hybrid) families run it; pure full-attention archs are
+# recorded as SKIP (DESIGN.md §5).
+_LONG_OK = ("mamba2-130m", "recurrentgemma-9b")
+
+
+def _module(arch: str):
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch '{arch}'; choose from {list(_MODULES)}")
+    return importlib.import_module(f".{_MODULES[arch]}", __package__)
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _module(arch).CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return _module(arch).SMOKE
+
+
+def shape_applicable(arch: str, shape: str) -> bool:
+    if shape == "long_500k":
+        return arch in _LONG_OK
+    return True
+
+
+def cells(include_skips: bool = False) -> List[Tuple[str, str]]:
+    """All assigned (arch, shape) dry-run cells. 10 archs x 4 shapes = 40
+    assigned cells; 8 long_500k cells are SKIP -> 32 runnable."""
+    out = []
+    for arch in ARCHS:
+        for shape in SHAPES:
+            if include_skips or shape_applicable(arch, shape):
+                out.append((arch, shape))
+    return out

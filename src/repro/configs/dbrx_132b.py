@@ -1,0 +1,25 @@
+"""DBRX 132B [hf:databricks/dbrx-base; unverified] — 16-expert top-4
+fine-grained MoE. 40L d_model=6144 48H (GQA kv=8) d_ff=10752 vocab=100352."""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="dbrx-132b",
+    family="moe",
+    n_layers=40,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_ff=10752,
+    vocab=100352,
+    moe=True,
+    n_experts=16,
+    top_k=4,
+    d_expert=10752,
+    rope_theta=500000.0,
+)
+
+SMOKE = CONFIG.replace(
+    n_layers=3, d_model=64, n_heads=8, n_kv_heads=2, d_ff=96, vocab=512,
+    n_experts=4, top_k=2, d_expert=96,
+    param_dtype="float32", compute_dtype="float32", remat=False,
+)

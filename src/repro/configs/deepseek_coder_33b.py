@@ -1,0 +1,20 @@
+"""DeepSeek-Coder 33B [arXiv:2401.14196; hf] — dense llama-arch.
+62L d_model=7168 56H (GQA kv=8) d_ff=19200 vocab=32256."""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-coder-33b",
+    family="dense",
+    n_layers=62,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    d_ff=19200,
+    vocab=32256,
+    rope_theta=100000.0,
+)
+
+SMOKE = CONFIG.replace(
+    n_layers=3, d_model=64, n_heads=8, n_kv_heads=2, d_ff=128, vocab=512,
+    param_dtype="float32", compute_dtype="float32", remat=False,
+)

@@ -1,0 +1,38 @@
+"""DeepSeek-V2-Lite 16B [arXiv:2405.04434; hf] — MoE with Multi-head Latent
+Attention. Assigned spec: 27L d_model=2048 16H d_ff=1408 vocab=102400,
+MoE 64 routed top-6 + 2 shared, MLA kv_lora_rank=512.
+
+Notes vs the HF checkpoint: Lite uses full-rank q (no q_lora); the real
+checkpoint's first layer is a dense MLP — we keep all layers MoE so the
+scan-over-layers stays homogeneous (parameter count difference ~0.2%,
+recorded in DESIGN.md §5)."""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v2-lite-16b",
+    family="moe",
+    n_layers=27,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=1408,
+    vocab=102400,
+    moe=True,
+    n_experts=64,
+    top_k=6,
+    n_shared_experts=2,
+    d_expert=1408,
+    mla=True,
+    kv_lora_rank=512,
+    qk_rope_dim=64,
+    qk_nope_dim=128,
+    v_head_dim=128,
+    rope_theta=10000.0,
+)
+
+SMOKE = CONFIG.replace(
+    n_layers=3, d_model=64, n_heads=4, n_kv_heads=4, d_ff=32, vocab=512,
+    n_experts=8, top_k=2, n_shared_experts=1, d_expert=32,
+    kv_lora_rank=32, qk_rope_dim=8, qk_nope_dim=16, v_head_dim=16,
+    param_dtype="float32", compute_dtype="float32", remat=False,
+)

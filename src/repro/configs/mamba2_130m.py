@@ -1,0 +1,25 @@
+"""Mamba2-130M [arXiv:2405.21060; unverified] — attention-free SSD
+(state-space duality). 24L d_model=768 vocab=50280, ssm_state=128,
+headdim=64, expand=2 (d_inner=1536, 24 ssm heads). Supports long_500k
+(constant-size recurrent state)."""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-130m",
+    family="ssm",
+    n_layers=24,
+    d_model=768,
+    vocab=50280,
+    ssm_state=128,
+    ssm_headdim=64,
+    ssm_expand=2,
+    ssm_chunk=128,
+    conv_width=4,
+    tie_embeddings=True,
+)
+
+SMOKE = CONFIG.replace(
+    n_layers=3, d_model=64, vocab=512, ssm_state=16, ssm_headdim=16,
+    ssm_chunk=16,
+    param_dtype="float32", compute_dtype="float32", remat=False,
+)

@@ -1,0 +1,23 @@
+"""MusicGen-Large [arXiv:2306.05284; hf] — decoder-only transformer over
+EnCodec audio tokens. 48L d_model=2048 32H (MHA) d_ff=8192 vocab=2048.
+The EnCodec frontend is a STUB (frontends.audio_stub_embed): `input_specs`
+feeds precomputed (B, S, D) frame embeddings; targets are codebook tokens."""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-large",
+    family="dense",
+    n_layers=48,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=8192,
+    vocab=2048,
+    modality="audio",
+    rope_theta=10000.0,
+)
+
+SMOKE = CONFIG.replace(
+    n_layers=3, d_model=64, n_heads=4, n_kv_heads=4, d_ff=128, vocab=128,
+    param_dtype="float32", compute_dtype="float32", remat=False,
+)

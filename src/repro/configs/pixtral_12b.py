@@ -1,0 +1,25 @@
+"""Pixtral-12B [hf:mistralai/Pixtral-12B-2409; unverified] — VLM: pixtral
+ViT frontend (STUB, frontends.vision_stub_embed) + Mistral-Nemo-style
+decoder. 40L d_model=5120 32H (GQA kv=8) d_ff=14336 vocab=131072,
+head_dim=128 (decoupled)."""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="pixtral-12b",
+    family="dense",
+    n_layers=40,
+    d_model=5120,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab=131072,
+    head_dim=128,
+    modality="vlm",
+    rope_theta=1000000000.0,
+)
+
+SMOKE = CONFIG.replace(
+    n_layers=3, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128, vocab=512,
+    head_dim=16,
+    param_dtype="float32", compute_dtype="float32", remat=False,
+)

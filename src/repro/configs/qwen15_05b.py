@@ -1,0 +1,22 @@
+"""Qwen1.5-0.5B [hf:Qwen/Qwen1.5-0.5B; hf] — dense with QKV bias.
+24L d_model=1024 16H (kv=16, MHA) d_ff=2816 vocab=151936, tied embeddings."""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-0.5b",
+    family="dense",
+    n_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=2816,
+    vocab=151936,
+    attn_bias=True,
+    tie_embeddings=True,
+    rope_theta=1000000.0,
+)
+
+SMOKE = CONFIG.replace(
+    n_layers=3, d_model=64, n_heads=4, n_kv_heads=4, d_ff=128, vocab=512,
+    param_dtype="float32", compute_dtype="float32", remat=False,
+)

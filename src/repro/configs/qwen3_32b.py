@@ -1,0 +1,24 @@
+"""Qwen3-32B [hf:Qwen/Qwen3-8B family; hf] — dense with per-head q/k RMSNorm.
+64L d_model=5120 64H (GQA kv=8) d_ff=25600 vocab=151936, head_dim=128
+(Qwen3 decouples head_dim from d_model/n_heads)."""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-32b",
+    family="dense",
+    n_layers=64,
+    d_model=5120,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=25600,
+    vocab=151936,
+    head_dim=128,
+    qk_norm=True,
+    rope_theta=1000000.0,
+)
+
+SMOKE = CONFIG.replace(
+    n_layers=3, d_model=64, n_heads=8, n_kv_heads=2, d_ff=128, vocab=512,
+    head_dim=16,
+    param_dtype="float32", compute_dtype="float32", remat=False,
+)

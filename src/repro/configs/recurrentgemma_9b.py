@@ -1,0 +1,27 @@
+"""RecurrentGemma-9B [arXiv:2402.19427; unverified] — Griffin hybrid:
+RG-LRU + local attention in a 2:1 pattern. 38L d_model=4096 16H (MQA kv=1)
+d_ff=12288 vocab=256000, window=2048, lru_width=4096. Supports long_500k
+(bounded window + constant LRU state)."""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-9b",
+    family="hybrid",
+    n_layers=38,
+    d_model=4096,
+    n_heads=16,
+    n_kv_heads=1,
+    d_ff=12288,
+    vocab=256000,
+    window=2048,
+    pattern=("rglru", "rglru", "attn"),
+    lru_width=4096,
+    conv_width=4,
+    tie_embeddings=True,
+)
+
+SMOKE = CONFIG.replace(
+    n_layers=5, d_model=64, n_heads=4, n_kv_heads=1, d_ff=128, vocab=512,
+    window=8, lru_width=64,
+    param_dtype="float32", compute_dtype="float32", remat=False,
+)

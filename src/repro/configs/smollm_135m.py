@@ -1,0 +1,22 @@
+"""SmolLM-135M [hf:HuggingFaceTB/SmolLM-135M; hf] — small dense llama-arch;
+the end-to-end training example target. 30L d_model=576 9H (GQA kv=3)
+d_ff=1536 vocab=49152, tied embeddings."""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="smollm-135m",
+    family="dense",
+    n_layers=30,
+    d_model=576,
+    n_heads=9,
+    n_kv_heads=3,
+    d_ff=1536,
+    vocab=49152,
+    tie_embeddings=True,
+    rope_theta=10000.0,
+)
+
+SMOKE = CONFIG.replace(
+    n_layers=3, d_model=48, n_heads=3, n_kv_heads=1, d_ff=96, vocab=512,
+    param_dtype="float32", compute_dtype="float32", remat=False,
+)

@@ -1,0 +1,34 @@
+"""repro.core — the paper's contribution: effect-handler PPL runtime."""
+from . import handlers, messenger, primitives, reparam as _reparam_mod
+from .handlers import Trace
+from .reparam import LocScaleReparam, reparam
+from .messenger import Messenger, apply_stack
+from .primitives import (
+    deterministic,
+    factor,
+    module,
+    param,
+    plate,
+    prng_key,
+    sample,
+    subsample,
+)
+
+__all__ = [
+    "handlers",
+    "messenger",
+    "primitives",
+    "Messenger",
+    "Trace",
+    "LocScaleReparam",
+    "reparam",
+    "apply_stack",
+    "sample",
+    "param",
+    "plate",
+    "deterministic",
+    "factor",
+    "module",
+    "prng_key",
+    "subsample",
+]

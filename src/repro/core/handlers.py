@@ -1,0 +1,323 @@
+"""The Poutine handler library (paper §2): trace, replay, seed, condition,
+substitute, block, mask, scale, lift, do, reparam-free subset of Pyro's
+poutine. Every inference algorithm in repro.infer is a composition of these.
+"""
+from __future__ import annotations
+
+import hashlib
+from collections import OrderedDict
+from typing import Any, Callable, Dict, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from ..distributions import Delta, Distribution
+from ..distributions.util import sum_rightmost
+from .messenger import Messenger
+
+
+def _site_key_int(name: str) -> int:
+    """Stable 31-bit hash of a site name — used to fold per-site randomness
+    out of a single seed key, making sampling order-independent."""
+    return int.from_bytes(hashlib.sha1(name.encode()).digest()[:4], "little") & 0x7FFFFFFF
+
+
+# ---------------------------------------------------------------------------
+# Trace data structure
+# ---------------------------------------------------------------------------
+
+
+class Trace:
+    """An execution trace: ordered map site name -> message."""
+
+    def __init__(self):
+        self.nodes: "OrderedDict[str, Dict[str, Any]]" = OrderedDict()
+
+    def add_node(self, name: str, msg: Dict[str, Any]) -> None:
+        if name in self.nodes:
+            raise RuntimeError(f"duplicate site name '{name}' in a single execution")
+        self.nodes[name] = msg
+
+    def __iter__(self):
+        return iter(self.nodes.values())
+
+    def __getitem__(self, name):
+        return self.nodes[name]
+
+    def __contains__(self, name):
+        return name in self.nodes
+
+    def copy(self) -> "Trace":
+        t = Trace()
+        t.nodes = OrderedDict((k, dict(v)) for k, v in self.nodes.items())
+        return t
+
+    # -- log-density computation ------------------------------------------
+    def compute_log_prob(self, site_filter: Callable[[str, dict], bool] = lambda n, s: True):
+        for name, site in self.nodes.items():
+            if site["type"] == "sample" and site_filter(name, site):
+                if "log_prob" not in site:
+                    lp = site["fn"].log_prob(site["value"])
+                    if site["mask"] is not None:
+                        lp = jnp.where(site["mask"], lp, 0.0)
+                    if site["scale"] is not None:
+                        lp = lp * site["scale"]
+                    site["log_prob"] = lp
+        return self
+
+    def log_prob_sum(self, site_filter: Callable[[str, dict], bool] = lambda n, s: True):
+        self.compute_log_prob(site_filter)
+        total = 0.0
+        for name, site in self.nodes.items():
+            if site["type"] == "sample" and site_filter(name, site) and "log_prob" in site:
+                total = total + jnp.sum(site["log_prob"])
+        return total
+
+    # convenience views
+    def stochastic_nodes(self):
+        return [n for n, s in self.nodes.items() if s["type"] == "sample" and not s["is_observed"]]
+
+    def observed_nodes(self):
+        return [n for n, s in self.nodes.items() if s["type"] == "sample" and s["is_observed"]]
+
+    def param_nodes(self):
+        return [n for n, s in self.nodes.items() if s["type"] == "param"]
+
+
+# ---------------------------------------------------------------------------
+# Handlers
+# ---------------------------------------------------------------------------
+
+
+class trace(Messenger):
+    """Record every effect into a Trace."""
+
+    def __enter__(self):
+        super().__enter__()
+        self.trace = Trace()
+        return self.trace
+
+    def postprocess_message(self, msg):
+        if msg["type"] in ("sample", "param", "deterministic", "plate"):
+            self.trace.add_node(msg["name"], dict(msg))
+
+    def get_trace(self, *args, **kwargs) -> Trace:
+        with self as tr:
+            self.fn(*args, **kwargs)
+        return tr
+
+
+class replay(Messenger):
+    """Force sample sites to take the values recorded in `guide_trace`
+    (the mechanism by which ELBOs run the model at guide samples)."""
+
+    def __init__(self, fn=None, guide_trace: Optional[Trace] = None):
+        if guide_trace is None:
+            raise ValueError("replay needs a guide_trace")
+        self.guide_trace = guide_trace
+        super().__init__(fn)
+
+    def process_message(self, msg):
+        if msg["type"] == "sample" and msg["name"] in self.guide_trace.nodes:
+            guide_msg = self.guide_trace.nodes[msg["name"]]
+            if guide_msg["type"] != "sample" or guide_msg["is_observed"]:
+                raise RuntimeError(f"site '{msg['name']}' must be a latent sample in the guide")
+            msg["value"] = guide_msg["value"]
+            msg["infer"] = {**guide_msg["infer"], **msg["infer"]}
+
+
+class seed(Messenger):
+    """Thread an explicit PRNG key. Per-site keys are fold_in(key, sha1(name))
+    so models are reproducible and site-order independent (DESIGN.md §2)."""
+
+    def __init__(self, fn=None, rng_seed: Union[int, jax.Array, None] = None):
+        if rng_seed is None:
+            raise ValueError("seed needs rng_seed (int or PRNG key)")
+        if isinstance(rng_seed, int) or (
+            hasattr(rng_seed, "dtype") and jnp.issubdtype(rng_seed.dtype, jnp.integer) and jnp.ndim(rng_seed) == 0
+        ):
+            rng_seed = jax.random.PRNGKey(rng_seed)
+        self.rng_key = rng_seed
+        self._counter = 0
+        super().__init__(fn)
+
+    def __enter__(self):
+        self._counter = 0
+        return super().__enter__()
+
+    def process_message(self, msg):
+        if (
+            msg["type"] in ("sample", "plate")
+            and not msg["is_observed"]
+            and msg["value"] is None
+            and msg["kwargs"].get("rng_key") is None
+        ):
+            msg["kwargs"]["rng_key"] = jax.random.fold_in(
+                self.rng_key, _site_key_int(msg["name"])
+            )
+        elif msg["type"] == "param" and msg["kwargs"].get("rng_key") is None:
+            msg["kwargs"]["rng_key"] = jax.random.fold_in(
+                self.rng_key, _site_key_int("$param$" + msg["name"])
+            )
+        elif msg["type"] == "prng_key" and msg["value"] is None:
+            self._counter += 1
+            msg["value"] = jax.random.fold_in(
+                self.rng_key, _site_key_int(f"$prng_key${self._counter}")
+            )
+
+
+class substitute(Messenger):
+    """Fix sample/param sites to given values (by dict or by function).
+    This is how optimizers inject current parameter values each step."""
+
+    def __init__(self, fn=None, data: Optional[Dict[str, Any]] = None, substitute_fn=None):
+        if (data is None) == (substitute_fn is None):
+            raise ValueError("pass exactly one of data / substitute_fn")
+        self.data = data
+        self.substitute_fn = substitute_fn
+        super().__init__(fn)
+
+    def process_message(self, msg):
+        if msg["type"] not in ("sample", "param"):
+            return
+        if msg["value"] is not None:
+            return
+        if self.data is not None:
+            if msg["name"] in self.data:
+                msg["value"] = self.data[msg["name"]]
+        else:
+            value = self.substitute_fn(msg)
+            if value is not None:
+                msg["value"] = value
+
+
+class condition(Messenger):
+    """Condition sample sites on observed values (paper Fig. 1:
+    `pyro.condition(model, data={"x": x})`)."""
+
+    def __init__(self, fn=None, data: Optional[Dict[str, Any]] = None):
+        self.data = data or {}
+        super().__init__(fn)
+
+    def process_message(self, msg):
+        if msg["type"] == "sample" and msg["name"] in self.data:
+            msg["value"] = self.data[msg["name"]]
+            msg["is_observed"] = True
+
+
+class do(Messenger):
+    """Causal intervention: sever the site from its parents, fixing its value
+    without adding a log-density contribution."""
+
+    def __init__(self, fn=None, data: Optional[Dict[str, Any]] = None):
+        self.data = data or {}
+        super().__init__(fn)
+
+    def process_message(self, msg):
+        if msg["type"] == "sample" and msg["name"] in self.data:
+            msg["value"] = jnp.asarray(self.data[msg["name"]])
+            msg["is_observed"] = False
+            msg["intervened"] = True
+            msg["stop"] = True
+            msg["fn"] = Delta(msg["value"], event_dim=len(msg["fn"].event_shape))
+
+
+class block(Messenger):
+    """Hide selected sites from outer handlers."""
+
+    def __init__(self, fn=None, hide_fn=None, hide=None, expose=None, expose_types=None):
+        if hide_fn is not None:
+            self.hide_fn = hide_fn
+        elif hide is not None:
+            self.hide_fn = lambda msg: msg["name"] in hide
+        elif expose is not None:
+            self.hide_fn = lambda msg: msg["name"] not in expose
+        elif expose_types is not None:
+            self.hide_fn = lambda msg: msg["type"] not in expose_types
+        else:
+            self.hide_fn = lambda msg: True
+        super().__init__(fn)
+
+    def process_message(self, msg):
+        if self.hide_fn(msg):
+            msg["stop"] = True
+
+
+class mask(Messenger):
+    """Multiply downstream log_probs by a boolean mask (variable-length
+    sequences — the DMM uses this for padded mini-batches)."""
+
+    def __init__(self, fn=None, mask=None):
+        if mask is None:
+            raise ValueError("mask handler needs mask=")
+        self._mask = mask
+        super().__init__(fn)
+
+    def process_message(self, msg):
+        if msg["type"] != "sample":
+            return
+        msg["mask"] = self._mask if msg["mask"] is None else msg["mask"] & self._mask
+
+
+class scale(Messenger):
+    """Rescale downstream log_probs (minibatch N/B correction, annealing)."""
+
+    def __init__(self, fn=None, scale=1.0):
+        self._scale = scale
+        super().__init__(fn)
+
+    def process_message(self, msg):
+        if msg["type"] == "sample":
+            msg["scale"] = self._scale if msg["scale"] is None else msg["scale"] * self._scale
+
+
+class lift(Messenger):
+    """Lift param sites to sample sites drawn from a prior — Bayesian NNs
+    from deterministic ones (used by the Bayesian-last-layer LM option)."""
+
+    def __init__(self, fn=None, prior=None):
+        if prior is None:
+            raise ValueError("lift needs prior= (Distribution or dict name->Distribution)")
+        self.prior = prior
+        super().__init__(fn)
+
+    def process_message(self, msg):
+        if msg["type"] != "param":
+            return
+        prior = self.prior
+        if isinstance(prior, dict):
+            if msg["name"] not in prior:
+                return
+            prior = prior[msg["name"]]
+        msg["type"] = "sample"
+        msg["fn"] = prior
+        msg["args"] = ()
+        msg["is_observed"] = False
+        msg["kwargs"] = {"rng_key": msg["kwargs"].get("rng_key"), "sample_shape": ()}
+
+
+class collect_params(Messenger):
+    """Collect every `param` site's (value, constraint) without altering the
+    execution — used by SVI init to build the optimizer pytree."""
+
+    def __enter__(self):
+        super().__enter__()
+        self.params: Dict[str, Any] = {}
+        self.constraints: Dict[str, Any] = {}
+        return self
+
+    def postprocess_message(self, msg):
+        if msg["type"] == "param":
+            self.params[msg["name"]] = msg["value"]
+            self.constraints[msg["name"]] = msg["kwargs"].get("constraint")
+
+
+# functional conveniences mirroring pyro.poutine.* ---------------------------
+
+
+def trace_fn(fn):
+    return trace(fn)
+
+
+def replay_fn(fn, guide_trace):
+    return replay(fn, guide_trace=guide_trace)

@@ -1,0 +1,146 @@
+"""Poutine: the algebraic effect-handler stack (paper §2, Kammar et al. 2013).
+
+This is the paper's key architectural contribution: `sample`/`param`
+primitives raise *messages* that climb a stack of Messenger handlers; each
+handler may read or rewrite the message. Inference algorithms are compositions
+of small handlers, cleanly separated from models and from the runtime.
+
+JAX adaptation (DESIGN.md §2): handlers run **at trace time**. Under
+`jax.jit`, the whole handler stack executes while XLA traces the function, so
+the compiled program contains zero PPL overhead — the paper's Fig-3 overhead
+experiment becomes a *trace-time* cost here, amortized across all executions
+of the compiled step.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, List, Optional
+
+# The global handler stack. Entering a Messenger pushes it; index 0 is the
+# outermost handler, the last element is the innermost.
+_HANDLER_STACK: List["Messenger"] = []
+
+
+def current_stack() -> List["Messenger"]:
+    return _HANDLER_STACK
+
+
+def am_i_wrapped() -> bool:
+    return len(_HANDLER_STACK) > 0
+
+
+def default_process_message(msg: Dict[str, Any]) -> None:
+    """Default effect: actually sample / return the param init value."""
+    if msg["value"] is None:
+        if msg["type"] == "sample":
+            fn = msg["fn"]
+            key = msg["kwargs"].get("rng_key")
+            if key is None:
+                raise RuntimeError(
+                    f"sample site '{msg['name']}' needs an rng key: wrap the call "
+                    "in repro.handlers.seed(fn, rng_key) or pass rng_key= explicitly."
+                )
+            sample_shape = msg["kwargs"].get("sample_shape", ())
+            value, intermediates = fn.sample_with_intermediates(key, sample_shape)
+            msg["value"] = value
+            msg["intermediates"] = intermediates
+        elif msg["type"] == "param":
+            init = msg["args"][0] if msg["args"] else None
+            if callable(init) and not hasattr(init, "shape"):
+                key = msg["kwargs"].get("rng_key")
+                msg["value"] = init(key) if key is not None else init(None)
+            else:
+                msg["value"] = init
+        elif msg["type"] == "plate":
+            import jax.numpy as jnp
+
+            size = msg["args"][0]
+            subsample_size = msg["args"][1]
+            if subsample_size is None or subsample_size == size:
+                msg["value"] = jnp.arange(size)
+            else:
+                key = msg["kwargs"].get("rng_key")
+                if key is None:
+                    raise RuntimeError(
+                        f"subsampling plate '{msg['name']}' needs an rng key: "
+                        "wrap in repro.handlers.seed."
+                    )
+                import jax
+
+                msg["value"] = jax.random.choice(
+                    key, size, shape=(subsample_size,), replace=False
+                )
+
+
+def apply_stack(msg: Dict[str, Any]) -> Dict[str, Any]:
+    """Run a message up the handler stack (innermost first), apply the default
+    behavior unless a handler provided a value or stopped propagation, then run
+    postprocessing back down the stack (Pyro's apply_stack semantics)."""
+    pointer = 0
+    for pointer, handler in enumerate(reversed(_HANDLER_STACK)):
+        handler.process_message(msg)
+        if msg.get("stop"):
+            break
+    default_process_message(msg)
+    for handler in _HANDLER_STACK[len(_HANDLER_STACK) - pointer - 1 :]:
+        handler.postprocess_message(msg)
+    return msg
+
+
+class Messenger:
+    """Base effect handler: a context manager + callable wrapper."""
+
+    def __init__(self, fn: Optional[Callable] = None):
+        self.fn = fn
+        functools.update_wrapper(self, fn, updated=[]) if fn is not None else None
+
+    def __enter__(self):
+        _HANDLER_STACK.append(self)
+        return self
+
+    def __exit__(self, exc_type, exc_value, traceback):
+        # remove self even if handlers above us leaked (exception safety)
+        if _HANDLER_STACK and _HANDLER_STACK[-1] is self:
+            _HANDLER_STACK.pop()
+        else:  # pragma: no cover - defensive
+            _HANDLER_STACK.remove(self)
+
+    def process_message(self, msg: Dict[str, Any]) -> None:
+        pass
+
+    def postprocess_message(self, msg: Dict[str, Any]) -> None:
+        pass
+
+    def __call__(self, *args, **kwargs):
+        if self.fn is None:
+            raise TypeError(f"{type(self).__name__} wraps no function; use as a context manager")
+        with self:
+            return self.fn(*args, **kwargs)
+
+
+def make_message(
+    msg_type: str,
+    name: str,
+    fn: Any = None,
+    args: tuple = (),
+    kwargs: Optional[dict] = None,
+    value: Any = None,
+    is_observed: bool = False,
+    infer: Optional[dict] = None,
+) -> Dict[str, Any]:
+    return {
+        "type": msg_type,
+        "name": name,
+        "fn": fn,
+        "args": args,
+        "kwargs": kwargs or {},
+        "value": value,
+        "is_observed": is_observed,
+        "scale": None,  # multiplicative log_prob scale (plate subsampling / handlers.scale)
+        "mask": None,  # boolean mask applied to log_prob
+        "cond_indep_stack": (),  # active plates
+        "intermediates": [],
+        "infer": infer or {},
+        "stop": False,
+        "done": False,
+    }

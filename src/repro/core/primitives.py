@@ -1,0 +1,215 @@
+"""The two language primitives of the paper (§2): `sample` and `param` —
+plus the standard derived primitives (`plate`, `deterministic`, `factor`,
+`module`, `prng_key`, `subsample`).
+"""
+from __future__ import annotations
+
+from collections import namedtuple
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..distributions import Delta, Distribution, Unit, constraints
+from ..distributions.wrappers import ExpandedDistribution
+from .messenger import Messenger, am_i_wrapped, apply_stack, make_message
+
+CondIndepStackFrame = namedtuple("CondIndepStackFrame", ["name", "dim", "size", "subsample_size"])
+
+
+def sample(
+    name: str,
+    fn: Distribution,
+    obs: Optional[Any] = None,
+    rng_key: Optional[jax.Array] = None,
+    sample_shape: tuple = (),
+    infer: Optional[dict] = None,
+) -> Any:
+    """Annotate a call to a stochastic function. `obs=` conditions the site
+    (the paper's mechanism for expressing unnormalized joint densities)."""
+    if not am_i_wrapped():
+        # outside any handler: behave like the raw distribution
+        if obs is not None:
+            return obs
+        if rng_key is None:
+            raise RuntimeError(
+                f"sample('{name}') outside an inference context requires rng_key="
+            )
+        return fn.sample(rng_key, sample_shape)
+    msg = make_message(
+        "sample",
+        name,
+        fn=fn,
+        kwargs={"rng_key": rng_key, "sample_shape": sample_shape},
+        value=obs,
+        is_observed=obs is not None,
+        infer=infer,
+    )
+    apply_stack(msg)
+    return msg["value"]
+
+
+def param(
+    name: str,
+    init_value: Any = None,
+    constraint: constraints.Constraint = constraints.real,
+    event_dim: Optional[int] = None,
+) -> Any:
+    """Register a learnable parameter. In this functional JAX port the *value*
+    is supplied by a `substitute`/`trace` handler; `init_value` (array or
+    callable key->array) seeds initialization."""
+    if not am_i_wrapped():
+        if callable(init_value) and not hasattr(init_value, "shape"):
+            return init_value(None)
+        return init_value
+    msg = make_message(
+        "param",
+        name,
+        args=(init_value,),
+        kwargs={"constraint": constraint, "event_dim": event_dim},
+    )
+    apply_stack(msg)
+    return msg["value"]
+
+
+def deterministic(name: str, value: Any) -> Any:
+    """Record a deterministic function of other sites in the trace."""
+    if not am_i_wrapped():
+        return value
+    msg = make_message("deterministic", name, value=value)
+    msg["fn"] = Delta(value, event_dim=jnp.ndim(value))
+    msg["is_observed"] = True
+    apply_stack(msg)
+    return msg["value"]
+
+
+def factor(name: str, log_factor: Any) -> None:
+    """Add an arbitrary log-density term (unnormalized models, paper §2)."""
+    unit = Unit(log_factor)
+    sample(name, unit, obs=jnp.empty(unit.shape()))
+
+
+def prng_key() -> Optional[jax.Array]:
+    """Draw a fresh PRNG key from the innermost seed handler."""
+    if not am_i_wrapped():
+        return None
+    msg = make_message("prng_key", "_prng_key")
+    apply_stack(msg)
+    return msg["value"]
+
+
+def module(name: str, params: dict, constraint=constraints.real) -> dict:
+    """Register every leaf of a parameter pytree (Pyro's `pyro.module` for
+    torch.nn.Module, adapted to functional pytrees)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        site = name + "." + ".".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        out.append(param(site, leaf, constraint=constraint))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+class plate(Messenger):
+    """Conditional-independence context (vectorized). Inside a `plate`, sample
+    sites are batched along `dim` and their log_prob is scaled by
+    size/subsample_size — Pyro's minibatch-subsampling semantics (paper §2).
+    """
+
+    def __init__(
+        self,
+        name: str,
+        size: int,
+        subsample_size: Optional[int] = None,
+        dim: Optional[int] = None,
+    ):
+        if size <= 0:
+            raise ValueError(f"plate '{name}' needs positive size, got {size}")
+        self.name = name
+        self.size = size
+        self.subsample_size = size if subsample_size is None else subsample_size
+        if dim is not None and dim >= 0:
+            raise ValueError("plate dim must be negative (batch dims count from the right)")
+        self.dim = dim
+        self._indices = None
+        super().__init__()
+
+    # -- subsample indices are themselves an effect (so `seed` can key them) --
+    def _subsample(self):
+        msg = make_message(
+            "plate",
+            self.name,
+            args=(self.size, self.subsample_size),
+            kwargs={"rng_key": None},
+        )
+        apply_stack(msg)
+        return msg["value"]
+
+    def __enter__(self):
+        super().__enter__()
+        self._indices = self._subsample()
+        if self.dim is None:
+            # allocate the innermost free dim not used by enclosing plates
+            used = {
+                f.dim
+                for h in _enclosing_plates(self)
+                for f in [h.frame]
+            }
+            d = -1
+            while d in used:
+                d -= 1
+            self.dim = d
+        self.frame = CondIndepStackFrame(self.name, self.dim, self.size, self.subsample_size)
+        return self._indices
+
+    @property
+    def indices(self):
+        return self._indices
+
+    def process_message(self, msg):
+        if msg["type"] not in ("sample", "deterministic", "param"):
+            return
+        if msg["type"] == "sample":
+            msg["cond_indep_stack"] = (self.frame,) + msg["cond_indep_stack"]
+            # broadcast the distribution along the plate dim
+            fn = msg["fn"]
+            if isinstance(fn, Distribution):
+                batch_shape = list(fn.batch_shape)
+                # target position of the plate dim within the batch shape
+                needed = -self.dim
+                while len(batch_shape) < needed:
+                    batch_shape.insert(0, 1)
+                if batch_shape[self.dim] != self.subsample_size:
+                    if batch_shape[self.dim] not in (1, self.subsample_size):
+                        raise ValueError(
+                            f"shape mismatch at site '{msg['name']}' inside plate "
+                            f"'{self.name}': dim {self.dim} has size {batch_shape[self.dim]},"
+                            f" expected {self.subsample_size}"
+                        )
+                    batch_shape[self.dim] = self.subsample_size
+                    msg["fn"] = ExpandedDistribution(fn, tuple(batch_shape))
+                elif tuple(batch_shape) != fn.batch_shape:
+                    msg["fn"] = ExpandedDistribution(fn, tuple(batch_shape))
+        if self.subsample_size < self.size:
+            scale = self.size / self.subsample_size
+            msg["scale"] = scale if msg["scale"] is None else msg["scale"] * scale
+
+
+def _enclosing_plates(me):
+    from .messenger import current_stack
+
+    return [h for h in current_stack() if isinstance(h, plate) and h is not me and hasattr(h, "frame")]
+
+
+def subsample(data: jax.Array, event_dim: int = 0) -> jax.Array:
+    """Subsample `data` along the innermost active plate dims (Pyro's
+    `pyro.subsample`)."""
+    from .messenger import current_stack
+
+    for h in current_stack():
+        if isinstance(h, plate) and hasattr(h, "frame") and h.subsample_size < h.size:
+            dim = h.frame.dim - event_dim
+            axis = data.ndim + dim
+            data = jnp.take(data, h.indices, axis=axis)
+    return data

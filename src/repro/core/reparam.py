@@ -1,0 +1,55 @@
+"""Reparameterization handler (Pyro's `poutine.reparam`): rewrite a sample
+site into an equivalent, better-conditioned form at trace time.
+
+`LocScaleReparam` decenters loc-scale families — the classic fix for
+funnel-shaped posteriors (Neal's funnel) in both SVI and HMC:
+
+    x ~ Normal(mu, sigma)        becomes
+    x_decentered ~ Normal(0, 1);  x = deterministic(mu + sigma * x_dec)
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Union
+
+import jax.numpy as jnp
+
+from ..distributions import Delta, Normal
+from .messenger import Messenger
+from . import primitives
+
+
+class LocScaleReparam:
+    """Decentering of a Normal site: x = loc + scale * z, z ~ N(0, 1)."""
+
+    def __call__(self, name: str, fn) -> jnp.ndarray:
+        if not isinstance(fn, Normal):
+            raise ValueError(f"LocScaleReparam expects Normal at '{name}'")
+        z = primitives.sample(
+            f"{name}_decentered",
+            Normal(jnp.zeros_like(fn.loc), jnp.ones_like(fn.scale)),
+        )
+        return fn.loc + fn.scale * z
+
+
+class reparam(Messenger):
+    """Handler: config maps site name -> reparameterizer."""
+
+    def __init__(self, fn=None, config: Optional[Dict[str, LocScaleReparam]] = None):
+        self.config = config or {}
+        super().__init__(fn)
+
+    def process_message(self, msg):
+        if msg["type"] != "sample" or msg["is_observed"]:
+            return
+        name = msg["name"]
+        if name not in self.config or msg.get("_reparam_done"):
+            return
+        strategy = self.config[name]
+        value = strategy(name, msg["fn"])
+        msg["value"] = value
+        msg["fn"] = Delta(value, event_dim=len(msg["fn"].event_shape))
+        # the site is now a deterministic function of the auxiliary site:
+        # mark observed so guides don't try to (re)sample it and its Delta
+        # contributes zero density at its own point
+        msg["is_observed"] = True
+        msg["_reparam_done"] = True

@@ -1,0 +1,3 @@
+from .pipeline import DataConfig, SyntheticTokens, skip_ahead
+
+__all__ = ["DataConfig", "SyntheticTokens", "skip_ahead"]

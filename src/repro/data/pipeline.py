@@ -1,0 +1,85 @@
+"""Deterministic synthetic token pipeline with host-sharded global batches.
+
+Production shape: each host process produces ONLY its local slice of the
+global batch (`host_batch_slice`), so the pipeline scales to any number of
+data-loading hosts with zero coordination — the (step, host) pair fully
+determines the data. Restart/elastic semantics: data for step N is identical
+regardless of topology, so checkpoints can resume on a different mesh
+without skipping or repeating tokens (DESIGN.md §6).
+
+The generator is a Markov-ish mixture over a synthetic vocabulary with
+enough structure that a 135M model's loss visibly drops within hundreds of
+steps (used by examples/train_lm.py and the Fig-3 benchmark).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    n_patterns: int = 64  # latent "topics"; lower => easier to model
+
+
+class SyntheticTokens:
+    """step -> {'tokens': (B, S), 'targets': (B, S)} int32, deterministic."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        rng = np.random.default_rng(cfg.seed)
+        # per-pattern unigram tables, concentrated for learnability
+        V = min(cfg.vocab, 4096)
+        logits = rng.gumbel(size=(cfg.n_patterns, V)) * 2.0
+        self._tables = np.exp(logits) / np.exp(logits).sum(-1, keepdims=True)
+        self._V = V
+
+    def _sequence(self, step: int, row: int) -> np.ndarray:
+        cfg = self.cfg
+        rng = np.random.default_rng(
+            np.random.SeedSequence([cfg.seed, step, row])
+        )
+        pat = rng.integers(cfg.n_patterns)
+        table = self._tables[pat]
+        toks = rng.choice(self._V, size=cfg.seq_len + 1, p=table)
+        # inject a deterministic local structure: every 8th token repeats
+        toks[8 :: 8] = toks[7 :: 8][: len(toks[8::8])]
+        return toks.astype(np.int32)
+
+    def global_batch(self, step: int) -> Dict[str, jax.Array]:
+        rows = np.stack([self._sequence(step, r) for r in range(self.cfg.global_batch)])
+        return {
+            "tokens": jnp.asarray(rows[:, :-1]),
+            "targets": jnp.asarray(rows[:, 1:]),
+        }
+
+    def host_batch_slice(self, step: int, host_id: int, n_hosts: int) -> Dict[str, jax.Array]:
+        per = self.cfg.global_batch // n_hosts
+        rows = np.stack(
+            [self._sequence(step, host_id * per + r) for r in range(per)]
+        )
+        return {
+            "tokens": jnp.asarray(rows[:, :-1]),
+            "targets": jnp.asarray(rows[:, 1:]),
+        }
+
+    def __iter__(self) -> Iterator[Dict[str, jax.Array]]:
+        step = 0
+        while True:
+            yield self.global_batch(step)
+            step += 1
+
+
+def skip_ahead(it: "SyntheticTokens", to_step: int) -> int:
+    """Deterministic skip: nothing to do (stateless), returns the step. Kept
+    as an explicit API so a file-backed pipeline can implement real seeking —
+    the straggler watchdog uses it to resynchronize a replaced host."""
+    return to_step

@@ -1,0 +1,37 @@
+from .compression import (
+    compress_error_feedback,
+    dequantize_int8,
+    dequantize_tree,
+    quantize_int8,
+    quantize_tree,
+)
+from .fault_tolerance import HeartbeatRegistry, StepWatchdog, plan_remesh
+from .sharding import (
+    activation_sharding_scope,
+    batch_axes,
+    batch_shardings,
+    cache_shardings,
+    constrain_activation,
+    param_shardings,
+    replicated,
+    spec_for_param,
+)
+
+__all__ = [
+    "HeartbeatRegistry",
+    "StepWatchdog",
+    "activation_sharding_scope",
+    "batch_axes",
+    "batch_shardings",
+    "cache_shardings",
+    "compress_error_feedback",
+    "constrain_activation",
+    "dequantize_int8",
+    "dequantize_tree",
+    "param_shardings",
+    "plan_remesh",
+    "quantize_int8",
+    "quantize_tree",
+    "replicated",
+    "spec_for_param",
+]

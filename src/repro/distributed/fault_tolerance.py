@@ -1,0 +1,93 @@
+"""Fault tolerance & straggler mitigation (DESIGN.md §6).
+
+What is real here (unit-tested, CPU-runnable):
+  * `StepWatchdog` — per-step wall-clock watchdog with EWMA baseline; flags
+    stragglers (steps slower than `threshold` x the EWMA) and invokes a
+    callback (on a real fleet: trigger checkpoint + spare substitution; in
+    examples: log + optional early checkpoint).
+  * `HeartbeatRegistry` — host heartbeat table with expiry, the decision
+    input for elastic re-meshing.
+  * `plan_remesh` — given surviving host count, choose the largest viable
+    (data, model) mesh <= survivors and report the reshard plan; combined
+    with topology-independent checkpoints (checkpoint/store.py) this is the
+    restart path after a node failure.
+
+What is necessarily simulated on one CPU host: actual process loss and ICI
+re-routing. The seams (callbacks, registry, plan) are the production API.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+
+class StepWatchdog:
+    """EWMA step-time watchdog: `observe(dt)` returns True when the step is
+    a straggler (dt > threshold * ewma after warmup)."""
+
+    def __init__(self, threshold: float = 2.0, alpha: float = 0.1, warmup: int = 5,
+                 on_straggler: Optional[Callable[[int, float, float], None]] = None):
+        self.threshold = threshold
+        self.alpha = alpha
+        self.warmup = warmup
+        self.on_straggler = on_straggler
+        self.ewma: Optional[float] = None
+        self.count = 0
+        self.stragglers: List[Tuple[int, float]] = []
+
+    def observe(self, dt: float) -> bool:
+        self.count += 1
+        if self.ewma is None:
+            self.ewma = dt
+            return False
+        is_straggler = self.count > self.warmup and dt > self.threshold * self.ewma
+        if is_straggler:
+            self.stragglers.append((self.count, dt))
+            if self.on_straggler:
+                self.on_straggler(self.count, dt, self.ewma)
+            # do NOT fold stragglers into the baseline
+        else:
+            self.ewma = (1 - self.alpha) * self.ewma + self.alpha * dt
+        return is_straggler
+
+
+@dataclass
+class HeartbeatRegistry:
+    """Host liveness table (on a fleet: fed by a side channel / GCS)."""
+
+    timeout: float = 60.0
+    last_seen: Dict[int, float] = field(default_factory=dict)
+
+    def beat(self, host_id: int, now: Optional[float] = None) -> None:
+        self.last_seen[host_id] = time.time() if now is None else now
+
+    def alive(self, now: Optional[float] = None) -> List[int]:
+        now = time.time() if now is None else now
+        return sorted(h for h, t in self.last_seen.items() if now - t < self.timeout)
+
+    def dead(self, now: Optional[float] = None) -> List[int]:
+        now = time.time() if now is None else now
+        return sorted(h for h, t in self.last_seen.items() if now - t >= self.timeout)
+
+
+def plan_remesh(n_hosts_alive: int, chips_per_host: int = 4,
+                model_parallelism: int = 16) -> Optional[dict]:
+    """Largest viable (data, model) mesh from the surviving chips. Model
+    parallelism is kept (weights must fit); data parallelism shrinks to the
+    largest power-of-two of remaining chips / model. Returns None if even
+    one model replica no longer fits."""
+    chips = n_hosts_alive * chips_per_host
+    if chips < model_parallelism:
+        return None
+    data = 1
+    while data * 2 * model_parallelism <= chips:
+        data *= 2
+    return {
+        "mesh_shape": (data, model_parallelism),
+        "axes": ("data", "model"),
+        "chips_used": data * model_parallelism,
+        "chips_idle": chips - data * model_parallelism,
+        "action": "restore latest checkpoint with new shardings "
+                  "(checkpoint.restore(..., shardings=param_shardings(params, new_mesh)))",
+    }

@@ -1,0 +1,115 @@
+"""repro.distributions — a jnp-native distributions library (paper §3).
+
+Mirrors the torch.distributions API the Pyro authors upstreamed: shape
+semantics (batch_shape / event_shape), constraints, transforms, and KL
+registry, rebuilt functionally so every object composes with jit/pjit/vmap.
+"""
+from . import constraints, transforms
+from .continuous import (
+    Beta,
+    Cauchy,
+    Chi2,
+    Dirichlet,
+    Exponential,
+    Gamma,
+    HalfCauchy,
+    HalfNormal,
+    InverseGamma,
+    Laplace,
+    Logistic,
+    LogNormal,
+    LowRankMultivariateNormal,
+    MultivariateNormal,
+    Normal,
+    StudentT,
+    Uniform,
+    VonMises,
+    Weibull,
+)
+from .discrete import (
+    Bernoulli,
+    Binomial,
+    Categorical,
+    Geometric,
+    Multinomial,
+    NegativeBinomial,
+    OneHotCategorical,
+    Poisson,
+)
+from .distribution import Distribution
+from .kl import kl_divergence, register_kl
+from .transforms import (
+    AffineTransform,
+    ComposeTransform,
+    ExpTransform,
+    IdentityTransform,
+    IndependentTransform,
+    InverseAutoregressiveTransform,
+    LowerCholeskyTransform,
+    PermuteTransform,
+    PowerTransform,
+    SigmoidTransform,
+    SoftplusTransform,
+    StickBreakingTransform,
+    TanhTransform,
+    Transform,
+    biject_to,
+    init_made_params,
+    made_apply,
+    made_masks,
+)
+from .wrappers import (
+    Delta,
+    ExpandedDistribution,
+    Independent,
+    MaskedDistribution,
+    MixtureSameFamily,
+    TransformedDistribution,
+    Unit,
+)
+
+__all__ = [
+    "constraints",
+    "transforms",
+    "Distribution",
+    "kl_divergence",
+    "register_kl",
+    "biject_to",
+    # continuous
+    "Beta",
+    "Cauchy",
+    "Chi2",
+    "Dirichlet",
+    "Exponential",
+    "Gamma",
+    "HalfCauchy",
+    "HalfNormal",
+    "InverseGamma",
+    "Laplace",
+    "Logistic",
+    "LogNormal",
+    "LowRankMultivariateNormal",
+    "MultivariateNormal",
+    "Normal",
+    "StudentT",
+    "Uniform",
+    "VonMises",
+    "Weibull",
+    # discrete
+    "Bernoulli",
+    "Binomial",
+    "Categorical",
+    "Geometric",
+    "Multinomial",
+    "NegativeBinomial",
+    "OneHotCategorical",
+    "Poisson",
+    # wrappers
+    "Delta",
+    "ExpandedDistribution",
+    "Independent",
+    "MaskedDistribution",
+    "MixtureSameFamily",
+    "TransformedDistribution",
+    "Unit",
+]

@@ -1,0 +1,160 @@
+"""Support constraints, mirroring torch.distributions.constraints (paper §3).
+
+Each constraint knows how to `check` a value; `biject_to` (in transforms.py)
+maps a constraint to a bijector from unconstrained space — the mechanism
+autoguides and HMC use to work in R^n.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+class Constraint:
+    is_discrete = False
+    event_dim = 0
+
+    def __call__(self, x):
+        return self.check(x)
+
+    def check(self, value):
+        raise NotImplementedError
+
+    def __repr__(self):
+        return self.__class__.__name__[1:].strip("_")
+
+
+class _Real(Constraint):
+    def check(self, value):
+        return jnp.isfinite(value)
+
+
+class _RealVector(Constraint):
+    event_dim = 1
+
+    def check(self, value):
+        return jnp.all(jnp.isfinite(value), axis=-1)
+
+
+class _Positive(Constraint):
+    def check(self, value):
+        return value > 0
+
+
+class _Nonnegative(Constraint):
+    def check(self, value):
+        return value >= 0
+
+
+class _UnitInterval(Constraint):
+    def check(self, value):
+        return (value >= 0) & (value <= 1)
+
+
+class _Interval(Constraint):
+    def __init__(self, lower, upper):
+        self.lower_bound = lower
+        self.upper_bound = upper
+
+    def check(self, value):
+        return (value >= self.lower_bound) & (value <= self.upper_bound)
+
+    def __repr__(self):
+        return f"interval(lower_bound={self.lower_bound}, upper_bound={self.upper_bound})"
+
+
+class _GreaterThan(Constraint):
+    def __init__(self, lower):
+        self.lower_bound = lower
+
+    def check(self, value):
+        return value > self.lower_bound
+
+
+class _LessThan(Constraint):
+    def __init__(self, upper):
+        self.upper_bound = upper
+
+    def check(self, value):
+        return value < self.upper_bound
+
+
+class _Boolean(Constraint):
+    is_discrete = True
+
+    def check(self, value):
+        return (value == 0) | (value == 1)
+
+
+class _IntegerInterval(Constraint):
+    is_discrete = True
+
+    def __init__(self, lower, upper):
+        self.lower_bound = lower
+        self.upper_bound = upper
+
+    def check(self, value):
+        return (value >= self.lower_bound) & (value <= self.upper_bound) & (value == jnp.floor(value))
+
+
+class _NonnegativeInteger(Constraint):
+    is_discrete = True
+
+    def check(self, value):
+        return (value >= 0) & (value == jnp.floor(value))
+
+
+class _Simplex(Constraint):
+    event_dim = 1
+
+    def check(self, value):
+        return jnp.all(value >= 0, axis=-1) & (jnp.abs(value.sum(-1) - 1.0) < 1e-6)
+
+
+class _LowerCholesky(Constraint):
+    event_dim = 2
+
+    def check(self, value):
+        tril = jnp.tril(value)
+        lower = jnp.all((tril == value).reshape(value.shape[:-2] + (-1,)), axis=-1)
+        positive_diag = jnp.all(jnp.diagonal(value, axis1=-2, axis2=-1) > 0, axis=-1)
+        return lower & positive_diag
+
+
+class _PositiveDefinite(Constraint):
+    event_dim = 2
+
+    def check(self, value):
+        symmetric = jnp.all(
+            jnp.isclose(value, jnp.swapaxes(value, -1, -2)).reshape(value.shape[:-2] + (-1,)),
+            axis=-1,
+        )
+        eigvals = jnp.linalg.eigvalsh(value)
+        return symmetric & jnp.all(eigvals > 0, axis=-1)
+
+
+class _Circular(Constraint):
+    def check(self, value):
+        return (value >= -jnp.pi) & (value <= jnp.pi)
+
+
+class _Dependent(Constraint):
+    def check(self, value):
+        raise ValueError("Cannot check a dependent constraint")
+
+
+real = _Real()
+real_vector = _RealVector()
+positive = _Positive()
+nonnegative = _Nonnegative()
+unit_interval = _UnitInterval()
+interval = _Interval
+greater_than = _GreaterThan
+less_than = _LessThan
+boolean = _Boolean()
+integer_interval = _IntegerInterval
+nonnegative_integer = _NonnegativeInteger()
+simplex = _Simplex()
+lower_cholesky = _LowerCholesky()
+positive_definite = _PositiveDefinite()
+circular = _Circular()
+dependent = _Dependent()

@@ -1,0 +1,506 @@
+"""Continuous distributions."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.scipy import special as jsp
+
+from . import constraints
+from .distribution import Distribution
+from .util import broadcast_shapes, promote_shapes, von_mises_centered
+
+
+class Normal(Distribution):
+    arg_constraints = {"loc": constraints.real, "scale": constraints.positive}
+    support = constraints.real
+    has_rsample = True
+
+    def __init__(self, loc=0.0, scale=1.0):
+        self.loc, self.scale = promote_shapes(loc, scale)
+        batch_shape = broadcast_shapes(jnp.shape(loc), jnp.shape(scale))
+        super().__init__(batch_shape)
+
+    def sample(self, key, sample_shape=()):
+        eps = jax.random.normal(key, self.shape(sample_shape), jnp.result_type(self.loc, float))
+        return self.loc + self.scale * eps
+
+    def log_prob(self, value):
+        var = self.scale ** 2
+        log_scale = jnp.log(self.scale)
+        return -((value - self.loc) ** 2) / (2 * var) - log_scale - 0.5 * math.log(2 * math.pi)
+
+    @property
+    def mean(self):
+        return jnp.broadcast_to(self.loc, self.batch_shape)
+
+    @property
+    def variance(self):
+        return jnp.broadcast_to(self.scale ** 2, self.batch_shape)
+
+    def entropy(self):
+        return jnp.broadcast_to(0.5 + 0.5 * math.log(2 * math.pi) + jnp.log(self.scale), self.batch_shape)
+
+    def cdf(self, value):
+        return 0.5 * (1 + jsp.erf((value - self.loc) / (self.scale * math.sqrt(2))))
+
+    def icdf(self, q):
+        return self.loc + self.scale * math.sqrt(2) * jsp.erfinv(2 * q - 1)
+
+
+class LogNormal(Distribution):
+    arg_constraints = {"loc": constraints.real, "scale": constraints.positive}
+    support = constraints.positive
+    has_rsample = True
+
+    def __init__(self, loc=0.0, scale=1.0):
+        self.loc, self.scale = promote_shapes(loc, scale)
+        super().__init__(broadcast_shapes(jnp.shape(loc), jnp.shape(scale)))
+
+    def sample(self, key, sample_shape=()):
+        return jnp.exp(Normal(self.loc, self.scale).sample(key, sample_shape))
+
+    def log_prob(self, value):
+        return Normal(self.loc, self.scale).log_prob(jnp.log(value)) - jnp.log(value)
+
+    @property
+    def mean(self):
+        return jnp.exp(self.loc + self.scale ** 2 / 2)
+
+    @property
+    def variance(self):
+        return (jnp.exp(self.scale ** 2) - 1) * jnp.exp(2 * self.loc + self.scale ** 2)
+
+
+class Uniform(Distribution):
+    has_rsample = True
+
+    def __init__(self, low=0.0, high=1.0):
+        self.low, self.high = promote_shapes(low, high)
+        super().__init__(broadcast_shapes(jnp.shape(low), jnp.shape(high)))
+        self.support = constraints.interval(low, high)
+
+    arg_constraints = {"low": constraints.real, "high": constraints.real}
+
+    def sample(self, key, sample_shape=()):
+        u = jax.random.uniform(key, self.shape(sample_shape))
+        return self.low + (self.high - self.low) * u
+
+    def log_prob(self, value):
+        inside = (value >= self.low) & (value <= self.high)
+        lp = -jnp.log(self.high - self.low)
+        return jnp.where(inside, lp, -jnp.inf)
+
+    @property
+    def mean(self):
+        return (self.low + self.high) / 2
+
+    @property
+    def variance(self):
+        return (self.high - self.low) ** 2 / 12
+
+
+class Exponential(Distribution):
+    arg_constraints = {"rate": constraints.positive}
+    support = constraints.positive
+    has_rsample = True
+
+    def __init__(self, rate=1.0):
+        self.rate = rate
+        super().__init__(jnp.shape(rate))
+
+    def sample(self, key, sample_shape=()):
+        return jax.random.exponential(key, self.shape(sample_shape)) / self.rate
+
+    def log_prob(self, value):
+        return jnp.log(self.rate) - self.rate * value
+
+    @property
+    def mean(self):
+        return 1.0 / self.rate
+
+    @property
+    def variance(self):
+        return 1.0 / self.rate ** 2
+
+
+class Laplace(Distribution):
+    arg_constraints = {"loc": constraints.real, "scale": constraints.positive}
+    support = constraints.real
+    has_rsample = True
+
+    def __init__(self, loc=0.0, scale=1.0):
+        self.loc, self.scale = promote_shapes(loc, scale)
+        super().__init__(broadcast_shapes(jnp.shape(loc), jnp.shape(scale)))
+
+    def sample(self, key, sample_shape=()):
+        u = jax.random.uniform(key, self.shape(sample_shape), minval=-0.5 + 1e-7, maxval=0.5)
+        return self.loc - self.scale * jnp.sign(u) * jnp.log1p(-2 * jnp.abs(u))
+
+    def log_prob(self, value):
+        return -jnp.abs(value - self.loc) / self.scale - jnp.log(2 * self.scale)
+
+    @property
+    def mean(self):
+        return jnp.broadcast_to(self.loc, self.batch_shape)
+
+    @property
+    def variance(self):
+        return jnp.broadcast_to(2 * self.scale ** 2, self.batch_shape)
+
+
+class Cauchy(Distribution):
+    arg_constraints = {"loc": constraints.real, "scale": constraints.positive}
+    support = constraints.real
+    has_rsample = True
+
+    def __init__(self, loc=0.0, scale=1.0):
+        self.loc, self.scale = promote_shapes(loc, scale)
+        super().__init__(broadcast_shapes(jnp.shape(loc), jnp.shape(scale)))
+
+    def sample(self, key, sample_shape=()):
+        u = jax.random.uniform(key, self.shape(sample_shape), minval=1e-7, maxval=1 - 1e-7)
+        return self.loc + self.scale * jnp.tan(jnp.pi * (u - 0.5))
+
+    def log_prob(self, value):
+        z = (value - self.loc) / self.scale
+        return -math.log(math.pi) - jnp.log(self.scale) - jnp.log1p(z ** 2)
+
+
+class HalfNormal(Distribution):
+    arg_constraints = {"scale": constraints.positive}
+    support = constraints.positive
+    has_rsample = True
+
+    def __init__(self, scale=1.0):
+        self.scale = scale
+        super().__init__(jnp.shape(scale))
+
+    def sample(self, key, sample_shape=()):
+        return jnp.abs(Normal(0.0, self.scale).sample(key, sample_shape))
+
+    def log_prob(self, value):
+        return Normal(0.0, self.scale).log_prob(value) + math.log(2.0)
+
+    @property
+    def mean(self):
+        return self.scale * math.sqrt(2 / math.pi)
+
+    @property
+    def variance(self):
+        return self.scale ** 2 * (1 - 2 / math.pi)
+
+
+class HalfCauchy(Distribution):
+    arg_constraints = {"scale": constraints.positive}
+    support = constraints.positive
+    has_rsample = True
+
+    def __init__(self, scale=1.0):
+        self.scale = scale
+        super().__init__(jnp.shape(scale))
+
+    def sample(self, key, sample_shape=()):
+        return jnp.abs(Cauchy(0.0, self.scale).sample(key, sample_shape))
+
+    def log_prob(self, value):
+        return Cauchy(0.0, self.scale).log_prob(value) + math.log(2.0)
+
+
+class StudentT(Distribution):
+    arg_constraints = {
+        "df": constraints.positive,
+        "loc": constraints.real,
+        "scale": constraints.positive,
+    }
+    support = constraints.real
+    has_rsample = True
+
+    def __init__(self, df, loc=0.0, scale=1.0):
+        self.df, self.loc, self.scale = promote_shapes(df, loc, scale)
+        super().__init__(broadcast_shapes(jnp.shape(df), jnp.shape(loc), jnp.shape(scale)))
+
+    def sample(self, key, sample_shape=()):
+        key_n, key_g = jax.random.split(key)
+        shape = self.shape(sample_shape)
+        z = jax.random.normal(key_n, shape)
+        g = jax.random.gamma(key_g, jnp.broadcast_to(self.df / 2, shape))
+        return self.loc + self.scale * z * jnp.sqrt(self.df / (2 * g))
+
+    def log_prob(self, value):
+        z = (value - self.loc) / self.scale
+        lp = (
+            jsp.gammaln((self.df + 1) / 2)
+            - jsp.gammaln(self.df / 2)
+            - 0.5 * jnp.log(self.df * math.pi)
+            - jnp.log(self.scale)
+            - (self.df + 1) / 2 * jnp.log1p(z ** 2 / self.df)
+        )
+        return lp
+
+
+class Gamma(Distribution):
+    arg_constraints = {"concentration": constraints.positive, "rate": constraints.positive}
+    support = constraints.positive
+    has_rsample = True  # jax.random.gamma is reparametrized (implicit grads)
+
+    def __init__(self, concentration, rate=1.0):
+        self.concentration, self.rate = promote_shapes(concentration, rate)
+        super().__init__(broadcast_shapes(jnp.shape(concentration), jnp.shape(rate)))
+
+    def sample(self, key, sample_shape=()):
+        shape = self.shape(sample_shape)
+        return jax.random.gamma(key, jnp.broadcast_to(self.concentration, shape)) / self.rate
+
+    def log_prob(self, value):
+        return (
+            self.concentration * jnp.log(self.rate)
+            + (self.concentration - 1) * jnp.log(value)
+            - self.rate * value
+            - jsp.gammaln(self.concentration)
+        )
+
+    @property
+    def mean(self):
+        return self.concentration / self.rate
+
+    @property
+    def variance(self):
+        return self.concentration / self.rate ** 2
+
+
+class Chi2(Gamma):
+    def __init__(self, df):
+        self.df = df
+        super().__init__(df / 2, 0.5)
+
+
+class InverseGamma(Distribution):
+    arg_constraints = {"concentration": constraints.positive, "rate": constraints.positive}
+    support = constraints.positive
+    has_rsample = True
+
+    def __init__(self, concentration, rate=1.0):
+        self.concentration, self.rate = promote_shapes(concentration, rate)
+        super().__init__(broadcast_shapes(jnp.shape(concentration), jnp.shape(rate)))
+
+    def sample(self, key, sample_shape=()):
+        return 1.0 / Gamma(self.concentration, self.rate).sample(key, sample_shape)
+
+    def log_prob(self, value):
+        return Gamma(self.concentration, self.rate).log_prob(1 / value) - 2 * jnp.log(value)
+
+
+class Beta(Distribution):
+    arg_constraints = {
+        "concentration1": constraints.positive,
+        "concentration0": constraints.positive,
+    }
+    support = constraints.unit_interval
+    has_rsample = True
+
+    def __init__(self, concentration1, concentration0):
+        self.concentration1, self.concentration0 = promote_shapes(concentration1, concentration0)
+        super().__init__(
+            broadcast_shapes(jnp.shape(concentration1), jnp.shape(concentration0))
+        )
+
+    def sample(self, key, sample_shape=()):
+        shape = self.shape(sample_shape)
+        k1, k2 = jax.random.split(key)
+        g1 = jax.random.gamma(k1, jnp.broadcast_to(self.concentration1, shape))
+        g2 = jax.random.gamma(k2, jnp.broadcast_to(self.concentration0, shape))
+        return g1 / (g1 + g2)
+
+    def log_prob(self, value):
+        a, b = self.concentration1, self.concentration0
+        return (
+            (a - 1) * jnp.log(value)
+            + (b - 1) * jnp.log1p(-value)
+            + jsp.gammaln(a + b)
+            - jsp.gammaln(a)
+            - jsp.gammaln(b)
+        )
+
+    @property
+    def mean(self):
+        return self.concentration1 / (self.concentration1 + self.concentration0)
+
+    @property
+    def variance(self):
+        a, b = self.concentration1, self.concentration0
+        return a * b / ((a + b) ** 2 * (a + b + 1))
+
+
+class Dirichlet(Distribution):
+    arg_constraints = {"concentration": constraints.positive}
+    support = constraints.simplex
+    has_rsample = True
+
+    def __init__(self, concentration):
+        self.concentration = jnp.asarray(concentration)
+        super().__init__(self.concentration.shape[:-1], self.concentration.shape[-1:])
+
+    def sample(self, key, sample_shape=()):
+        shape = tuple(sample_shape) + self.batch_shape + self.event_shape
+        g = jax.random.gamma(key, jnp.broadcast_to(self.concentration, shape))
+        return g / g.sum(-1, keepdims=True)
+
+    def log_prob(self, value):
+        a = self.concentration
+        return (
+            jnp.sum((a - 1) * jnp.log(value), -1)
+            + jsp.gammaln(a.sum(-1))
+            - jnp.sum(jsp.gammaln(a), -1)
+        )
+
+    @property
+    def mean(self):
+        return self.concentration / self.concentration.sum(-1, keepdims=True)
+
+
+class MultivariateNormal(Distribution):
+    arg_constraints = {"loc": constraints.real_vector}
+    support = constraints.real_vector
+    has_rsample = True
+
+    def __init__(self, loc, covariance_matrix=None, scale_tril=None):
+        loc = jnp.asarray(loc)
+        if scale_tril is None:
+            if covariance_matrix is None:
+                raise ValueError("need covariance_matrix or scale_tril")
+            scale_tril = jnp.linalg.cholesky(covariance_matrix)
+        self.loc = loc
+        self.scale_tril = scale_tril
+        batch_shape = broadcast_shapes(loc.shape[:-1], scale_tril.shape[:-2])
+        super().__init__(batch_shape, loc.shape[-1:])
+
+    def sample(self, key, sample_shape=()):
+        shape = self.shape(sample_shape)
+        eps = jax.random.normal(key, shape)
+        return self.loc + jnp.einsum("...ij,...j->...i", self.scale_tril, eps)
+
+    def log_prob(self, value):
+        d = value.shape[-1]
+        diff = value - self.loc
+        y = jax.scipy.linalg.solve_triangular(
+            self.scale_tril, diff[..., None], lower=True
+        )[..., 0]
+        half_log_det = jnp.sum(jnp.log(jnp.diagonal(self.scale_tril, axis1=-2, axis2=-1)), -1)
+        return -0.5 * jnp.sum(y ** 2, -1) - half_log_det - 0.5 * d * math.log(2 * math.pi)
+
+    @property
+    def mean(self):
+        return jnp.broadcast_to(self.loc, self.batch_shape + self.event_shape)
+
+    @property
+    def covariance_matrix(self):
+        return self.scale_tril @ jnp.swapaxes(self.scale_tril, -1, -2)
+
+
+class LowRankMultivariateNormal(Distribution):
+    """MVN with covariance = cov_factor @ cov_factor^T + diag(cov_diag)."""
+
+    support = constraints.real_vector
+    has_rsample = True
+
+    def __init__(self, loc, cov_factor, cov_diag):
+        self.loc = jnp.asarray(loc)
+        self.cov_factor = jnp.asarray(cov_factor)  # (..., D, K)
+        self.cov_diag = jnp.asarray(cov_diag)  # (..., D)
+        super().__init__(self.loc.shape[:-1], self.loc.shape[-1:])
+
+    def sample(self, key, sample_shape=()):
+        k1, k2 = jax.random.split(key)
+        k_dim = self.cov_factor.shape[-1]
+        shape = tuple(sample_shape) + self.batch_shape
+        eps_w = jax.random.normal(k1, shape + (k_dim,))
+        eps_d = jax.random.normal(k2, shape + self.event_shape)
+        return (
+            self.loc
+            + jnp.einsum("...dk,...k->...d", self.cov_factor, eps_w)
+            + jnp.sqrt(self.cov_diag) * eps_d
+        )
+
+    def log_prob(self, value):
+        # Woodbury + matrix determinant lemma
+        d = self.loc.shape[-1]
+        w = self.cov_factor
+        k_dim = w.shape[-1]
+        diff = value - self.loc
+        dinv = 1.0 / self.cov_diag
+        wt_dinv = jnp.swapaxes(w, -1, -2) * dinv[..., None, :]
+        capacitance = jnp.eye(k_dim) + wt_dinv @ w
+        chol = jnp.linalg.cholesky(capacitance)
+        # mahalanobis via woodbury
+        wt_dinv_diff = jnp.einsum("...kd,...d->...k", wt_dinv, diff)
+        y = jax.scipy.linalg.solve_triangular(chol, wt_dinv_diff[..., None], lower=True)[..., 0]
+        maha = jnp.sum(diff ** 2 * dinv, -1) - jnp.sum(y ** 2, -1)
+        log_det = (
+            jnp.sum(jnp.log(self.cov_diag), -1)
+            + 2 * jnp.sum(jnp.log(jnp.diagonal(chol, axis1=-2, axis2=-1)), -1)
+        )
+        return -0.5 * (d * math.log(2 * math.pi) + log_det + maha)
+
+
+class VonMises(Distribution):
+    arg_constraints = {"loc": constraints.real, "concentration": constraints.positive}
+    support = constraints.circular
+
+    def __init__(self, loc, concentration):
+        self.loc, self.concentration = promote_shapes(loc, concentration)
+        super().__init__(broadcast_shapes(jnp.shape(loc), jnp.shape(concentration)))
+
+    def sample(self, key, sample_shape=()):
+        shape = self.shape(sample_shape)
+        centered = von_mises_centered(key, self.concentration, shape)
+        return (centered + self.loc + jnp.pi) % (2 * jnp.pi) - jnp.pi
+
+    def log_prob(self, value):
+        return (
+            self.concentration * jnp.cos(value - self.loc)
+            - math.log(2 * math.pi)
+            - jnp.log(jsp.i0e(self.concentration))
+            - self.concentration
+        )
+
+
+class Logistic(Distribution):
+    arg_constraints = {"loc": constraints.real, "scale": constraints.positive}
+    support = constraints.real
+    has_rsample = True
+
+    def __init__(self, loc=0.0, scale=1.0):
+        self.loc, self.scale = promote_shapes(loc, scale)
+        super().__init__(broadcast_shapes(jnp.shape(loc), jnp.shape(scale)))
+
+    def sample(self, key, sample_shape=()):
+        u = jax.random.uniform(key, self.shape(sample_shape), minval=1e-7, maxval=1 - 1e-7)
+        return self.loc + self.scale * (jnp.log(u) - jnp.log1p(-u))
+
+    def log_prob(self, value):
+        z = (value - self.loc) / self.scale
+        return -z - 2 * jax.nn.softplus(-z) - jnp.log(self.scale)
+
+
+class Weibull(Distribution):
+    arg_constraints = {"scale": constraints.positive, "concentration": constraints.positive}
+    support = constraints.positive
+    has_rsample = True
+
+    def __init__(self, scale, concentration):
+        self.scale, self.concentration = promote_shapes(scale, concentration)
+        super().__init__(broadcast_shapes(jnp.shape(scale), jnp.shape(concentration)))
+
+    def sample(self, key, sample_shape=()):
+        u = jax.random.uniform(key, self.shape(sample_shape), minval=1e-7, maxval=1 - 1e-7)
+        return self.scale * (-jnp.log1p(-u)) ** (1 / self.concentration)
+
+    def log_prob(self, value):
+        k = self.concentration
+        return (
+            jnp.log(k / self.scale)
+            + (k - 1) * (jnp.log(value) - jnp.log(self.scale))
+            - (value / self.scale) ** k
+        )

@@ -1,0 +1,300 @@
+"""Discrete distributions."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.scipy import special as jsp
+
+from . import constraints
+from .distribution import Distribution
+from .util import (
+    binary_cross_entropy_with_logits,
+    broadcast_shapes,
+    clamp_probs,
+    lazy_property,
+    logits_to_probs,
+    probs_to_logits,
+    promote_shapes,
+)
+
+
+class Bernoulli(Distribution):
+    support = constraints.boolean
+    is_discrete = True
+
+    def __init__(self, probs=None, logits=None):
+        if (probs is None) == (logits is None):
+            raise ValueError("pass exactly one of probs / logits")
+        self._probs = probs
+        self._logits = logits
+        shape = jnp.shape(probs if probs is not None else logits)
+        super().__init__(shape)
+
+    @lazy_property
+    def probs(self):
+        return self._probs if self._probs is not None else logits_to_probs(self._logits, True)
+
+    @lazy_property
+    def logits(self):
+        return self._logits if self._logits is not None else probs_to_logits(self._probs, True)
+
+    def sample(self, key, sample_shape=()):
+        return jax.random.bernoulli(key, self.probs, self.shape(sample_shape)).astype(jnp.float32)
+
+    def log_prob(self, value):
+        return -binary_cross_entropy_with_logits(self.logits, value)
+
+    @property
+    def mean(self):
+        return self.probs
+
+    @property
+    def variance(self):
+        return self.probs * (1 - self.probs)
+
+    def entropy(self):
+        p = clamp_probs(self.probs)
+        return -(p * jnp.log(p) + (1 - p) * jnp.log1p(-p))
+
+    def enumerate_support(self):
+        return jnp.arange(2.0).reshape((2,) + (1,) * len(self.batch_shape))
+
+
+class Categorical(Distribution):
+    is_discrete = True
+
+    def __init__(self, probs=None, logits=None):
+        if (probs is None) == (logits is None):
+            raise ValueError("pass exactly one of probs / logits")
+        self._probs = probs
+        self._logits = logits
+        shape = jnp.shape(probs if probs is not None else logits)
+        self.num_categories = shape[-1]
+        super().__init__(shape[:-1])
+        self.support = constraints.integer_interval(0, self.num_categories - 1)
+
+    @lazy_property
+    def probs(self):
+        return self._probs if self._probs is not None else logits_to_probs(self._logits)
+
+    @lazy_property
+    def logits(self):
+        return self._logits if self._logits is not None else probs_to_logits(self._probs)
+
+    def sample(self, key, sample_shape=()):
+        shape = self.shape(sample_shape)
+        return jax.random.categorical(key, self.logits, shape=shape)
+
+    def log_prob(self, value):
+        # normalized logits gathered at value — THE hot path for LM observe
+        # sites; the Pallas kernel in kernels/categorical_logprob fuses this.
+        logits = self.logits
+        norm = jsp.logsumexp(logits, axis=-1)
+        value = jnp.asarray(value, jnp.int32)
+        picked = jnp.take_along_axis(logits, value[..., None], axis=-1)[..., 0]
+        return picked - norm
+
+    @property
+    def mean(self):
+        return jnp.sum(self.probs * jnp.arange(self.num_categories), -1)
+
+    def entropy(self):
+        logp = jax.nn.log_softmax(self.logits, -1)
+        return -jnp.sum(jnp.exp(logp) * logp, -1)
+
+    def enumerate_support(self):
+        return jnp.arange(self.num_categories).reshape(
+            (self.num_categories,) + (1,) * len(self.batch_shape)
+        )
+
+
+class OneHotCategorical(Categorical):
+    def __init__(self, probs=None, logits=None):
+        super().__init__(probs=probs, logits=logits)
+        self._event_shape = (self.num_categories,)
+        self.support = constraints.simplex  # loosely: one-hot vectors
+
+    def sample(self, key, sample_shape=()):
+        idx = jax.random.categorical(
+            key, self.logits, shape=tuple(sample_shape) + self.batch_shape
+        )
+        return jax.nn.one_hot(idx, self.num_categories)
+
+    def log_prob(self, value):
+        logp = jax.nn.log_softmax(self.logits, -1)
+        return jnp.sum(logp * value, -1)
+
+
+class Binomial(Distribution):
+    is_discrete = True
+
+    def __init__(self, total_count=1, probs=None, logits=None):
+        if (probs is None) == (logits is None):
+            raise ValueError("pass exactly one of probs / logits")
+        self._probs = probs
+        self._logits = logits
+        self.total_count = total_count
+        shape = broadcast_shapes(
+            jnp.shape(total_count), jnp.shape(probs if probs is not None else logits)
+        )
+        super().__init__(shape)
+        self.support = constraints.integer_interval(0, total_count)
+
+    @lazy_property
+    def probs(self):
+        return self._probs if self._probs is not None else logits_to_probs(self._logits, True)
+
+    @lazy_property
+    def logits(self):
+        return self._logits if self._logits is not None else probs_to_logits(self._probs, True)
+
+    def sample(self, key, sample_shape=()):
+        shape = self.shape(sample_shape)
+        n_max = int(jnp.max(jnp.asarray(self.total_count)))
+        p = jnp.broadcast_to(self.probs, shape)
+        counts = jnp.arange(n_max) < jnp.expand_dims(jnp.broadcast_to(jnp.asarray(self.total_count), shape), -1)
+        draws = jax.random.uniform(key, shape + (n_max,)) < p[..., None]
+        return jnp.sum(draws & counts, -1).astype(jnp.float32)
+
+    def log_prob(self, value):
+        n = self.total_count
+        log_binom = jsp.gammaln(n + 1) - jsp.gammaln(value + 1) - jsp.gammaln(n - value + 1)
+        return (
+            log_binom
+            + value * jax.nn.log_sigmoid(self.logits)
+            + (n - value) * jax.nn.log_sigmoid(-self.logits)
+        )
+
+    @property
+    def mean(self):
+        return self.total_count * self.probs
+
+    @property
+    def variance(self):
+        return self.total_count * self.probs * (1 - self.probs)
+
+
+class Multinomial(Distribution):
+    is_discrete = True
+
+    def __init__(self, total_count=1, probs=None, logits=None):
+        if (probs is None) == (logits is None):
+            raise ValueError("pass exactly one of probs / logits")
+        self._probs = probs
+        self._logits = logits
+        self.total_count = total_count
+        shape = jnp.shape(probs if probs is not None else logits)
+        super().__init__(shape[:-1], shape[-1:])
+
+    @lazy_property
+    def probs(self):
+        return self._probs if self._probs is not None else logits_to_probs(self._logits)
+
+    @lazy_property
+    def logits(self):
+        return self._logits if self._logits is not None else probs_to_logits(self._probs)
+
+    def sample(self, key, sample_shape=()):
+        shape = tuple(sample_shape) + self.batch_shape
+        n = int(self.total_count)
+        idx = jax.random.categorical(key, self.logits, shape=(n,) + shape)
+        k = self.event_shape[0]
+        return jnp.sum(jax.nn.one_hot(idx, k), axis=0)
+
+    def log_prob(self, value):
+        logp = jax.nn.log_softmax(self.logits, -1)
+        log_factorial_n = jsp.gammaln(value.sum(-1) + 1)
+        log_factorial_xs = jsp.gammaln(value + 1).sum(-1)
+        return log_factorial_n - log_factorial_xs + jnp.sum(value * logp, -1)
+
+
+class Poisson(Distribution):
+    arg_constraints = {"rate": constraints.positive}
+    support = constraints.nonnegative_integer
+    is_discrete = True
+
+    def __init__(self, rate):
+        self.rate = rate
+        super().__init__(jnp.shape(rate))
+
+    def sample(self, key, sample_shape=()):
+        return jax.random.poisson(key, self.rate, self.shape(sample_shape)).astype(jnp.float32)
+
+    def log_prob(self, value):
+        return value * jnp.log(self.rate) - self.rate - jsp.gammaln(value + 1)
+
+    @property
+    def mean(self):
+        return self.rate
+
+    @property
+    def variance(self):
+        return self.rate
+
+
+class Geometric(Distribution):
+    support = constraints.nonnegative_integer
+    is_discrete = True
+
+    def __init__(self, probs=None, logits=None):
+        if (probs is None) == (logits is None):
+            raise ValueError("pass exactly one of probs / logits")
+        self._probs = probs
+        self._logits = logits
+        super().__init__(jnp.shape(probs if probs is not None else logits))
+
+    @lazy_property
+    def probs(self):
+        return self._probs if self._probs is not None else logits_to_probs(self._logits, True)
+
+    def sample(self, key, sample_shape=()):
+        u = jax.random.uniform(key, self.shape(sample_shape), minval=1e-7, maxval=1 - 1e-7)
+        p = clamp_probs(self.probs)
+        return jnp.floor(jnp.log1p(-u) / jnp.log1p(-p))
+
+    def log_prob(self, value):
+        p = clamp_probs(self.probs)
+        return value * jnp.log1p(-p) + jnp.log(p)
+
+    @property
+    def mean(self):
+        return (1 - self.probs) / self.probs
+
+
+class NegativeBinomial(Distribution):
+    support = constraints.nonnegative_integer
+    is_discrete = True
+
+    def __init__(self, total_count, probs=None, logits=None):
+        if (probs is None) == (logits is None):
+            raise ValueError("pass exactly one of probs / logits")
+        self.total_count = total_count
+        self._probs = probs
+        self._logits = logits
+        shape = broadcast_shapes(
+            jnp.shape(total_count), jnp.shape(probs if probs is not None else logits)
+        )
+        super().__init__(shape)
+
+    @lazy_property
+    def probs(self):
+        return self._probs if self._probs is not None else logits_to_probs(self._logits, True)
+
+    def sample(self, key, sample_shape=()):
+        k1, k2 = jax.random.split(key)
+        shape = self.shape(sample_shape)
+        p = clamp_probs(jnp.broadcast_to(self.probs, shape))
+        r = jnp.broadcast_to(jnp.asarray(self.total_count, jnp.float32), shape)
+        lam = jax.random.gamma(k1, r) * p / (1 - p)
+        return jax.random.poisson(k2, lam).astype(jnp.float32)
+
+    def log_prob(self, value):
+        r = jnp.asarray(self.total_count, jnp.float32)
+        p = clamp_probs(self.probs)
+        return (
+            jsp.gammaln(value + r)
+            - jsp.gammaln(r)
+            - jsp.gammaln(value + 1)
+            + r * jnp.log1p(-p)
+            + value * jnp.log(p)
+        )

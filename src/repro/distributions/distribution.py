@@ -1,0 +1,115 @@
+"""Distribution base class (the library the Pyro authors upstreamed to their
+substrate — here rebuilt natively on jnp so it composes with jit/pjit/vmap)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import constraints
+from .util import broadcast_shapes, sum_rightmost
+
+
+class Distribution:
+    arg_constraints: dict = {}
+    support: constraints.Constraint = constraints.real
+    has_rsample: bool = False  # reparametrized sampling available
+    is_discrete: bool = False
+
+    def __init__(self, batch_shape: Tuple[int, ...] = (), event_shape: Tuple[int, ...] = ()):
+        self._batch_shape = tuple(batch_shape)
+        self._event_shape = tuple(event_shape)
+
+    # -- shapes ------------------------------------------------------------
+    @property
+    def batch_shape(self) -> Tuple[int, ...]:
+        return self._batch_shape
+
+    @property
+    def event_shape(self) -> Tuple[int, ...]:
+        return self._event_shape
+
+    @property
+    def event_dim(self) -> int:
+        return len(self._event_shape)
+
+    def shape(self, sample_shape=()) -> Tuple[int, ...]:
+        return tuple(sample_shape) + self._batch_shape + self._event_shape
+
+    # -- core API ----------------------------------------------------------
+    def sample(self, key: jax.Array, sample_shape: Tuple[int, ...] = ()) -> jax.Array:
+        raise NotImplementedError
+
+    def rsample(self, key, sample_shape=()):
+        if self.has_rsample:
+            return self.sample(key, sample_shape)
+        raise NotImplementedError(f"{type(self).__name__} has no rsample")
+
+    def log_prob(self, value) -> jax.Array:
+        raise NotImplementedError
+
+    @property
+    def mean(self):
+        raise NotImplementedError
+
+    @property
+    def variance(self):
+        raise NotImplementedError
+
+    def entropy(self):
+        raise NotImplementedError
+
+    def cdf(self, value):
+        raise NotImplementedError
+
+    def icdf(self, value):
+        raise NotImplementedError
+
+    # -- combinators ---------------------------------------------------------
+    def to_event(self, reinterpreted_batch_ndims: Optional[int] = None):
+        from .wrappers import Independent
+
+        if reinterpreted_batch_ndims is None:
+            reinterpreted_batch_ndims = len(self._batch_shape)
+        if reinterpreted_batch_ndims == 0:
+            return self
+        return Independent(self, reinterpreted_batch_ndims)
+
+    def mask(self, mask):
+        from .wrappers import MaskedDistribution
+
+        return MaskedDistribution(self, mask)
+
+    def expand(self, batch_shape):
+        from .wrappers import ExpandedDistribution
+
+        batch_shape = tuple(batch_shape)
+        if batch_shape == self.batch_shape:
+            return self
+        return ExpandedDistribution(self, batch_shape)
+
+    def expand_by(self, sample_shape):
+        return self.expand(tuple(sample_shape) + self.batch_shape)
+
+    # -- SVI helpers -----------------------------------------------------------
+    def score_function_term(self, value):
+        """log_prob used for REINFORCE terms on non-reparam sites."""
+        return self.log_prob(value)
+
+    def sample_with_intermediates(self, key, sample_shape=()):
+        return self.sample(key, sample_shape), []
+
+    def __repr__(self):
+        return f"{type(self).__name__}(batch_shape={self.batch_shape}, event_shape={self.event_shape})"
+
+
+def validate_sample_shape(dist: Distribution, value) -> None:
+    expected = dist.batch_shape + dist.event_shape
+    got = jnp.shape(value)
+    try:
+        broadcast_shapes(got, expected)
+    except ValueError as e:
+        raise ValueError(
+            f"value shape {got} incompatible with distribution shape {expected}"
+        ) from e

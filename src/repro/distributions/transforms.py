@@ -1,0 +1,430 @@
+"""Bijective transforms + the biject_to registry (paper §3: the distributions
+library the Pyro authors upstreamed includes constraints/transforms; IAF is the
+flow used in the Fig-4 DMM experiment).
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from . import constraints
+from .util import clamp_probs, sum_rightmost
+
+
+class Transform:
+    domain: constraints.Constraint = constraints.real
+    codomain: constraints.Constraint = constraints.real
+
+    @property
+    def event_dim(self) -> int:
+        return self.codomain.event_dim
+
+    def __call__(self, x):
+        raise NotImplementedError
+
+    def inv(self, y):
+        raise NotImplementedError
+
+    def log_abs_det_jacobian(self, x, y):
+        raise NotImplementedError
+
+    def forward_shape(self, shape):
+        return shape
+
+    def inverse_shape(self, shape):
+        return shape
+
+
+class IdentityTransform(Transform):
+    def __call__(self, x):
+        return x
+
+    def inv(self, y):
+        return y
+
+    def log_abs_det_jacobian(self, x, y):
+        return jnp.zeros_like(x)
+
+
+class ExpTransform(Transform):
+    codomain = constraints.positive
+
+    def __call__(self, x):
+        return jnp.exp(x)
+
+    def inv(self, y):
+        return jnp.log(y)
+
+    def log_abs_det_jacobian(self, x, y):
+        return x
+
+
+class SoftplusTransform(Transform):
+    codomain = constraints.positive
+
+    def __call__(self, x):
+        return jax.nn.softplus(x)
+
+    def inv(self, y):
+        # log(exp(y) - 1), stable
+        return y + jnp.log(-jnp.expm1(-y))
+
+    def log_abs_det_jacobian(self, x, y):
+        return -jax.nn.softplus(-x)
+
+
+class SigmoidTransform(Transform):
+    codomain = constraints.unit_interval
+
+    def __call__(self, x):
+        return clamp_probs(jax.nn.sigmoid(x))
+
+    def inv(self, y):
+        y = clamp_probs(y)
+        return jnp.log(y) - jnp.log1p(-y)
+
+    def log_abs_det_jacobian(self, x, y):
+        return -jax.nn.softplus(x) - jax.nn.softplus(-x)
+
+
+class TanhTransform(Transform):
+    codomain = constraints.interval(-1.0, 1.0)
+
+    def __call__(self, x):
+        return jnp.tanh(x)
+
+    def inv(self, y):
+        return jnp.arctanh(jnp.clip(y, -1 + 1e-6, 1 - 1e-6))
+
+    def log_abs_det_jacobian(self, x, y):
+        return 2.0 * (jnp.log(2.0) - x - jax.nn.softplus(-2.0 * x))
+
+
+class AffineTransform(Transform):
+    def __init__(self, loc, scale, domain=constraints.real):
+        self.loc = loc
+        self.scale = scale
+        self.domain = domain
+
+    @property
+    def codomain(self):
+        if self.domain is constraints.real:
+            return constraints.real
+        if isinstance(self.domain, constraints._GreaterThan):
+            return constraints.greater_than(self(self.domain.lower_bound))
+        if isinstance(self.domain, constraints._Interval):
+            return constraints.interval(self(self.domain.lower_bound), self(self.domain.upper_bound))
+        return constraints.real
+
+    def __call__(self, x):
+        return self.loc + self.scale * x
+
+    def inv(self, y):
+        return (y - self.loc) / self.scale
+
+    def log_abs_det_jacobian(self, x, y):
+        return jnp.broadcast_to(jnp.log(jnp.abs(self.scale)), jnp.shape(x))
+
+
+class PowerTransform(Transform):
+    domain = constraints.positive
+    codomain = constraints.positive
+
+    def __init__(self, exponent):
+        self.exponent = exponent
+
+    def __call__(self, x):
+        return x ** self.exponent
+
+    def inv(self, y):
+        return y ** (1.0 / self.exponent)
+
+    def log_abs_det_jacobian(self, x, y):
+        return jnp.log(jnp.abs(self.exponent * y / x))
+
+
+class StickBreakingTransform(Transform):
+    """R^{K-1} -> K-simplex via stick breaking (Stan's simplex bijector)."""
+
+    domain = constraints.real_vector
+    codomain = constraints.simplex
+
+    def __call__(self, x):
+        k = x.shape[-1]
+        offset = jnp.log(jnp.arange(k, 0, -1.0))
+        z = jax.nn.sigmoid(x - offset)
+        z_cumprod = jnp.cumprod(1 - z, axis=-1)
+        pad = jnp.ones(x.shape[:-1] + (1,), x.dtype)
+        probs = jnp.concatenate([z, pad], -1) * jnp.concatenate([pad, z_cumprod], -1)
+        return probs
+
+    def inv(self, y):
+        y_crop = y[..., :-1]
+        k = y_crop.shape[-1]
+        offset = jnp.log(jnp.arange(k, 0, -1.0))
+        remainder = jnp.clip(1 - jnp.cumsum(y_crop, axis=-1) + y_crop, 1e-30)
+        z = jnp.clip(y_crop / remainder, 1e-30, 1 - 1e-7)
+        return jnp.log(z) - jnp.log1p(-z) + offset
+
+    def log_abs_det_jacobian(self, x, y):
+        k = x.shape[-1]
+        offset = jnp.log(jnp.arange(k, 0, -1.0))
+        z = jax.nn.sigmoid(x - offset)
+        # |dy/dx| = prod sigma'(x - off) * remainder
+        remainder = jnp.concatenate(
+            [jnp.ones(x.shape[:-1] + (1,), x.dtype), jnp.cumprod(1 - z, axis=-1)[..., :-1]], -1
+        )
+        lad = jnp.log(z) + jnp.log1p(-z) + jnp.log(remainder)
+        return lad.sum(-1)
+
+    def forward_shape(self, shape):
+        return shape[:-1] + (shape[-1] + 1,)
+
+    def inverse_shape(self, shape):
+        return shape[:-1] + (shape[-1] - 1,)
+
+
+class LowerCholeskyTransform(Transform):
+    """Unconstrained vector of size n(n+1)/2 -> lower Cholesky factor."""
+
+    domain = constraints.real_vector
+    codomain = constraints.lower_cholesky
+
+    @staticmethod
+    def _dim(n_flat):
+        # solve n(n+1)/2 = n_flat
+        import math
+
+        n = int((math.sqrt(8 * n_flat + 1) - 1) / 2)
+        assert n * (n + 1) // 2 == n_flat, "invalid flattened cholesky size"
+        return n
+
+    def __call__(self, x):
+        n = self._dim(x.shape[-1])
+        idx = jnp.tril_indices(n)
+        mat = jnp.zeros(x.shape[:-1] + (n, n), x.dtype).at[..., idx[0], idx[1]].set(x)
+        diag = jnp.exp(jnp.diagonal(mat, axis1=-2, axis2=-1))
+        return mat - jnp.diagflat(jnp.diagonal(mat, axis1=-2, axis2=-1)) * jnp.eye(n) + diag[..., None] * jnp.eye(n)
+
+    def inv(self, y):
+        n = y.shape[-1]
+        diag = jnp.log(jnp.diagonal(y, axis1=-2, axis2=-1))
+        mat = y - jnp.diagonal(y, axis1=-2, axis2=-1)[..., None] * jnp.eye(n) + diag[..., None] * jnp.eye(n)
+        idx = jnp.tril_indices(n)
+        return mat[..., idx[0], idx[1]]
+
+    def log_abs_det_jacobian(self, x, y):
+        n = y.shape[-1]
+        return jnp.sum(jnp.log(jnp.diagonal(y, axis1=-2, axis2=-1)), -1)
+
+    def forward_shape(self, shape):
+        n = self._dim(shape[-1])
+        return shape[:-1] + (n, n)
+
+    def inverse_shape(self, shape):
+        n = shape[-1]
+        return shape[:-2] + (n * (n + 1) // 2,)
+
+
+class PermuteTransform(Transform):
+    domain = constraints.real_vector
+    codomain = constraints.real_vector
+
+    def __init__(self, permutation):
+        self.permutation = jnp.asarray(permutation)
+
+    def __call__(self, x):
+        return x[..., self.permutation]
+
+    def inv(self, y):
+        inv_perm = jnp.argsort(self.permutation)
+        return y[..., inv_perm]
+
+    def log_abs_det_jacobian(self, x, y):
+        return jnp.zeros(x.shape[:-1], x.dtype)
+
+
+class ComposeTransform(Transform):
+    def __init__(self, parts: Sequence[Transform]):
+        self.parts = list(parts)
+
+    @property
+    def domain(self):
+        return self.parts[0].domain if self.parts else constraints.real
+
+    @property
+    def codomain(self):
+        return self.parts[-1].codomain if self.parts else constraints.real
+
+    def __call__(self, x):
+        for p in self.parts:
+            x = p(x)
+        return x
+
+    def inv(self, y):
+        for p in reversed(self.parts):
+            y = p.inv(y)
+        return y
+
+    def log_abs_det_jacobian(self, x, y):
+        result = 0.0
+        event_dim = self.event_dim
+        for p in self.parts:
+            y_p = p(x)
+            lad = p.log_abs_det_jacobian(x, y_p)
+            result = result + sum_rightmost(lad, event_dim - p.event_dim)
+            x = y_p
+        return result
+
+    def forward_shape(self, shape):
+        for p in self.parts:
+            shape = p.forward_shape(shape)
+        return shape
+
+    def inverse_shape(self, shape):
+        for p in reversed(self.parts):
+            shape = p.inverse_shape(shape)
+        return shape
+
+
+class IndependentTransform(Transform):
+    """Reinterpret batch dims of a transform as event dims."""
+
+    def __init__(self, base: Transform, reinterpreted_batch_ndims: int):
+        self.base = base
+        self.reinterpreted_batch_ndims = reinterpreted_batch_ndims
+
+    @property
+    def event_dim(self):
+        return self.base.event_dim + self.reinterpreted_batch_ndims
+
+    def __call__(self, x):
+        return self.base(x)
+
+    def inv(self, y):
+        return self.base.inv(y)
+
+    def log_abs_det_jacobian(self, x, y):
+        return sum_rightmost(self.base.log_abs_det_jacobian(x, y), self.reinterpreted_batch_ndims)
+
+
+# ---------------------------------------------------------------------------
+# MADE + Inverse Autoregressive Flow (Kingma et al. 2016) — used by the DMM
+# experiment (paper Fig. 4) and AutoIAFNormal.
+# ---------------------------------------------------------------------------
+
+
+def made_masks(input_dim: int, hidden_dims: Sequence[int], key=None):
+    """Sequential-degree MADE masks for an autoregressive MLP."""
+    degrees = [jnp.arange(input_dim)]
+    for h in hidden_dims:
+        degrees.append(jnp.arange(h) % max(1, input_dim - 1))
+    degrees.append(jnp.arange(input_dim))
+    masks = []
+    for d_in, d_out in zip(degrees[:-1], degrees[1:-1]):
+        masks.append((d_out[:, None] >= d_in[None, :]).astype(jnp.float32))
+    # output mask is strict: output i depends only on inputs < i
+    masks.append((degrees[-1][:, None] > degrees[-2][None, :]).astype(jnp.float32))
+    return masks
+
+
+def init_made_params(key, input_dim: int, hidden_dims: Sequence[int], n_outputs: int = 2):
+    """Initialize MADE weights; returns a pytree dict."""
+    dims = [input_dim] + list(hidden_dims) + [input_dim * n_outputs]
+    params = {}
+    keys = jax.random.split(key, len(dims) - 1)
+    for i, (d_in, d_out) in enumerate(zip(dims[:-1], dims[1:])):
+        w = jax.random.normal(keys[i], (d_out, d_in)) * (1.0 / jnp.sqrt(d_in))
+        params[f"w{i}"] = w
+        params[f"b{i}"] = jnp.zeros((d_out,))
+    return params
+
+
+def made_apply(params, masks, x, n_outputs: int = 2):
+    """Run the masked MLP; returns (out_0, ..., out_{n-1}) each of shape x."""
+    input_dim = x.shape[-1]
+    h = x
+    n_layers = len(masks)
+    for i in range(n_layers - 1):
+        w = params[f"w{i}"] * masks[i]
+        h = jnp.tanh(h @ w.T + params[f"b{i}"])
+    w = params[f"w{n_layers - 1}"]
+    mask = jnp.tile(masks[n_layers - 1], (n_outputs, 1))
+    out = h @ (w * mask).T + params[f"b{n_layers - 1}"]
+    outs = jnp.split(out, n_outputs, axis=-1)
+    return outs
+
+
+class InverseAutoregressiveTransform(Transform):
+    """IAF: y = x * sigma(s) + (1 - sigma(s)) * m with (m, s) = MADE(x).
+
+    Forward (sampling) is one parallel pass; inverse is sequential (we provide a
+    fixed-point iteration usable for testing). `params`/`masks` are provided by
+    the guide via the `param` primitive, keeping the flow learnable.
+    """
+
+    domain = constraints.real_vector
+    codomain = constraints.real_vector
+
+    def __init__(self, params, masks, log_scale_min_clip=-5.0, log_scale_max_clip=3.0):
+        self.params = params
+        self.masks = masks
+        self.clip = (log_scale_min_clip, log_scale_max_clip)
+
+    def _net(self, x):
+        m, s = made_apply(self.params, self.masks, x, n_outputs=2)
+        s = jnp.clip(s, *self.clip)
+        return m, s
+
+    def __call__(self, x):
+        m, s = self._net(x)
+        gate = jax.nn.sigmoid(s)
+        return gate * x + (1 - gate) * m
+
+    def inv(self, y):
+        # autoregressive inversion: D sequential passes solve exactly
+        def body(x, _):
+            m, s = self._net(x)
+            gate = jax.nn.sigmoid(s)
+            x_new = (y - (1 - gate) * m) / jnp.clip(gate, 1e-8)
+            return x_new, None
+
+        x0 = jnp.zeros_like(y)
+        x, _ = jax.lax.scan(body, x0, None, length=y.shape[-1])
+        return x
+
+    def log_abs_det_jacobian(self, x, y):
+        _, s = self._net(x)
+        return jnp.sum(jax.nn.log_sigmoid(s), axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# biject_to registry: constraint -> Transform from unconstrained space
+# ---------------------------------------------------------------------------
+
+
+def biject_to(constraint: constraints.Constraint) -> Transform:
+    if constraint is constraints.real or constraint is constraints.real_vector:
+        return IdentityTransform()
+    if constraint is constraints.positive or constraint is constraints.nonnegative:
+        return ExpTransform()
+    if constraint is constraints.unit_interval:
+        return SigmoidTransform()
+    if constraint is constraints.simplex:
+        return StickBreakingTransform()
+    if constraint is constraints.lower_cholesky:
+        return LowerCholeskyTransform()
+    if constraint is constraints.circular:
+        return ComposeTransform([TanhTransform(), AffineTransform(0.0, jnp.pi)])
+    if isinstance(constraint, constraints._Interval):
+        scale = constraint.upper_bound - constraint.lower_bound
+        return ComposeTransform(
+            [SigmoidTransform(), AffineTransform(constraint.lower_bound, scale)]
+        )
+    if isinstance(constraint, constraints._GreaterThan):
+        return ComposeTransform([ExpTransform(), AffineTransform(constraint.lower_bound, 1.0)])
+    if isinstance(constraint, constraints._LessThan):
+        return ComposeTransform([ExpTransform(), AffineTransform(constraint.upper_bound, -1.0)])
+    raise NotImplementedError(f"no bijector registered for constraint {constraint}")

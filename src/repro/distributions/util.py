@@ -1,0 +1,125 @@
+"""Shape/broadcast utilities shared by the distributions library."""
+from __future__ import annotations
+
+import math
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def lazy_property(fn):
+    attr = "_lazy_" + fn.__name__
+
+    @property
+    def wrapped(self):
+        if not hasattr(self, attr):
+            object.__setattr__(self, attr, fn(self))
+        return getattr(self, attr)
+
+    return wrapped
+
+
+def broadcast_shapes(*shapes: Sequence[int]) -> Tuple[int, ...]:
+    return tuple(np.broadcast_shapes(*[tuple(s) for s in shapes]))
+
+
+def promote_shapes(*args, shape=()):
+    """Left-pad arrays so they broadcast against each other (and `shape`)."""
+    if len(args) < 2 and not shape:
+        return args
+    shapes = [jnp.shape(a) for a in args]
+    num_dims = len(broadcast_shapes(shape, *shapes))
+    return [
+        a if len(s) == num_dims else jnp.reshape(a, (1,) * (num_dims - len(s)) + s)
+        for a, s in zip(args, shapes)
+    ]
+
+
+def sum_rightmost(x: jax.Array, dim: int) -> jax.Array:
+    """Sum the rightmost `dim` dimensions of `x` (dim may be 0)."""
+    if dim == 0:
+        return x
+    return jnp.sum(x, axis=tuple(range(-dim, 0)))
+
+
+def safe_log(x):
+    return jnp.log(jnp.clip(x, a_min=jnp.finfo(jnp.result_type(float)).tiny))
+
+
+def clamp_probs(probs):
+    finfo = jnp.finfo(jnp.result_type(probs, float))
+    return jnp.clip(probs, finfo.tiny, 1.0 - finfo.eps)
+
+
+def binary_cross_entropy_with_logits(logits, targets):
+    # -targets * log sigmoid(logits) - (1-targets) * log(1 - sigmoid(logits)).
+    # NOTE: the classic max(l,0)+log1p(exp(-|l|))-l*t form has a kinked,
+    # WRONG subgradient at exactly logits==0 (i.e. p=0.5 — the standard
+    # init!), which biased score-function ELBO gradients (caught by
+    # tests/test_infer_extra.py). log_sigmoid is smooth and equally stable.
+    return -(targets * jax.nn.log_sigmoid(logits)
+             + (1.0 - targets) * jax.nn.log_sigmoid(-logits))
+
+
+def logits_to_probs(logits, is_binary=False):
+    if is_binary:
+        return jax.nn.sigmoid(logits)
+    return jax.nn.softmax(logits, axis=-1)
+
+
+def probs_to_logits(probs, is_binary=False):
+    probs = clamp_probs(probs)
+    if is_binary:
+        return jnp.log(probs) - jnp.log1p(-probs)
+    return jnp.log(probs)
+
+
+def multigammaln(a, d):
+    constant = 0.25 * d * (d - 1) * math.log(math.pi)
+    res = jnp.sum(jax.scipy.special.gammaln(a[..., None] - 0.5 * jnp.arange(d)), axis=-1)
+    return res + constant
+
+
+def is_prng_key(key) -> bool:
+    try:
+        if isinstance(key, jax.Array):
+            return jnp.issubdtype(key.dtype, jax.dtypes.prng_key) or (
+                key.dtype == jnp.uint32 and key.shape[-1:] == (2,)
+            )
+    except Exception:
+        pass
+    return False
+
+
+def von_mises_centered(key, concentration, shape, dtype=jnp.float64):
+    """Best-Fisher rejection sampling for VonMises(0, concentration).
+
+    Implemented with a fixed 32-round loop (accept-first) so it is jittable.
+    """
+    conc = jnp.broadcast_to(concentration, shape).astype(jnp.float32)
+    r = 1.0 + jnp.sqrt(1.0 + 4.0 * conc ** 2)
+    rho = (r - jnp.sqrt(2.0 * r)) / (2.0 * conc)
+    s_ = (1.0 + rho ** 2) / (2.0 * rho)
+    small = conc < 1e-4  # fall back to uniform for tiny concentration
+
+    def body(i, carry):
+        out, done, k = carry
+        k, k1, k2, k3 = jax.random.split(k, 4)
+        u1 = jax.random.uniform(k1, shape)
+        u2 = jax.random.uniform(k2, shape)
+        u3 = jax.random.uniform(k3, shape)
+        z = jnp.cos(jnp.pi * u1)
+        f = (1.0 + s_ * z) / (s_ + z)
+        c = conc * (s_ - f)
+        accept = (c * (2.0 - c) - u2 > 0) | (jnp.log(c / jnp.clip(u2, 1e-37)) + 1.0 - c >= 0)
+        sample = jnp.sign(u3 - 0.5) * jnp.arccos(jnp.clip(f, -1.0, 1.0))
+        out = jnp.where(done | ~accept, out, sample)
+        done = done | accept
+        return out, done, k
+
+    init = (jnp.zeros(shape, jnp.float32), jnp.zeros(shape, bool), key)
+    out, _, _ = jax.lax.fori_loop(0, 32, body, init)
+    uniform = jax.random.uniform(key, shape, minval=-jnp.pi, maxval=jnp.pi)
+    return jnp.where(small, uniform, out).astype(dtype)

@@ -1,0 +1,262 @@
+"""Meta-distributions: Delta, Unit, Independent, Masked, Expanded, Transformed,
+MixtureSameFamily. These are the combinators the handler stack relies on
+(`scale`/`mask` handlers rewrite sites into Masked dists, `plate` uses expand)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import constraints
+from .distribution import Distribution
+from .transforms import Transform
+from .util import broadcast_shapes, sum_rightmost
+
+
+class Delta(Distribution):
+    """Point mass; AutoDelta guides (MAP/MLE training) are built from these."""
+
+    arg_constraints = {"v": constraints.real, "log_density": constraints.real}
+    support = constraints.real
+    has_rsample = True
+
+    def __init__(self, v=0.0, log_density=0.0, event_dim=0):
+        v = jnp.asarray(v)
+        if event_dim > v.ndim:
+            raise ValueError("event_dim exceeds value rank")
+        batch_shape = v.shape[: v.ndim - event_dim]
+        event_shape = v.shape[v.ndim - event_dim :]
+        self.v = v
+        self.log_density = log_density
+        super().__init__(batch_shape, event_shape)
+
+    def sample(self, key, sample_shape=()):
+        return jnp.broadcast_to(self.v, self.shape(sample_shape))
+
+    def log_prob(self, value):
+        lp = jnp.where(value == self.v, 0.0, -jnp.inf)
+        return sum_rightmost(lp, len(self.event_shape)) + self.log_density
+
+    @property
+    def mean(self):
+        return self.v
+
+    @property
+    def variance(self):
+        return jnp.zeros_like(self.v)
+
+
+class Unit(Distribution):
+    """Trivial nonnormalized distribution over the empty set; carries a
+    log_factor — implements the `factor` primitive."""
+
+    arg_constraints = {"log_factor": constraints.real}
+    support = constraints.real
+
+    def __init__(self, log_factor):
+        self.log_factor = jnp.asarray(log_factor)
+        super().__init__(self.log_factor.shape, (0,))
+
+    def sample(self, key, sample_shape=()):
+        return jnp.empty(self.shape(sample_shape))
+
+    def log_prob(self, value=None):
+        return self.log_factor
+
+
+class Independent(Distribution):
+    def __init__(self, base_dist: Distribution, reinterpreted_batch_ndims: int):
+        if reinterpreted_batch_ndims > len(base_dist.batch_shape):
+            raise ValueError("reinterpreted dims exceed batch rank")
+        self.base_dist = base_dist
+        self.reinterpreted_batch_ndims = reinterpreted_batch_ndims
+        shape = base_dist.batch_shape + base_dist.event_shape
+        event_dim = reinterpreted_batch_ndims + len(base_dist.event_shape)
+        super().__init__(shape[: len(shape) - event_dim], shape[len(shape) - event_dim :])
+
+    @property
+    def has_rsample(self):
+        return self.base_dist.has_rsample
+
+    @property
+    def is_discrete(self):
+        return self.base_dist.is_discrete
+
+    @property
+    def support(self):
+        return self.base_dist.support
+
+    def sample(self, key, sample_shape=()):
+        return self.base_dist.sample(key, sample_shape)
+
+    def log_prob(self, value):
+        return sum_rightmost(self.base_dist.log_prob(value), self.reinterpreted_batch_ndims)
+
+    def entropy(self):
+        return sum_rightmost(self.base_dist.entropy(), self.reinterpreted_batch_ndims)
+
+    @property
+    def mean(self):
+        return self.base_dist.mean
+
+    @property
+    def variance(self):
+        return self.base_dist.variance
+
+
+class MaskedDistribution(Distribution):
+    def __init__(self, base_dist: Distribution, mask):
+        self.base_dist = base_dist
+        self._mask = mask
+        batch_shape = broadcast_shapes(jnp.shape(mask), base_dist.batch_shape)
+        super().__init__(batch_shape, base_dist.event_shape)
+
+    @property
+    def has_rsample(self):
+        return self.base_dist.has_rsample
+
+    @property
+    def is_discrete(self):
+        return self.base_dist.is_discrete
+
+    @property
+    def support(self):
+        return self.base_dist.support
+
+    def sample(self, key, sample_shape=()):
+        return self.base_dist.sample(key, sample_shape)
+
+    def log_prob(self, value):
+        lp = self.base_dist.log_prob(value)
+        return jnp.where(self._mask, lp, 0.0)
+
+
+class ExpandedDistribution(Distribution):
+    def __init__(self, base_dist: Distribution, batch_shape):
+        self.base_dist = base_dist
+        # sanity: must broadcast
+        broadcast_shapes(batch_shape, base_dist.batch_shape)
+        super().__init__(tuple(batch_shape), base_dist.event_shape)
+
+    @property
+    def has_rsample(self):
+        return self.base_dist.has_rsample
+
+    @property
+    def is_discrete(self):
+        return self.base_dist.is_discrete
+
+    @property
+    def support(self):
+        return self.base_dist.support
+
+    def sample(self, key, sample_shape=()):
+        n_extra = len(self.batch_shape) - len(self.base_dist.batch_shape)
+        interstitial = tuple(self.batch_shape[:n_extra])
+        # draw with the expanded batch as part of sample_shape, broadcasting base
+        samples = self.base_dist.sample(key, tuple(sample_shape) + interstitial)
+        target = tuple(sample_shape) + self.shape()
+        return jnp.broadcast_to(samples, target)
+
+    def log_prob(self, value):
+        lp = self.base_dist.log_prob(value)
+        return jnp.broadcast_to(lp, broadcast_shapes(jnp.shape(lp), self.batch_shape))
+
+    @property
+    def mean(self):
+        return jnp.broadcast_to(self.base_dist.mean, self.batch_shape + self.event_shape)
+
+    @property
+    def variance(self):
+        return jnp.broadcast_to(self.base_dist.variance, self.batch_shape + self.event_shape)
+
+
+class TransformedDistribution(Distribution):
+    def __init__(self, base_distribution: Distribution, transforms):
+        if isinstance(transforms, Transform):
+            transforms = [transforms]
+        self.base_dist = base_distribution
+        self.transforms = list(transforms)
+        base_shape = base_distribution.shape()
+        forward_shape = base_shape
+        for t in self.transforms:
+            forward_shape = t.forward_shape(forward_shape)
+        event_dim = max(
+            [len(base_distribution.event_shape)]
+            + [t.event_dim for t in self.transforms]
+        )
+        cut = len(forward_shape) - event_dim
+        super().__init__(forward_shape[:cut], forward_shape[cut:])
+
+    @property
+    def has_rsample(self):
+        return self.base_dist.has_rsample
+
+    @property
+    def support(self):
+        return self.transforms[-1].codomain if self.transforms else self.base_dist.support
+
+    def sample(self, key, sample_shape=()):
+        x = self.base_dist.sample(key, sample_shape)
+        for t in self.transforms:
+            x = t(x)
+        return x
+
+    def sample_with_intermediates(self, key, sample_shape=()):
+        x = self.base_dist.sample(key, sample_shape)
+        xs = [x]
+        for t in self.transforms:
+            x = t(x)
+            xs.append(x)
+        return x, xs
+
+    def log_prob(self, value):
+        event_dim = len(self.event_shape)
+        lp = 0.0
+        y = value
+        for t in reversed(self.transforms):
+            x = t.inv(y)
+            lad = t.log_abs_det_jacobian(x, y)
+            lp = lp - sum_rightmost(lad, event_dim - t.event_dim)
+            y = x
+        lp = lp + sum_rightmost(
+            self.base_dist.log_prob(y), event_dim - len(self.base_dist.event_shape)
+        )
+        return lp
+
+
+class MixtureSameFamily(Distribution):
+    def __init__(self, mixing_distribution, component_distribution):
+        self.mixing_distribution = mixing_distribution  # Categorical over K
+        self.component_distribution = component_distribution  # batch (..., K)
+        k = component_distribution.batch_shape[-1]
+        if mixing_distribution.num_categories != k:
+            raise ValueError("component count mismatch")
+        super().__init__(
+            component_distribution.batch_shape[:-1], component_distribution.event_shape
+        )
+
+    @property
+    def is_discrete(self):
+        return self.component_distribution.is_discrete
+
+    def sample(self, key, sample_shape=()):
+        k1, k2 = jax.random.split(key)
+        idx = self.mixing_distribution.sample(k1, sample_shape)  # (*s, *batch)
+        comps = self.component_distribution.sample(k2, sample_shape)  # (*s, *batch, K, *event)
+        idx_exp = idx[(...,) + (None,) * (1 + len(self.event_shape))]
+        idx_exp = jnp.broadcast_to(
+            idx_exp, idx.shape + (1,) + self.event_shape
+        )
+        return jnp.take_along_axis(comps, idx_exp, axis=len(idx.shape)).squeeze(len(idx.shape))
+
+    def log_prob(self, value):
+        value_exp = jnp.expand_dims(value, -1 - len(self.event_shape))
+        comp_lp = self.component_distribution.log_prob(value_exp)
+        mix_logp = jax.nn.log_softmax(self.mixing_distribution.logits, -1)
+        return jax.scipy.special.logsumexp(comp_lp + mix_logp, axis=-1)
+
+    @property
+    def mean(self):
+        probs = self.mixing_distribution.probs
+        probs = probs.reshape(probs.shape + (1,) * len(self.event_shape))
+        return jnp.sum(probs * self.component_distribution.mean, axis=-1 - len(self.event_shape))

@@ -1,0 +1,37 @@
+from .autoguide import (
+    AutoDelta,
+    AutoGuide,
+    AutoIAFNormal,
+    AutoLowRankMultivariateNormal,
+    AutoNormal,
+)
+from .elbo import RenyiELBO, Trace_ELBO, TraceMeanField_ELBO
+from .tracegraph_elbo import TraceGraph_ELBO
+from .importance import Importance
+from .mcmc import HMC, MCMC, NUTS
+from .predictive import Predictive
+from .svi import SVI, SVIRunner, SVIState
+from .util import log_density, potential_energy, substitute_params
+
+__all__ = [
+    "AutoDelta",
+    "AutoGuide",
+    "AutoIAFNormal",
+    "AutoLowRankMultivariateNormal",
+    "AutoNormal",
+    "RenyiELBO",
+    "Trace_ELBO",
+    "TraceGraph_ELBO",
+    "TraceMeanField_ELBO",
+    "Importance",
+    "HMC",
+    "MCMC",
+    "NUTS",
+    "Predictive",
+    "SVI",
+    "SVIRunner",
+    "SVIState",
+    "log_density",
+    "potential_energy",
+    "substitute_params",
+]

@@ -1,0 +1,230 @@
+"""Automatic guide construction (Pyro's `pyro.infer.autoguide`).
+
+AutoDelta  -> MAP / MLE (this is how the big LM configs train: SVI with a
+              Delta guide over weights == maximum likelihood, making the PPL
+              machinery the *training loop* of the framework).
+AutoNormal -> mean-field ADVI.
+AutoLowRankMVN -> low-rank multivariate normal posterior.
+AutoIAFNormal -> normalizing-flow guide (paper Fig. 4's IAF extension).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core import primitives
+from ..core.handlers import block, seed, substitute, trace
+from ..distributions import (
+    Delta,
+    Independent,
+    LowRankMultivariateNormal,
+    Normal,
+    TransformedDistribution,
+    biject_to,
+    constraints,
+)
+from ..distributions.transforms import (
+    InverseAutoregressiveTransform,
+    PermuteTransform,
+    init_made_params,
+    made_masks,
+)
+
+
+def init_to_sample(site_name, value, unconstrained):
+    """Initialize a latent at its prototype (prior) sample."""
+    return value
+
+
+def init_to_feasible(site_name, value, unconstrained):
+    """Initialize a latent at 0 in unconstrained space (NumPyro-style robust
+    default: far prior samples make SVI take thousands of warmup steps)."""
+    return jnp.zeros_like(unconstrained)
+
+
+def init_to_median(site_name, value, unconstrained):  # alias of feasible here
+    return jnp.zeros_like(unconstrained)
+
+
+class AutoGuide:
+    """Base: traces the model once (lazily) to discover latent sites."""
+
+    def __init__(self, model: Callable, prefix: str = "auto", init_loc_fn=init_to_feasible):
+        self.model = model
+        self.prefix = prefix
+        self.init_loc_fn = init_loc_fn
+        self._prototype: Optional[Dict] = None
+
+    def _setup_prototype(self, *args, **kwargs):
+        key = kwargs.pop("_proto_key", jax.random.PRNGKey(0))
+        # hide the prototype run from any enclosing handlers (outer trace/seed)
+        with block():
+            tr = trace(seed(self.model, key)).get_trace(*args, **kwargs)
+        proto = {}
+        for name, site in tr.nodes.items():
+            if site["type"] == "sample" and not site["is_observed"]:
+                if getattr(site["fn"], "is_discrete", False):
+                    raise ValueError(f"autoguides require continuous latents; '{name}' is discrete")
+                t = biject_to(site["fn"].support)
+                u0 = t.inv(site["value"])
+                init_u = self.init_loc_fn(name, site["value"], u0)
+                proto[name] = {
+                    "value": t(init_u),
+                    "support": site["fn"].support,
+                    "event_dim": len(site["fn"].event_shape),
+                    "shape": jnp.shape(site["value"]),
+                }
+        self._prototype = proto
+        return proto
+
+    def __call__(self, *args, **kwargs):
+        raise NotImplementedError
+
+
+class AutoDelta(AutoGuide):
+    """MAP/MLE guide: a learnable point mass per latent site."""
+
+    def __call__(self, *args, **kwargs):
+        proto = self._prototype or self._setup_prototype(*args, **kwargs)
+        values = {}
+        for name, site in proto.items():
+            loc = primitives.param(
+                f"{self.prefix}_{name}_loc", site["value"], constraint=site["support"]
+            )
+            values[name] = primitives.sample(
+                name, Delta(loc, event_dim=loc.ndim)
+            )
+        return values
+
+
+class AutoNormal(AutoGuide):
+    """Mean-field normal in unconstrained space, bijected to each support."""
+
+    def __init__(self, model, prefix="auto", init_scale: float = 0.1, init_loc_fn=init_to_feasible):
+        super().__init__(model, prefix, init_loc_fn=init_loc_fn)
+        self.init_scale = init_scale
+
+    def __call__(self, *args, **kwargs):
+        proto = self._prototype or self._setup_prototype(*args, **kwargs)
+        values = {}
+        for name, site in proto.items():
+            transform = biject_to(site["support"])
+            init_u = transform.inv(site["value"])
+            loc = primitives.param(f"{self.prefix}_{name}_loc", init_u)
+            log_scale = primitives.param(
+                f"{self.prefix}_{name}_scale",
+                jnp.full(jnp.shape(init_u), jnp.log(self.init_scale)),
+            )
+            base = Independent(Normal(loc, jnp.exp(log_scale)), jnp.ndim(init_u))
+            from ..distributions.transforms import IdentityTransform
+
+            if isinstance(transform, IdentityTransform):
+                # keep the bare Normal so analytic KL registry applies
+                values[name] = primitives.sample(name, base)
+            else:
+                values[name] = primitives.sample(
+                    name, TransformedDistribution(base, [transform])
+                )
+        return values
+
+    # posterior access helpers
+    def median(self, params: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+        proto = self._prototype
+        out = {}
+        for name, site in proto.items():
+            t = biject_to(site["support"])
+            out[name] = t(params[f"{self.prefix}_{name}_loc"])
+        return out
+
+
+class AutoLowRankMultivariateNormal(AutoGuide):
+    """Joint low-rank MVN over all flattened unconstrained latents."""
+
+    def __init__(self, model, prefix="auto", rank: int = 8, init_scale: float = 0.1, init_loc_fn=init_to_feasible):
+        super().__init__(model, prefix, init_loc_fn=init_loc_fn)
+        self.rank = rank
+        self.init_scale = init_scale
+
+    def __call__(self, *args, **kwargs):
+        proto = self._prototype or self._setup_prototype(*args, **kwargs)
+        sizes, inits, transforms = {}, {}, {}
+        total = 0
+        for name, site in proto.items():
+            t = biject_to(site["support"])
+            u = t.inv(site["value"])
+            transforms[name] = t
+            inits[name] = u
+            sizes[name] = int(jnp.size(u))
+            total += sizes[name]
+        flat_init = (
+            jnp.concatenate([inits[n].reshape(-1) for n in proto]) if total else jnp.zeros(0)
+        )
+        loc = primitives.param(f"{self.prefix}_loc", flat_init)
+        cov_factor = primitives.param(
+            f"{self.prefix}_cov_factor", jnp.zeros((total, self.rank))
+        )
+        cov_diag_raw = primitives.param(
+            f"{self.prefix}_cov_diag",
+            jnp.full((total,), self.init_scale),
+            constraint=constraints.positive,
+        )
+        joint = LowRankMultivariateNormal(loc, cov_factor, cov_diag_raw)
+        flat = primitives.sample("_auto_latent", joint)
+        values, offset = {}, 0
+        for name, site in proto.items():
+            n = sizes[name]
+            chunk = flat[..., offset : offset + n].reshape(site["shape"])
+            offset += n
+            value = transforms[name](chunk)
+            values[name] = primitives.sample(
+                name, Delta(value, event_dim=len(site["shape"]))
+            )
+        return values
+
+
+class AutoIAFNormal(AutoGuide):
+    """Normalizing-flow guide: diag-normal base pushed through `num_flows`
+    IAF layers with permutations (Kingma et al. 2016; paper Fig. 4)."""
+
+    def __init__(self, model, prefix="auto", num_flows: int = 2, hidden_factor: int = 2, init_loc_fn=init_to_feasible):
+        super().__init__(model, prefix, init_loc_fn=init_loc_fn)
+        self.num_flows = num_flows
+        self.hidden_factor = hidden_factor
+
+    def __call__(self, *args, **kwargs):
+        proto = self._prototype or self._setup_prototype(*args, **kwargs)
+        sizes, transforms = {}, {}
+        total = 0
+        for name, site in proto.items():
+            t = biject_to(site["support"])
+            transforms[name] = t
+            sizes[name] = int(jnp.size(site["value"]))
+            total += sizes[name]
+        if total < 2:
+            raise ValueError("AutoIAFNormal needs >= 2 latent dims")
+        hidden = [total * self.hidden_factor]
+        masks = made_masks(total, hidden)
+        loc = primitives.param(f"{self.prefix}_loc", jnp.zeros(total))
+        log_scale = primitives.param(f"{self.prefix}_log_scale", jnp.zeros(total))
+        parts = []
+        for i in range(self.num_flows):
+            made_init = init_made_params(jax.random.PRNGKey(17 + i), total, hidden)
+            made = {
+                k: primitives.param(f"{self.prefix}_iaf{i}_{k}", v)
+                for k, v in made_init.items()
+            }
+            parts.append(InverseAutoregressiveTransform(made, masks))
+            if i != self.num_flows - 1:
+                parts.append(PermuteTransform(jnp.arange(total)[::-1]))
+        base = Independent(Normal(loc, jnp.exp(log_scale)), 1)
+        flat = primitives.sample("_auto_latent", TransformedDistribution(base, parts))
+        values, offset = {}, 0
+        for name, site in proto.items():
+            n = sizes[name]
+            chunk = flat[..., offset : offset + n].reshape(site["shape"])
+            offset += n
+            value = transforms[name](chunk)
+            values[name] = primitives.sample(name, Delta(value, event_dim=len(site["shape"])))
+        return values

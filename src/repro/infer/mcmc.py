@@ -1,0 +1,481 @@
+"""Hamiltonian Monte Carlo + No-U-Turn Sampler (paper §2: "Pyro implements
+several generic probabilistic inference algorithms, including the No U-turn
+Sampler ... a variant of Hamiltonian Monte Carlo").
+
+Fully jittable: leapfrog, Welford diagonal mass adaptation, and dual-averaging
+step size run inside `lax` control flow. NUTS uses iterative progressive
+doubling with multinomial sampling along the trajectory and a subtree U-turn
+check at each doubling (Hoffman & Gelman 2014; iterative form after Phan et
+al. 2019).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .util import get_model_transforms, init_to_uniform, potential_energy, transform_fn
+
+# ---------------------------------------------------------------------------
+# pytree-of-arrays helpers
+# ---------------------------------------------------------------------------
+
+
+def _tree_dot(a, b):
+    leaves_a = jax.tree_util.tree_leaves(a)
+    leaves_b = jax.tree_util.tree_leaves(b)
+    return sum(jnp.sum(x * y) for x, y in zip(leaves_a, leaves_b))
+
+
+def _tree_axpy(alpha, x, y):
+    return jax.tree_util.tree_map(lambda xi, yi: alpha * xi + yi, x, y)
+
+
+def _tree_scale(alpha, x):
+    return jax.tree_util.tree_map(lambda xi: alpha * xi, x)
+
+
+# ---------------------------------------------------------------------------
+# Dual averaging + Welford variance (mass matrix) adaptation
+# ---------------------------------------------------------------------------
+
+
+class DAState(NamedTuple):
+    log_step: jax.Array
+    log_step_avg: jax.Array
+    h_avg: jax.Array
+    mu: jax.Array
+    t: jax.Array
+
+
+def da_init(step_size: float) -> DAState:
+    return DAState(
+        jnp.log(step_size),
+        jnp.log(step_size),
+        jnp.zeros(()),
+        jnp.log(10.0 * step_size),
+        jnp.zeros(()),
+    )
+
+
+def da_update(state: DAState, accept_prob: jax.Array, target: float = 0.8) -> DAState:
+    t = state.t + 1
+    kappa, gamma, t0 = 0.75, 0.05, 10.0
+    h = (1 - 1 / (t + t0)) * state.h_avg + (target - accept_prob) / (t + t0)
+    log_step = state.mu - jnp.sqrt(t) / gamma * h
+    eta = t ** (-kappa)
+    log_avg = eta * log_step + (1 - eta) * state.log_step_avg
+    return DAState(log_step, log_avg, h, state.mu, t)
+
+
+class WelfordState(NamedTuple):
+    mean: Any
+    m2: Any
+    n: jax.Array
+
+
+def welford_init(proto) -> WelfordState:
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, proto)
+    return WelfordState(zeros, zeros, jnp.zeros(()))
+
+
+def welford_update(state: WelfordState, sample) -> WelfordState:
+    n = state.n + 1
+    delta = jax.tree_util.tree_map(lambda s, m: s - m, sample, state.mean)
+    mean = jax.tree_util.tree_map(lambda m, d: m + d / n, state.mean, delta)
+    delta2 = jax.tree_util.tree_map(lambda s, m: s - m, sample, mean)
+    m2 = jax.tree_util.tree_map(lambda a, d, d2: a + d * d2, state.m2, delta, delta2)
+    return WelfordState(mean, m2, n)
+
+
+def welford_variance(state: WelfordState, regularize: bool = True):
+    def var(m2):
+        v = m2 / jnp.maximum(state.n - 1, 1)
+        if regularize:  # Stan's shrinkage toward unit
+            v = (state.n / (state.n + 5.0)) * v + 1e-3 * (5.0 / (state.n + 5.0))
+        return v
+
+    return jax.tree_util.tree_map(var, state.m2)
+
+
+# ---------------------------------------------------------------------------
+# Leapfrog
+# ---------------------------------------------------------------------------
+
+
+def leapfrog(potential_fn, z, r, inv_mass, step_size, n_steps):
+    grad_fn = jax.grad(potential_fn)
+
+    def body(carry, _):
+        z, r = carry
+        r = _tree_axpy(-0.5 * step_size, grad_fn(z), r)
+        z = jax.tree_util.tree_map(lambda zi, ri, mi: zi + step_size * mi * ri, z, r, inv_mass)
+        r = _tree_axpy(-0.5 * step_size, grad_fn(z), r)
+        return (z, r), None
+
+    (z, r), _ = jax.lax.scan(body, (z, r), None, length=n_steps)
+    return z, r
+
+
+def _kinetic(r, inv_mass):
+    return 0.5 * sum(
+        jnp.sum(m * jnp.square(ri))
+        for ri, m in zip(jax.tree_util.tree_leaves(r), jax.tree_util.tree_leaves(inv_mass))
+    )
+
+
+def _sample_momentum(key, proto, inv_mass):
+    leaves, treedef = jax.tree_util.tree_flatten(proto)
+    keys = jax.random.split(key, len(leaves))
+    inv_leaves = treedef.flatten_up_to(inv_mass)
+    rs = [
+        jax.random.normal(k, x.shape, jnp.float32) / jnp.sqrt(jnp.clip(m, 1e-10))
+        for k, x, m in zip(keys, leaves, inv_leaves)
+    ]
+    return jax.tree_util.tree_unflatten(treedef, rs)
+
+
+# ---------------------------------------------------------------------------
+# HMC
+# ---------------------------------------------------------------------------
+
+
+class HMCState(NamedTuple):
+    z: Any
+    potential: jax.Array
+    rng_key: jax.Array
+    step_size: jax.Array
+    inv_mass: Any
+    da: DAState
+    welford: Any
+    i: jax.Array
+    accept_prob: jax.Array
+    num_steps: jax.Array  # leapfrog steps taken (diagnostics)
+
+
+class HMC:
+    def __init__(
+        self,
+        model: Optional[Callable] = None,
+        potential_fn: Optional[Callable] = None,
+        step_size: float = 0.1,
+        trajectory_length: float = 2 * math.pi,
+        adapt_step_size: bool = True,
+        adapt_mass_matrix: bool = True,
+        target_accept_prob: float = 0.8,
+        max_tree_depth: int = 10,
+        max_num_steps: int = 1024,
+    ):
+        if (model is None) == (potential_fn is None):
+            raise ValueError("pass exactly one of model / potential_fn")
+        self.model = model
+        self._potential_fn = potential_fn
+        self.step_size = step_size
+        self.trajectory_length = trajectory_length
+        self.adapt_step_size = adapt_step_size
+        self.adapt_mass_matrix = adapt_mass_matrix
+        self.target_accept = target_accept_prob
+        self.max_tree_depth = max_tree_depth
+        self.max_num_steps = max_num_steps
+        self._transforms = None
+
+    # -- setup ---------------------------------------------------------------
+    def _setup(self, rng_key, *args, **kwargs):
+        if self._potential_fn is not None:
+            return self._potential_fn, kwargs.pop("init_params")
+        transforms, inits, _ = get_model_transforms(rng_key, self.model, args, kwargs)
+        self._transforms = transforms
+        pe = partial(potential_energy, self.model, args, kwargs, transforms)
+        init = init_to_uniform(rng_key, inits)
+        return pe, init
+
+    def init(self, rng_key, *args, **kwargs) -> Tuple[HMCState, Callable]:
+        key_setup, key_state = jax.random.split(rng_key)
+        pe_fn, z0 = self._setup(key_setup, *args, **kwargs)
+        z0 = jax.tree_util.tree_map(lambda x: jnp.asarray(x, jnp.float32), z0)
+        inv_mass = jax.tree_util.tree_map(jnp.ones_like, z0)
+        state = HMCState(
+            z0,
+            pe_fn(z0),
+            key_state,
+            jnp.asarray(self.step_size, jnp.float32),
+            inv_mass,
+            da_init(self.step_size),
+            welford_init(z0),
+            jnp.zeros((), jnp.int32),
+            jnp.zeros(()),
+            jnp.zeros((), jnp.int32),
+        )
+        return state, pe_fn
+
+    # -- one transition (jittable) --------------------------------------------
+    def sample_step(self, state: HMCState, pe_fn, warmup_len: int = 0) -> HMCState:
+        key, key_mom, key_accept = jax.random.split(state.rng_key, 3)
+        r = _sample_momentum(key_mom, state.z, state.inv_mass)
+        energy0 = state.potential + _kinetic(r, state.inv_mass)
+        n_steps = jnp.clip(
+            (self.trajectory_length / state.step_size).astype(jnp.int32), 1, self.max_num_steps
+        )
+        # fixed upper bound for scan; mask extra steps
+        max_steps = self.max_num_steps
+
+        grad_fn = jax.grad(pe_fn)
+
+        def body(carry, i):
+            z, r = carry
+            do = i < n_steps
+
+            def step(zr):
+                z, r = zr
+                r = _tree_axpy(-0.5 * state.step_size, grad_fn(z), r)
+                z = jax.tree_util.tree_map(
+                    lambda zi, ri, mi: zi + state.step_size * mi * ri, z, r, state.inv_mass
+                )
+                r = _tree_axpy(-0.5 * state.step_size, grad_fn(z), r)
+                return z, r
+
+            z, r = jax.lax.cond(do, step, lambda zr: zr, (z, r))
+            return (z, r), None
+
+        (z_new, r_new), _ = jax.lax.scan(body, (state.z, r), jnp.arange(max_steps))
+        pe_new = pe_fn(z_new)
+        energy1 = pe_new + _kinetic(r_new, state.inv_mass)
+        delta = energy0 - energy1
+        delta = jnp.where(jnp.isnan(delta), -jnp.inf, delta)
+        accept_prob = jnp.minimum(1.0, jnp.exp(delta))
+        accept = jax.random.uniform(key_accept) < accept_prob
+        z = jax.tree_util.tree_map(
+            lambda a, b: jnp.where(accept, a, b), z_new, state.z
+        )
+        potential = jnp.where(accept, pe_new, state.potential)
+        # adaptation (only effective during warmup; caller freezes after)
+        da = da_update(state.da, accept_prob, self.target_accept) if self.adapt_step_size else state.da
+        in_warmup = state.i < warmup_len
+        step_size = jnp.where(
+            in_warmup & self.adapt_step_size, jnp.exp(da.log_step), jnp.exp(da.log_step_avg)
+        ) if self.adapt_step_size else state.step_size
+        welford = welford_update(state.welford, z) if self.adapt_mass_matrix else state.welford
+        return HMCState(
+            z, potential, key, step_size, state.inv_mass, da, welford,
+            state.i + 1, accept_prob, n_steps,
+        )
+
+    def finalize_warmup(self, state: HMCState) -> HMCState:
+        if self.adapt_mass_matrix:
+            inv_mass = welford_variance(state.welford)
+        else:
+            inv_mass = state.inv_mass
+        step_size = jnp.exp(state.da.log_step_avg) if self.adapt_step_size else state.step_size
+        return state._replace(inv_mass=inv_mass, step_size=step_size)
+
+
+# ---------------------------------------------------------------------------
+# NUTS: iterative progressive doubling with multinomial trajectory sampling
+# ---------------------------------------------------------------------------
+
+
+class _TreeState(NamedTuple):
+    z_left: Any
+    r_left: Any
+    z_right: Any
+    r_right: Any
+    z_proposal: Any
+    pe_proposal: jax.Array
+    log_weight: jax.Array  # log sum of exp(-energy) over trajectory
+    turning: jax.Array
+    diverging: jax.Array
+    sum_accept: jax.Array
+    n_leapfrog: jax.Array
+
+
+class NUTS(HMC):
+    """No-U-Turn sampler. At each doubling j we extend the trajectory by 2^j
+    leapfrog steps in a random direction, multinomially sampling a proposal
+    within the new subtree (progressive sampling), and stop on a U-turn
+    between trajectory endpoints or on divergence."""
+
+    def sample_step(self, state: HMCState, pe_fn, warmup_len: int = 0) -> HMCState:
+        key, key_mom, key_dirs, key_accept = jax.random.split(state.rng_key, 4)
+        r0 = _sample_momentum(key_mom, state.z, state.inv_mass)
+        energy0 = state.potential + _kinetic(r0, state.inv_mass)
+        grad_fn = jax.grad(pe_fn)
+        step_size = state.step_size
+        inv_mass = state.inv_mass
+        max_delta = 1000.0
+
+        def one_leapfrog(z, r, direction):
+            eps = step_size * direction
+            r = _tree_axpy(-0.5 * eps, grad_fn(z), r)
+            z = jax.tree_util.tree_map(lambda zi, ri, mi: zi + eps * mi * ri, z, r, inv_mass)
+            r = _tree_axpy(-0.5 * eps, grad_fn(z), r)
+            return z, r
+
+        def is_turning(z_left, r_left, z_right, r_right):
+            dz = jax.tree_util.tree_map(lambda a, b: a - b, z_right, z_left)
+            v_left = jax.tree_util.tree_map(lambda m, r: m * r, inv_mass, r_left)
+            v_right = jax.tree_util.tree_map(lambda m, r: m * r, inv_mass, r_right)
+            return (_tree_dot(dz, v_left) < 0) | (_tree_dot(dz, v_right) < 0)
+
+        def extend_subtree(carry_key, tree: _TreeState, depth_j, direction):
+            """Take 2^depth_j leapfrog steps from the chosen end, doing
+            progressive multinomial proposal updates step-by-step."""
+            n_steps = 2 ** depth_j
+
+            def body(carry, i):
+                key, z_end, r_end, z_prop, pe_prop, log_w, turning, diverging, sum_acc, z_sub_first, r_sub_first, started = carry
+                do = (i < n_steps) & ~turning & ~diverging
+
+                def step(args):
+                    (key, z_end, r_end, z_prop, pe_prop, log_w, turning, diverging,
+                     sum_acc, z_first, r_first, started) = args
+                    z_new, r_new = one_leapfrog(z_end, r_end, direction)
+                    pe_new = pe_fn(z_new)
+                    energy_new = pe_new + _kinetic(r_new, inv_mass)
+                    delta = energy_new - energy0
+                    delta = jnp.where(jnp.isnan(delta), jnp.inf, delta)
+                    diverging2 = delta > max_delta
+                    log_w_new = -delta  # weight relative to initial energy
+                    log_w2 = jnp.logaddexp(log_w, log_w_new)
+                    key, key_u = jax.random.split(key)
+                    take = jax.random.uniform(key_u) < jnp.exp(log_w_new - log_w2)
+                    z_prop2 = jax.tree_util.tree_map(
+                        lambda a, b: jnp.where(take, a, b), z_new, z_prop
+                    )
+                    pe_prop2 = jnp.where(take, pe_new, pe_prop)
+                    sum_acc2 = sum_acc + jnp.minimum(1.0, jnp.exp(-delta))
+                    # record subtree start for the U-turn check
+                    z_first2 = jax.tree_util.tree_map(
+                        lambda a, b: jnp.where(started, a, b), z_first, z_new
+                    )
+                    r_first2 = jax.tree_util.tree_map(
+                        lambda a, b: jnp.where(started, a, b), r_first, r_new
+                    )
+                    # direction-normalized U-turn check: dz always points
+                    # "forward" along the trajectory regardless of direction
+                    dz = jax.tree_util.tree_map(
+                        lambda a, b: direction * (a - b), z_new, z_first2
+                    )
+                    v_first = jax.tree_util.tree_map(lambda m, r: m * r, inv_mass, r_first2)
+                    v_new = jax.tree_util.tree_map(lambda m, r: m * r, inv_mass, r_new)
+                    turning2 = (
+                        (_tree_dot(dz, v_first) < 0) | (_tree_dot(dz, v_new) < 0)
+                    ) & started  # need at least 2 pts
+                    return (key, z_new, r_new, z_prop2, pe_prop2, log_w2, turning2,
+                            diverging2, sum_acc2, z_first2, r_first2, jnp.asarray(True))
+
+                carry2 = jax.lax.cond(do, step, lambda a: a,
+                                      (key, z_end, r_end, z_prop, pe_prop, log_w, turning,
+                                       diverging, sum_acc, z_sub_first, r_sub_first, started))
+                return carry2, None
+
+            z_end = jax.lax.cond(direction > 0, lambda: tree.z_right, lambda: tree.z_left)
+            r_end = jax.lax.cond(direction > 0, lambda: tree.r_right, lambda: tree.r_left)
+            init = (carry_key, z_end, r_end, tree.z_proposal, tree.pe_proposal,
+                    -jnp.inf, jnp.asarray(False), jnp.asarray(False), jnp.zeros(()),
+                    z_end, r_end, jnp.asarray(False))
+            out, _ = jax.lax.scan(body, init, jnp.arange(2 ** self.max_tree_depth))
+            (key, z_end, r_end, z_prop, pe_prop, log_w_sub, turning, diverging,
+             sum_acc, _, _, _) = out
+            return key, z_end, r_end, z_prop, pe_prop, log_w_sub, turning, diverging, sum_acc
+
+        # -- progressive doubling loop (unrolled over max_tree_depth) -------
+        tree = _TreeState(
+            state.z, r0, state.z, r0, state.z, state.potential,
+            jnp.zeros(()),  # initial point has weight exp(0)
+            jnp.asarray(False), jnp.asarray(False), jnp.zeros(()), jnp.zeros((), jnp.int32),
+        )
+        key_loop = key_dirs
+        for j in range(self.max_tree_depth):
+            key_loop, key_dir, key_swap = jax.random.split(key_loop, 3)
+            direction = jnp.where(jax.random.bernoulli(key_dir), 1.0, -1.0)
+            stop = tree.turning | tree.diverging
+            (key_loop, z_end, r_end, z_prop_sub, pe_prop_sub, log_w_sub, turning_sub,
+             diverging_sub, sum_acc) = extend_subtree(key_loop, tree, j, direction)
+            # biased progressive sampling between old tree and new subtree
+            total = jnp.logaddexp(tree.log_weight, log_w_sub)
+            take_new = (jax.random.uniform(key_swap) < jnp.exp(log_w_sub - total)) & ~turning_sub & ~diverging_sub
+            z_proposal = jax.tree_util.tree_map(
+                lambda a, b: jnp.where(take_new & ~stop, a, b), z_prop_sub, tree.z_proposal
+            )
+            pe_proposal = jnp.where(take_new & ~stop, pe_prop_sub, tree.pe_proposal)
+            z_left = jax.tree_util.tree_map(
+                lambda new, old: jnp.where((direction < 0) & ~stop, new, old), z_end, tree.z_left
+            )
+            r_left = jax.tree_util.tree_map(
+                lambda new, old: jnp.where((direction < 0) & ~stop, new, old), r_end, tree.r_left
+            )
+            z_right = jax.tree_util.tree_map(
+                lambda new, old: jnp.where((direction > 0) & ~stop, new, old), z_end, tree.z_right
+            )
+            r_right = jax.tree_util.tree_map(
+                lambda new, old: jnp.where((direction > 0) & ~stop, new, old), r_end, tree.r_right
+            )
+            turning_full = is_turning(z_left, r_left, z_right, r_right)
+            tree = _TreeState(
+                z_left, r_left, z_right, r_right, z_proposal, pe_proposal,
+                jnp.where(stop, tree.log_weight, total),
+                tree.turning | turning_sub | turning_full,
+                tree.diverging | diverging_sub,
+                tree.sum_accept + jnp.where(stop, 0.0, sum_acc),
+                tree.n_leapfrog + jnp.where(stop, 0, 2 ** j),
+            )
+
+        accept_prob = tree.sum_accept / jnp.maximum(tree.n_leapfrog, 1)
+        da = da_update(state.da, accept_prob, self.target_accept) if self.adapt_step_size else state.da
+        in_warmup = state.i < warmup_len
+        step_size = jnp.where(
+            in_warmup & self.adapt_step_size, jnp.exp(da.log_step), jnp.exp(da.log_step_avg)
+        ) if self.adapt_step_size else state.step_size
+        welford = welford_update(state.welford, tree.z_proposal) if self.adapt_mass_matrix else state.welford
+        return HMCState(
+            tree.z_proposal, tree.pe_proposal, key, step_size, state.inv_mass, da,
+            welford, state.i + 1, accept_prob, tree.n_leapfrog,
+        )
+
+
+# ---------------------------------------------------------------------------
+# MCMC driver
+# ---------------------------------------------------------------------------
+
+
+class MCMC:
+    def __init__(self, kernel: HMC, num_warmup: int, num_samples: int, thinning: int = 1):
+        self.kernel = kernel
+        self.num_warmup = num_warmup
+        self.num_samples = num_samples
+        self.thinning = thinning
+        self._samples = None
+
+    def run(self, rng_key, *args, **kwargs):
+        state, pe_fn = self.kernel.init(rng_key, *args, **kwargs)
+        warmup_len = self.num_warmup
+
+        step = jax.jit(partial(self.kernel.sample_step, pe_fn=pe_fn, warmup_len=warmup_len))
+
+        # mass-matrix adaptation windows: re-estimate twice during warmup
+        win = max(1, warmup_len // 2)
+        for i in range(warmup_len):
+            state = step(state)
+            if self.kernel.adapt_mass_matrix and (i + 1) % win == 0:
+                state = state._replace(
+                    inv_mass=welford_variance(state.welford),
+                    welford=welford_init(state.z),
+                )
+        state = self.kernel.finalize_warmup(state)
+
+        collected = []
+        for i in range(self.num_samples * self.thinning):
+            state = step(state)
+            if i % self.thinning == 0:
+                collected.append(state.z)
+        self._samples = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *collected)
+        # constrain if we built from a model
+        if self.kernel._transforms is not None:
+            self._samples = transform_fn(self.kernel._transforms, self._samples)
+        return self._samples
+
+    def get_samples(self):
+        return self._samples

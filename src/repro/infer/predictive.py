@@ -1,0 +1,62 @@
+"""Posterior/prior predictive sampling."""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.handlers import seed, substitute, trace
+from .util import substitute_params
+
+
+class Predictive:
+    """Vectorized predictive distribution.
+
+    posterior_samples: dict site -> (N, ...) arrays (e.g. from MCMC), or None
+    to sample from the prior / guide.
+    """
+
+    def __init__(
+        self,
+        model: Callable,
+        posterior_samples: Optional[Dict] = None,
+        guide: Optional[Callable] = None,
+        params: Optional[Dict] = None,
+        num_samples: Optional[int] = None,
+        return_sites: Optional[list] = None,
+    ):
+        if posterior_samples is not None and guide is not None:
+            raise ValueError("pass either posterior_samples or guide, not both")
+        self.model = model
+        self.posterior_samples = posterior_samples
+        self.guide = guide
+        self.params = params or {}
+        self.num_samples = num_samples or (
+            len(jax.tree_util.tree_leaves(posterior_samples)[0]) if posterior_samples else 1
+        )
+        self.return_sites = return_sites
+
+    def __call__(self, rng_key, *args, **kwargs):
+        def single(key, sample):
+            model = substitute_params(self.model, self.params)
+            if self.guide is not None:
+                key_g, key = jax.random.split(key)
+                guide_tr = trace(
+                    seed(substitute_params(self.guide, self.params), key_g)
+                ).get_trace(*args, **kwargs)
+                sample = {
+                    n: guide_tr[n]["value"] for n in guide_tr.stochastic_nodes()
+                }
+            if sample:
+                model = substitute(model, data=sample)
+            tr = trace(seed(model, key)).get_trace(*args, **kwargs)
+            sites = self.return_sites or [
+                n for n, s in tr.nodes.items() if s["type"] in ("sample", "deterministic")
+            ]
+            return {n: tr[n]["value"] for n in sites if n in tr.nodes}
+
+        keys = jax.random.split(rng_key, self.num_samples)
+        if self.posterior_samples is not None:
+            return jax.vmap(single)(keys, self.posterior_samples)
+        return jax.vmap(lambda k: single(k, {}))(keys)

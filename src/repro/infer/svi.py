@@ -1,0 +1,125 @@
+"""Stochastic variational inference driver (paper Fig. 1: `pyro.infer.SVI`).
+
+Functional API designed for pjit: `init` traces model+guide to discover
+param sites (storing them *unconstrained*), and `update` is a pure function
+(state, rng, batch) -> (state, loss) suitable for jax.jit / pjit with sharded
+optimizer state. A thin stateful wrapper mirrors Pyro's `svi.step(batch)`.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.handlers import collect_params, seed, substitute, trace
+from ..distributions import biject_to, constraints
+from ..optim.optimizers import Optimizer
+from .elbo import Trace_ELBO
+from .util import substitute_params
+
+
+class SVIState(NamedTuple):
+    optim_state: Any
+    rng_key: jax.Array
+    step: jax.Array
+
+
+class SVI:
+    def __init__(
+        self,
+        model: Callable,
+        guide: Callable,
+        optim: Optimizer,
+        loss: Optional[Trace_ELBO] = None,
+    ):
+        self.model = model
+        self.guide = guide
+        self.optim = optim
+        self.loss = loss or Trace_ELBO()
+        self._constraints: Dict[str, Any] = {}
+
+    # -- param discovery -----------------------------------------------------
+    def _find_params(self, rng_key, *args, **kwargs) -> Dict[str, Any]:
+        """Trace guide then model, collecting `param` sites (guide first, so
+        guide-owned params win name clashes, as in Pyro's param store)."""
+        params: Dict[str, Any] = {}
+        key_g, key_m = jax.random.split(rng_key)
+        with collect_params() as cp_g:
+            with trace() as tr_g:
+                seed(self.guide, key_g)(*args, **kwargs)
+        with collect_params() as cp_m:
+            # replay latents so the model sees guide values (cheap + robust)
+            from ..core.handlers import replay
+
+            with trace():
+                replay(seed(self.model, key_m), tr_g)(*args, **kwargs)
+        merged = {**cp_m.params, **cp_g.params}
+        self._constraints = {**cp_m.constraints, **cp_g.constraints}
+        # store unconstrained
+        unconstrained = {}
+        for name, value in merged.items():
+            c = self._constraints.get(name) or constraints.real
+            unconstrained[name] = biject_to(c).inv(value)
+        return unconstrained
+
+    def init(self, rng_key, *args, **kwargs) -> SVIState:
+        key_init, key_state = jax.random.split(rng_key)
+        params = self._find_params(key_init, *args, **kwargs)
+        optim_state = self.optim.init(params)
+        return SVIState(optim_state, key_state, jnp.zeros((), jnp.int32))
+
+    # -- pure update (jit/pjit this) ------------------------------------------
+    def update(self, state: SVIState, *args, **kwargs) -> Tuple[SVIState, jax.Array]:
+        rng_key, rng_step = jax.random.split(state.rng_key)
+        params = self.optim.get_params(state.optim_state)
+
+        def loss_fn(p):
+            loss, surrogate = self.loss.loss_with_surrogate(
+                rng_step, p, self.model, self.guide, *args, **kwargs
+            )
+            return surrogate, loss
+
+        grads, loss = jax.grad(loss_fn, has_aux=True)(params)
+        optim_state = self.optim.update(grads, state.optim_state)
+        return SVIState(optim_state, rng_key, state.step + 1), loss
+
+    def evaluate(self, state: SVIState, *args, **kwargs) -> jax.Array:
+        params = self.optim.get_params(state.optim_state)
+        return self.loss.loss(state.rng_key, params, self.model, self.guide, *args, **kwargs)
+
+    # -- params in constrained space -----------------------------------------
+    def get_params(self, state: SVIState) -> Dict[str, Any]:
+        unconstrained = self.optim.get_params(state.optim_state)
+        out = {}
+        for name, value in unconstrained.items():
+            c = self._constraints.get(name) or constraints.real
+            out[name] = biject_to(c)(value)
+        return out
+
+    # -- Pyro-style stateful convenience ---------------------------------------
+    def run(self, rng_key, num_steps: int, *args, progress: bool = False, **kwargs):
+        state = self.init(rng_key, *args, **kwargs)
+        update = jax.jit(lambda s: self.update(s, *args, **kwargs))
+        losses = []
+        for i in range(num_steps):
+            state, loss = update(state)
+            losses.append(loss)
+        return state, jnp.stack(losses)
+
+
+class SVIRunner:
+    """Stateful wrapper mirroring the paper's `svi.step(batch)` usage."""
+
+    def __init__(self, svi: SVI, rng_key, *args, **kwargs):
+        self.svi = svi
+        self.state = svi.init(rng_key, *args, **kwargs)
+        self._update = jax.jit(svi.update)
+
+    def step(self, *args, **kwargs) -> float:
+        self.state, loss = self._update(self.state, *args, **kwargs)
+        return float(loss)
+
+    @property
+    def params(self):
+        return self.svi.get_params(self.state)

@@ -1,0 +1,117 @@
+"""Shared inference utilities: constrained<->unconstrained bridging,
+log-density evaluation, initialization strategies."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import handlers
+from ..core.handlers import Trace, seed, substitute, trace
+from ..distributions import biject_to, constraints
+from ..distributions.util import sum_rightmost
+
+
+def log_density(
+    model: Callable, args: tuple, kwargs: dict, params: Dict[str, Any]
+) -> Tuple[jax.Array, Trace]:
+    """Joint log-density of `model` at substituted values (constrained space)."""
+    model = substitute(model, data=params)
+    tr = trace(model).get_trace(*args, **kwargs)
+    return tr.log_prob_sum(), tr
+
+
+def _param_substitute_fn(params: Dict[str, Any], msg: Dict[str, Any]):
+    """Substitute fn that maps *unconstrained* optimizer params into
+    constrained space at each `param` site."""
+    if msg["type"] != "param":
+        return None
+    name = msg["name"]
+    if name not in params:
+        return None
+    constraint = msg["kwargs"].get("constraint") or constraints.real
+    transform = biject_to(constraint)
+    return transform(params[name])
+
+
+def substitute_params(fn: Callable, params: Dict[str, Any]):
+    """Wrap `fn` so its param sites read (transformed) values from `params`."""
+    return substitute(fn, substitute_fn=partial(_param_substitute_fn, params))
+
+
+def transform_fn(transforms: Dict[str, Any], params: Dict[str, Any], invert=False):
+    """Apply per-site bijectors to a dict of values."""
+    out = {}
+    for name, value in params.items():
+        t = transforms.get(name)
+        if t is None:
+            out[name] = value
+        else:
+            out[name] = t.inv(value) if invert else t(value)
+    return out
+
+
+def constrain_fn(
+    model: Callable, args: tuple, kwargs: dict, transforms: Dict[str, Any], unconstrained: Dict[str, Any]
+) -> Dict[str, Any]:
+    return transform_fn(transforms, unconstrained)
+
+
+def potential_energy(
+    model: Callable,
+    args: tuple,
+    kwargs: dict,
+    transforms: Dict[str, Any],
+    unconstrained_params: Dict[str, Any],
+) -> jax.Array:
+    """-log p(constrain(z), obs) - log|J| : the HMC/NUTS target."""
+    constrained = {}
+    log_jac = 0.0
+    for name, z in unconstrained_params.items():
+        t = transforms.get(name)
+        if t is None:
+            constrained[name] = z
+        else:
+            x = t(z)
+            constrained[name] = x
+            lad = t.log_abs_det_jacobian(z, x)
+            log_jac = log_jac + jnp.sum(lad)
+    lp, _ = log_density(model, args, kwargs, constrained)
+    return -(lp + log_jac)
+
+
+def get_model_transforms(
+    rng_key, model: Callable, args: tuple = (), kwargs: Optional[dict] = None
+) -> Tuple[Dict[str, Any], Dict[str, Any], Trace]:
+    """Trace the model once to find latent sites, their supports, and initial
+    values; returns (transforms, initial unconstrained values, trace)."""
+    kwargs = kwargs or {}
+    tr = trace(seed(model, rng_key)).get_trace(*args, **kwargs)
+    transforms, inits = {}, {}
+    for name, site in tr.nodes.items():
+        if site["type"] == "sample" and not site["is_observed"]:
+            support = site["fn"].support
+            if getattr(site["fn"], "is_discrete", False):
+                raise ValueError(
+                    f"site '{name}' is discrete; HMC/NUTS requires continuous latents "
+                    "(marginalize or use SVI with enumeration)"
+                )
+            t = biject_to(support)
+            transforms[name] = t
+            inits[name] = t.inv(site["value"])
+    return transforms, inits, tr
+
+
+def init_to_uniform(rng_key, inits: Dict[str, Any], radius: float = 2.0) -> Dict[str, Any]:
+    out = {}
+    for i, (name, v) in enumerate(sorted(inits.items())):
+        k = jax.random.fold_in(rng_key, i)
+        out[name] = jax.random.uniform(k, jnp.shape(v), minval=-radius, maxval=radius)
+    return out
+
+
+def log_mean_exp(x, axis=0):
+    n = x.shape[axis] if hasattr(x, "shape") and x.ndim else 1
+    return jax.scipy.special.logsumexp(x, axis=axis) - jnp.log(n)

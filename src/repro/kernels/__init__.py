@@ -1,0 +1,3 @@
+from .ops import categorical_logprob, flash_attention, ssd_scan
+
+__all__ = ["categorical_logprob", "flash_attention", "ssd_scan"]

@@ -1,0 +1,71 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On this CPU container the kernels run with interpret=True (Pallas executes
+the kernel body in Python for correctness); on TPU set
+``REPRO_PALLAS_INTERPRET=0`` (or rely on the default platform check) to get
+the compiled Mosaic kernels.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from .categorical_logprob import categorical_logprob_flat
+from .flash_attention import flash_attention_gqa
+from .ssd_scan import ssd_scan_chunked
+
+
+def _interpret() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 256, block_k: int = 512):
+    """q: (B, H, Sq, d); k/v: (B, K, Skv, d), H % K == 0. Returns (B,H,Sq,d)."""
+    B, H, Sq, d = q.shape
+    K, Skv = k.shape[1], k.shape[2]
+    g = H // K
+    qr = q.reshape(B, K, g, Sq, d).reshape(B * K, g, Sq, d)
+    kr = k.reshape(B * K, Skv, d)
+    vr = v.reshape(B * K, Skv, d)
+    out = flash_attention_gqa(
+        qr, kr, vr, causal=causal, block_q=block_q, block_k=block_k,
+        interpret=_interpret(),
+    )
+    return out.reshape(B, K, g, Sq, d).reshape(B, H, Sq, d)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_v"))
+def categorical_logprob(logits, tokens, *, block_t: int = 256, block_v: int = 2048):
+    """logits: (..., V); tokens: (...). Returns per-token log p, f32."""
+    V = logits.shape[-1]
+    batch_shape = logits.shape[:-1]
+    out = categorical_logprob_flat(
+        logits.reshape(-1, V), tokens.reshape(-1).astype(jnp.int32),
+        block_t=block_t, block_v=block_v, interpret=_interpret(),
+    )
+    return out.reshape(batch_shape)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan(x, dt, A, B, C, *, chunk: int = 128):
+    """Mamba-2 SSD. x: (b,s,h,p), dt: (b,s,h), A: (h,), B/C: (b,s,n).
+    Returns y: (b,s,h,p) float32. s must be a multiple of `chunk`
+    (models/ssm.ssd_block pads)."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    Q = chunk
+    C_ = s // Q
+    xr = x.transpose(0, 2, 1, 3).reshape(b, h, C_, Q, p)
+    dtr = dt.transpose(0, 2, 1).reshape(b, h, C_, Q).astype(jnp.float32)
+    dAr = dtr * A[None, :, None, None]
+    Br = B.reshape(b, C_, Q, n)
+    Cr = C.reshape(b, C_, Q, n)
+    y = ssd_scan_chunked(xr, dAr, dtr, Br, Cr, interpret=_interpret())
+    return y.reshape(b, h, s, p).transpose(0, 2, 1, 3)

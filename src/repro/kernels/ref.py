@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True) -> jax.Array:
+    """q: (B,H,Sq,d), k/v: (B,K,Skv,d) with H % K == 0. f32 softmax."""
+    B, H, Sq, d = q.shape
+    K, Skv = k.shape[1], k.shape[2]
+    g = H // K
+    qg = q.reshape(B, K, g, Sq, d)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qg.astype(jnp.float32), k.astype(jnp.float32))
+    s = s / (d ** 0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((Sq, Skv), bool), Skv - Sq)
+        s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, Sq, d).astype(q.dtype)
+
+
+def categorical_logprob_ref(logits, tokens) -> jax.Array:
+    """logits: (..., V) f32/bf16; tokens: (...) int32. Returns (...) f32:
+    log_softmax(logits)[token] — the LM observe-site hot spot."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    tok = jnp.take_along_axis(logits, tokens[..., None], axis=-1)[..., 0]
+    return tok - lse
+
+
+def ssd_scan_ref(x, dt, A, B, C, *, chunk: int) -> jax.Array:
+    """Mamba-2 SSD (see models/ssm.ssd_reference; re-exported here so kernel
+    tests depend only on kernels.ref)."""
+    from ..models.ssm import ssd_reference
+
+    return ssd_reference(x, dt, A, B, C, chunk)

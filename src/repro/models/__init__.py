@@ -1,0 +1,23 @@
+from .config import ModelConfig
+from .lm import (
+    forward,
+    init_cache,
+    init_params,
+    lm_program,
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+    nll_loss,
+)
+
+__all__ = [
+    "ModelConfig",
+    "forward",
+    "init_cache",
+    "init_params",
+    "lm_program",
+    "make_decode_step",
+    "make_prefill_step",
+    "make_train_step",
+    "nll_loss",
+]

@@ -1,0 +1,153 @@
+"""Model configuration — one dataclass covers all 10 assigned families
+(dense / MoE / MLA / SSM / hybrid / audio / vlm backbones)."""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid
+    n_layers: int
+    d_model: int
+    vocab: int
+    # attention
+    n_heads: int = 0  # 0 -> attention-free (ssm)
+    n_kv_heads: int = 0
+    d_ff: int = 0
+    head_dim: Optional[int] = None  # default d_model // n_heads
+    attn_bias: bool = False  # qwen1.5 QKV bias
+    qk_norm: bool = False  # qwen3 per-head RMSNorm on q,k
+    rope_theta: float = 10000.0
+    window: Optional[int] = None  # local attention window (recurrentgemma)
+    # MoE
+    moe: bool = False
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    d_expert: Optional[int] = None  # fine-grained expert ffn dim (deepseek)
+    moe_impl: str = "einsum"  # einsum (GShard dispatch, baseline) | sort (optimized)
+    moe_group: int = 512  # GShard token-group size (dispatch is O(T*k*cf*group))
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+    # MLA (deepseek-v2)
+    mla: bool = False
+    kv_lora_rank: int = 0
+    qk_rope_dim: int = 64
+    qk_nope_dim: int = 128
+    v_head_dim: int = 128
+    # SSM (mamba2 SSD)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_headdim: int = 64
+    ssm_chunk: int = 128
+    conv_width: int = 4
+    # hybrid (recurrentgemma): layer pattern, e.g. ("rglru","rglru","attn")
+    pattern: Tuple[str, ...] = ()
+    lru_width: Optional[int] = None
+    # modality frontend stub
+    modality: str = "text"  # text | audio | vlm
+    # numerics / implementation
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    tie_embeddings: bool = False
+    use_pallas: bool = False  # flip on for real-TPU flash attention / logprob
+    remat: bool = True  # activation checkpointing per layer
+    seq_parallel: bool = False  # shard the residual stream's S dim on 'model'
+    # (sequence parallelism: turns TP activation all-reduces into
+    # reduce-scatter + all-gather pairs; §Perf hillclimb)
+    remat_policy: str = "residual"  # residual (save bf16 stream only) | dots (baseline)
+    attn_impl: str = "flash"  # flash (custom-vjp, recompute bwd) | blockwise (baseline)
+    # probabilistic extras (the paper's technique as a feature)
+    bayesian_last_layer: bool = False  # lift lm_head to a sampled latent
+
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim is not None:
+            return self.head_dim
+        return self.d_model // max(self.n_heads, 1)
+
+    @property
+    def d_inner(self) -> int:  # ssm inner width
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_nheads(self) -> int:
+        return self.d_inner // self.ssm_headdim
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # -- parameter count (N for MODEL_FLOPS = 6·N·D roofline term) ---------
+    def param_count(self, active_only: bool = False) -> int:
+        D, V, L = self.d_model, self.vocab, self.n_layers
+        total = V * D  # embed
+        if not self.tie_embeddings:
+            total += D * V
+        total += D  # final norm
+        hd = self.resolved_head_dim
+        for i in range(L):
+            kind = self.layer_kind(i)
+            if kind == "ssd":
+                di, ns = self.d_inner, self.ssm_state
+                nh = self.ssm_nheads
+                total += D * (2 * di + 2 * ns + nh)  # in_proj(z,x) + B,C + dt
+                total += self.conv_width * (di + 2 * ns)
+                total += nh * 3  # A_log, D skip, dt_bias
+                total += di  # gated RMSNorm
+                total += di * D  # out proj
+                total += D  # norm
+                continue
+            if kind == "rglru":
+                w = self.lru_width or self.d_model
+                total += D * w * 2  # input + output-gate projections
+                total += self.conv_width * w  # temporal conv
+                blocks = max(self.n_heads, 1)
+                total += 2 * w * (w // blocks)  # block-diagonal RG-LRU gates
+                total += 3 * w  # Lambda + gate biases
+                total += w * D  # out proj
+                total += 2 * D  # two norms
+                total += 3 * D * self.d_ff  # every Griffin layer has an MLP
+                continue
+            # attention
+            n_kv = self.n_kv_heads or self.n_heads
+            if self.mla:
+                r = self.kv_lora_rank
+                qd = self.qk_nope_dim + self.qk_rope_dim
+                total += D * self.n_heads * qd  # q proj
+                total += D * (r + self.qk_rope_dim)  # kv down
+                total += r * self.n_heads * (self.qk_nope_dim + self.v_head_dim)  # kv up
+                total += self.n_heads * self.v_head_dim * D  # o proj
+            else:
+                total += D * self.n_heads * hd + 2 * D * n_kv * hd + self.n_heads * hd * D
+                if self.attn_bias:
+                    total += (self.n_heads + 2 * n_kv) * hd
+                if self.qk_norm:
+                    total += 2 * hd
+            total += 2 * D  # two norms
+            # mlp / moe
+            if self.moe:
+                de = self.d_expert or self.d_ff
+                routed = self.n_experts * 3 * D * de
+                shared = self.n_shared_experts * 3 * D * de
+                total += D * self.n_experts  # router
+                if active_only:
+                    total += self.top_k * 3 * D * de + shared
+                else:
+                    total += routed + shared
+            else:
+                total += 3 * D * self.d_ff  # SwiGLU: gate, up, down
+        return total
+
+    def layer_kind(self, i: int) -> str:
+        if self.family == "ssm":
+            return "ssd"
+        if self.family == "hybrid" and self.pattern:
+            return self.pattern[i % len(self.pattern)]
+        return "attn"
+
+    def n_layers_of(self, kind: str) -> int:
+        return sum(1 for i in range(self.n_layers) if self.layer_kind(i) == kind)

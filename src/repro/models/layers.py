@@ -1,0 +1,618 @@
+"""Transformer building blocks shared by all 10 assigned architectures.
+
+Pure functions over explicit parameter pytrees (functional JAX style). The
+probabilistic-program wrapper (`lm.py`) registers these pytrees as `param`
+sites via `core.primitives.module`, so the same code serves both the raw-JAX
+baseline (Fig-3 comparison) and the PPL training path.
+
+Conventions
+-----------
+* Weights are stored (in_dim, out_dim); activations are (B, S, D).
+* All matmuls run in `cfg.compute_dtype` with float32 accumulation
+  (`preferred_element_type`), softmax/norms in float32.
+* `mode` is one of "train" | "prefill" | "decode". decode takes a cache and a
+  scalar position; train/prefill process a full sequence causally.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# initialization helpers
+# ---------------------------------------------------------------------------
+
+
+def _dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = (1.0 / fan_in) ** 0.5 if scale is None else scale
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def rmsnorm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + weight.astype(jnp.float32))).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, hd/2)
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    sin, cos = sin[:, :, None, :], cos[:, :, None, :]  # broadcast over heads
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA / MQA / local-window), full-sequence and single-token decode
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ModelConfig) -> Params:
+    D, H = cfg.d_model, cfg.n_heads
+    K = cfg.n_kv_heads or H
+    hd = cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+    p = {
+        "wq": _dense_init(ks[0], (D, H * hd), dt),
+        "wk": _dense_init(ks[1], (D, K * hd), dt),
+        "wv": _dense_init(ks[2], (D, K * hd), dt),
+        "wo": _dense_init(ks[3], (H * hd, D), dt),
+    }
+    if cfg.attn_bias:
+        p["bq"] = jnp.zeros((H * hd,), dt)
+        p["bk"] = jnp.zeros((K * hd,), dt)
+        p["bv"] = jnp.zeros((K * hd,), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dt)
+        p["k_norm"] = jnp.zeros((hd,), dt)
+    return p
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_sdpa(q, k, v, causal: bool = True, window: Optional[int] = None,
+               block_q: int = 1024):
+    """Flash-style attention with a recompute-in-backward custom VJP.
+
+    Forward == `_sdpa_blockwise`; backward recomputes each q-block's probs
+    from (q, k, v, lse) instead of saving the (Sq, Skv) probs tensor — the
+    §Perf hillclimb change that removes the dominant HBM term of the train
+    cells (XLA otherwise stacks per-block f32 probs across the layer scan).
+    q: (B,Hq,Sq,hd); k/v: (B,Hkv,Skv,hd_v). Returns (B,Hq,Sq,hd_v).
+    """
+    out, _ = _flash_fwd_impl(q, k, v, causal, window, block_q)
+    return out
+
+
+def _flash_mask(iq, bq, Skv, causal, window):
+    q_pos = iq * bq + jnp.arange(bq)[:, None]
+    kv_pos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((bq, Skv), bool)
+    if causal:
+        mask &= kv_pos <= q_pos
+    if window is not None:
+        mask &= kv_pos > q_pos - window
+    return mask
+
+
+def _flash_fwd_impl(q, k, v, causal, window, block_q):
+    B, Hq, Sq, hd = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    bq = min(block_q, Sq)
+    nq = Sq // bq
+    qg = q.reshape(B, Hkv, g, nq, bq, hd)
+    scale = 1.0 / (hd ** 0.5)
+
+    def body(_, iq_qb):
+        iq, qb = iq_qb
+        s = jnp.einsum("bkgqh,bksh->bkgqs", qb, k,
+                       preferred_element_type=jnp.float32) * scale
+        s = jnp.where(_flash_mask(iq, bq, Skv, causal, window)[None, None, None],
+                      s, -1e30)
+        lse = jax.scipy.special.logsumexp(s, axis=-1)  # (b,k,g,bq)
+        p = jnp.exp(s - lse[..., None])
+        ob = jnp.einsum("bkgqs,bksh->bkgqh", p.astype(v.dtype), v)
+        return None, (ob, lse)
+
+    _, (o, lse) = jax.lax.scan(body, None, (jnp.arange(nq), qg.transpose(3, 0, 1, 2, 4, 5)))
+    o = o.transpose(1, 2, 3, 0, 4, 5).reshape(B, Hq, Sq, v.shape[-1])
+    lse = lse.transpose(1, 2, 3, 0, 4).reshape(B, Hq, Sq)
+    return o, lse
+
+
+def _flash_fwd(q, k, v, causal, window, block_q):
+    out, lse = _flash_fwd_impl(q, k, v, causal, window, block_q)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, window, block_q, res, dout):
+    q, k, v, out, lse = res
+    B, Hq, Sq, hd = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    bq = min(block_q, Sq)
+    nq = Sq // bq
+    scale = 1.0 / (hd ** 0.5)
+    qg = q.reshape(B, Hkv, g, nq, bq, hd).transpose(3, 0, 1, 2, 4, 5)
+    og = out.reshape(B, Hkv, g, nq, bq, -1).transpose(3, 0, 1, 2, 4, 5)
+    dog = dout.reshape(B, Hkv, g, nq, bq, -1).transpose(3, 0, 1, 2, 4, 5)
+    lseg = lse.reshape(B, Hkv, g, nq, bq).transpose(3, 0, 1, 2, 4)
+
+    def body(carry, xs):
+        dk_acc, dv_acc = carry
+        iq, qb, ob, dob, lseb = xs
+        s = jnp.einsum("bkgqh,bksh->bkgqs", qb, k,
+                       preferred_element_type=jnp.float32) * scale
+        s = jnp.where(_flash_mask(iq, bq, Skv, causal, window)[None, None, None],
+                      s, -1e30)
+        p = jnp.exp(s - lseb[..., None])  # recomputed probs (bq, Skv)
+        dp = jnp.einsum("bkgqh,bksh->bkgqs", dob.astype(jnp.float32),
+                        v.astype(jnp.float32))
+        delta = jnp.sum(dob.astype(jnp.float32) * ob.astype(jnp.float32), -1)
+        ds = p * (dp - delta[..., None]) * scale
+        dqb = jnp.einsum("bkgqs,bksh->bkgqh", ds, k.astype(jnp.float32))
+        dk_acc = dk_acc + jnp.einsum("bkgqs,bkgqh->bksh", ds, qb.astype(jnp.float32))
+        dv_acc = dv_acc + jnp.einsum("bkgqs,bkgqh->bksh", p, dob.astype(jnp.float32))
+        return (dk_acc, dv_acc), dqb
+
+    zeros_k = jnp.zeros(k.shape, jnp.float32)
+    zeros_v = jnp.zeros(v.shape, jnp.float32)
+    (dk, dv), dqg = jax.lax.scan(
+        body, (zeros_k, zeros_v), (jnp.arange(nq), qg, og, dog, lseg)
+    )
+    dq = dqg.transpose(1, 2, 3, 0, 4, 5).reshape(B, Hq, Sq, hd)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+flash_sdpa.defvjp(_flash_fwd, _flash_bwd)
+
+
+def _sdpa_blockwise(q, k, v, *, causal: bool, window: Optional[int], block_q: int = 1024):
+    """Memory-bounded attention for long sequences: lax.scan over q blocks so
+    no (Sq, Skv) tensor is ever materialized (the jnp analogue of the Pallas
+    flash kernel — same roofline shape, XLA-lowered). q: (B,Hq,Sq,hd)."""
+    B, Hq, Sq, hd = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    bq = min(block_q, Sq)
+    nq = Sq // bq
+    qg = q.reshape(B, Hkv, g, nq, bq, hd)
+    kv_pos = jnp.arange(Skv)[None, :]
+
+    def body(_, iq_qblk):
+        iq, qb = iq_qblk  # qb: (B,Hkv,g,bq,hd)
+        s = jnp.einsum("bkgqh,bksh->bkgqs", qb, k,
+                       preferred_element_type=jnp.float32) / (hd ** 0.5)
+        q_pos = iq * bq + jnp.arange(bq)[:, None]
+        mask = jnp.ones((bq, Skv), bool)
+        if causal:
+            mask &= kv_pos <= q_pos
+        if window is not None:
+            mask &= kv_pos > q_pos - window
+        s = jnp.where(mask[None, None, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        ob = jnp.einsum("bkgqs,bksh->bkgqh", p.astype(v.dtype), v)
+        return None, ob
+
+    _, o = jax.lax.scan(body, None, (jnp.arange(nq), qg.transpose(3, 0, 1, 2, 4, 5)))
+    o = o.transpose(1, 2, 3, 0, 4, 5)  # (B,Hkv,g,nq,bq,hd_v)
+    return o.reshape(B, Hq, Sq, v.shape[-1])
+
+
+def _sdpa(q, k, v, *, causal: bool, window: Optional[int], q_offset, kv_len_valid=None):
+    """q: (B, Hq, Sq, hd), k/v: (B, Hkv, Skv, hd). GQA by head-group einsum.
+    q_offset: absolute position of q[0] (0 for train/prefill, pos for decode).
+    kv_len_valid: number of valid cache entries (decode with static cache)."""
+    B, Hq, Sq, hd = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    groups = Hq // Hkv
+    q = q.reshape(B, Hkv, groups, Sq, hd)
+    scores = jnp.einsum(
+        "bkgqh,bksh->bkgqs", q, k, preferred_element_type=jnp.float32
+    ) / (hd ** 0.5)
+    q_pos = q_offset + jnp.arange(Sq)[:, None]  # (Sq, 1)
+    kv_pos = jnp.arange(Skv)[None, :]  # (1, Skv)
+    mask = jnp.ones((Sq, Skv), dtype=bool)
+    if causal:
+        mask &= kv_pos <= q_pos
+    if window is not None:
+        mask &= kv_pos > q_pos - window
+    if kv_len_valid is not None:
+        mask &= kv_pos < kv_len_valid
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bksh->bkgqh", probs.astype(v.dtype), v)
+    return out.reshape(B, Hq, Sq, hd)
+
+
+def attention(
+    p: Params,
+    cfg: ModelConfig,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    mode: str = "train",
+    cache: Optional[Dict[str, jax.Array]] = None,
+    window: Optional[int] = None,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """x: (B, S, D). Returns (out, new_cache)."""
+    B, S, D = x.shape
+    H = cfg.n_heads
+    K = cfg.n_kv_heads or H
+    hd = cfg.resolved_head_dim
+
+    q = jnp.einsum("bsd,dk->bsk", x, p["wq"], preferred_element_type=jnp.float32)
+    k = jnp.einsum("bsd,dk->bsk", x, p["wk"], preferred_element_type=jnp.float32)
+    v = jnp.einsum("bsd,dk->bsk", x, p["wv"], preferred_element_type=jnp.float32)
+    if cfg.attn_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, H, hd).astype(x.dtype)
+    k = k.reshape(B, S, K, hd).astype(x.dtype)
+    v = v.reshape(B, S, K, hd).astype(x.dtype)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"])
+        k = rmsnorm(k, p["k_norm"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q, k, v = (t.transpose(0, 2, 1, 3) for t in (q, k, v))  # (B, H, S, hd)
+
+    if mode == "decode":
+        assert cache is not None and S == 1
+        pos = positions[0, 0]  # scalar decode position
+        L = cache["k"].shape[2]
+        # ring buffer: windowed layers keep only the last `window` entries;
+        # full-attention caches have L >= max position so slot == pos.
+        slot = pos % L
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=2)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=2)
+        # every cached entry is already <= pos and > pos - window, so no
+        # positional mask is needed beyond validity (softmax is permutation-
+        # invariant over the kv axis; RoPE was applied pre-cache).
+        out = _sdpa(q, ck, cv, causal=False, window=None,
+                    q_offset=pos, kv_len_valid=jnp.minimum(pos + 1, L))
+        new_cache = {"k": ck, "v": cv}
+    else:
+        if cfg.use_pallas and window is None and S >= 128:
+            from ..kernels.ops import flash_attention
+
+            out = flash_attention(q, k, v, causal=True)
+        elif S >= 2048:
+            # long sequences: flash path — never materializes (S, S) in fwd
+            # and recomputes probs in bwd (custom VJP); 'blockwise' keeps
+            # XLA's default VJP (saves probs) as the baseline
+            bq = 256 if S >= 16384 else 1024
+            if cfg.attn_impl == "flash":
+                out = flash_sdpa(q, k, v, True, window, bq)
+            else:
+                out = _sdpa_blockwise(q, k, v, causal=True, window=window, block_q=bq)
+        else:
+            out = _sdpa(q, k, v, causal=True, window=window, q_offset=0)
+        if mode == "prefill":
+            if cache is not None:
+                # write into the preallocated (possibly larger / ring) buffer
+                L = cache["k"].shape[2]
+                if L >= S:
+                    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, 0, axis=2)
+                    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, 0, axis=2)
+                else:  # windowed ring: keep last L entries at slot p % L
+                    ck = jnp.roll(k[:, :, -L:], (S - L) % L, axis=2)
+                    cv = jnp.roll(v[:, :, -L:], (S - L) % L, axis=2)
+                new_cache = {"k": ck, "v": cv}
+            else:
+                new_cache = {"k": k, "v": v}
+        else:
+            new_cache = None
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, H * hd)
+    out = jnp.einsum("bsk,kd->bsd", out, p["wo"], preferred_element_type=jnp.float32)
+    return out.astype(x.dtype), new_cache
+
+
+def init_attention_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> Dict[str, jax.Array]:
+    K = cfg.n_kv_heads or cfg.n_heads
+    hd = cfg.resolved_head_dim
+    shape = (batch, K, max_len, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+# ---------------------------------------------------------------------------
+# MLA — multi-head latent attention (DeepSeek-V2); compressed KV cache
+# ---------------------------------------------------------------------------
+
+
+def init_mla(key, cfg: ModelConfig) -> Params:
+    D, H = cfg.d_model, cfg.n_heads
+    r = cfg.kv_lora_rank
+    qd = cfg.qk_nope_dim + cfg.qk_rope_dim
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 5)
+    return {
+        "wq": _dense_init(ks[0], (D, H * qd), dt),
+        "wkv_d": _dense_init(ks[1], (D, r + cfg.qk_rope_dim), dt),
+        "wk_u": _dense_init(ks[2], (r, H * cfg.qk_nope_dim), dt),
+        "wv_u": _dense_init(ks[3], (r, H * cfg.v_head_dim), dt),
+        "wo": _dense_init(ks[4], (H * cfg.v_head_dim, D), dt),
+    }
+
+
+def mla_attention(
+    p: Params,
+    cfg: ModelConfig,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    mode: str = "train",
+    cache: Optional[Dict[str, jax.Array]] = None,
+    absorb: bool = False,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """DeepSeek-V2 MLA. The KV cache stores only the rank-`r` latent `c_kv`
+    plus the shared rope key (the paper's memory saving).  `absorb=True` uses
+    the weight-absorbed decode formulation (scores computed in latent space —
+    never materializing per-head K/V), the optimization DeepSeek describe for
+    inference; `absorb=False` materializes K/V (train/prefill path)."""
+    B, S, D = x.shape
+    H = cfg.n_heads
+    r, nd, rd, vd = cfg.kv_lora_rank, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+
+    q = jnp.einsum("bsd,dk->bsk", x, p["wq"], preferred_element_type=jnp.float32)
+    q = q.reshape(B, S, H, nd + rd).astype(x.dtype)
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv = jnp.einsum("bsd,dk->bsk", x, p["wkv_d"], preferred_element_type=jnp.float32)
+    c_kv, k_rope = kv[..., :r].astype(x.dtype), kv[..., r:].astype(x.dtype)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]  # shared head
+
+    if mode == "decode":
+        assert cache is not None and S == 1
+        pos = positions[0, 0]
+        c_kv = jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], c_kv, pos, axis=1)
+        k_rope = jax.lax.dynamic_update_slice_in_dim(cache["k_rope"], k_rope, pos, axis=1)
+        new_cache = {"c_kv": c_kv, "k_rope": k_rope}
+        kv_valid = pos + 1
+        q_offset = pos
+    else:
+        if mode == "prefill":
+            if cache is not None:
+                cc = jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], c_kv, 0, axis=1)
+                cr = jax.lax.dynamic_update_slice_in_dim(cache["k_rope"], k_rope, 0, axis=1)
+                new_cache = {"c_kv": cc, "k_rope": cr}
+            else:
+                new_cache = {"c_kv": c_kv, "k_rope": k_rope}
+        else:
+            new_cache = None
+        kv_valid = None
+        q_offset = 0
+
+    Skv = c_kv.shape[1]
+    scale = 1.0 / ((nd + rd) ** 0.5)
+    if absorb:
+        # fold W_uk into q: q_lat (B,S,H,r) = q_nope @ W_uk^T(per head)
+        wk_u = p["wk_u"].reshape(r, H, nd)
+        q_lat = jnp.einsum("bshn,rhn->bshr", q_nope, wk_u, preferred_element_type=jnp.float32)
+        scores = jnp.einsum("bshr,btr->bhst", q_lat.astype(x.dtype), c_kv,
+                            preferred_element_type=jnp.float32)
+        scores = scores + jnp.einsum(
+            "bshd,btd->bhst", q_rope, k_rope, preferred_element_type=jnp.float32
+        )
+        scores = scores * scale
+        scores = _mask_scores(scores, S, Skv, q_offset, kv_valid)
+        probs = jax.nn.softmax(scores, axis=-1)
+        # out in latent space, then up-project with W_uv folded into output
+        o_lat = jnp.einsum("bhst,btr->bshr", probs.astype(x.dtype), c_kv)
+        wv_u = p["wv_u"].reshape(r, H, vd)
+        out = jnp.einsum("bshr,rhv->bshv", o_lat, wv_u, preferred_element_type=jnp.float32)
+    else:
+        k_nope = jnp.einsum("btr,rk->btk", c_kv, p["wk_u"],
+                            preferred_element_type=jnp.float32).reshape(B, Skv, H, nd)
+        v = jnp.einsum("btr,rk->btk", c_kv, p["wv_u"],
+                       preferred_element_type=jnp.float32).reshape(B, Skv, H, vd)
+        k_rope_b = jnp.broadcast_to(k_rope[:, :, None, :], (B, Skv, H, rd))
+        if S >= 2048:
+            # long sequences: fold [nope|rope] into one head dim and use the
+            # blockwise path (scale = 1/sqrt(nd+rd) matches MLA's)
+            q_cat = jnp.concatenate([q_nope, q_rope], -1).transpose(0, 2, 1, 3)
+            k_cat = jnp.concatenate(
+                [k_nope.astype(x.dtype), k_rope_b.astype(x.dtype)], -1
+            ).transpose(0, 2, 1, 3)
+            bq = 256 if S >= 16384 else 1024
+            vt = v.astype(x.dtype).transpose(0, 2, 1, 3)
+            if cfg.attn_impl == "flash":
+                out = flash_sdpa(q_cat, k_cat, vt, True, None, bq)
+            else:
+                out = _sdpa_blockwise(q_cat, k_cat, vt, causal=True, window=None, block_q=bq)
+            out = out.transpose(0, 2, 1, 3)  # (B,S,H,vd)
+        else:
+            scores = (
+                jnp.einsum("bshn,bthn->bhst", q_nope.astype(jnp.float32), k_nope)
+                + jnp.einsum("bshd,bthd->bhst", q_rope.astype(jnp.float32), k_rope_b)
+            ) * scale
+            scores = _mask_scores(scores, S, Skv, q_offset, kv_valid)
+            probs = jax.nn.softmax(scores, axis=-1)
+            out = jnp.einsum("bhst,bthv->bshv", probs, v)
+    out = out.reshape(B, S, H * vd).astype(x.dtype)
+    out = jnp.einsum("bsk,kd->bsd", out, p["wo"], preferred_element_type=jnp.float32)
+    return out.astype(x.dtype), new_cache
+
+
+def _mask_scores(scores, Sq, Skv, q_offset, kv_valid):
+    q_pos = q_offset + jnp.arange(Sq)[:, None]
+    kv_pos = jnp.arange(Skv)[None, :]
+    mask = kv_pos <= q_pos
+    if kv_valid is not None:
+        mask &= kv_pos < kv_valid
+    return jnp.where(mask[None, None], scores, -1e30)
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> Dict[str, jax.Array]:
+    return {
+        "c_kv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> Params:
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    return {
+        "wg": _dense_init(ks[0], (D, F), dt),
+        "wu": _dense_init(ks[1], (D, F), dt),
+        "wd": _dense_init(ks[2], (F, D), dt),
+    }
+
+
+def mlp(p: Params, x: jax.Array) -> jax.Array:
+    g = jnp.einsum("bsd,df->bsf", x, p["wg"], preferred_element_type=jnp.float32)
+    u = jnp.einsum("bsd,df->bsf", x, p["wu"], preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(g) * u).astype(x.dtype)
+    out = jnp.einsum("bsf,fd->bsd", h, p["wd"], preferred_element_type=jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts
+# ---------------------------------------------------------------------------
+
+
+def init_moe(key, cfg: ModelConfig) -> Params:
+    D, E = cfg.d_model, cfg.n_experts
+    de = cfg.d_expert or cfg.d_ff
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": _dense_init(ks[0], (D, E), jnp.float32),
+        "we_g": _dense_init(ks[1], (E, D, de), dt),
+        "we_u": _dense_init(ks[2], (E, D, de), dt),
+        "we_d": _dense_init(ks[3], (E, de, D), dt),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = init_mlp(ks[4], cfg, d_ff=cfg.n_shared_experts * de)
+    return p
+
+
+def _router_topk(p: Params, cfg: ModelConfig, x: jax.Array):
+    """Returns (weights (..., k) normalized, idx (..., k) int32, aux_loss)."""
+    logits = jnp.einsum("...d,de->...e", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, idx = jax.lax.top_k(probs, cfg.top_k)
+    weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
+    # load-balancing auxiliary loss (Switch/GShard form): E * sum_e f_e * P_e
+    E = cfg.n_experts
+    me = jnp.mean(probs.reshape(-1, E), axis=0)
+    ce = jnp.mean(
+        (jax.nn.one_hot(idx.reshape(-1, cfg.top_k), E).sum(-2) > 0).astype(jnp.float32),
+        axis=0,
+    ) / cfg.top_k
+    aux = E * jnp.sum(me * ce)
+    return weights, idx, aux
+
+
+def moe_einsum(p: Params, cfg: ModelConfig, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """GShard-style capacity-bucketed dispatch via one-hot einsums — the
+    pjit-friendly baseline: XLA SPMD turns the (g,e,c,d) einsums into
+    all-to-alls when experts are sharded on the `model` axis.
+
+    Tokens are re-grouped into groups of `cfg.moe_group` so the dispatch
+    one-hot is O(T * k * cf * group) — independent of the global batch
+    (GShard's G×S grouping; group == tokens-per-data-shard scale)."""
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    T = B * S
+    Sg = min(cfg.moe_group, T)
+    G = T // Sg
+    assert G * Sg == T, f"moe_group {Sg} must divide token count {T}"
+    cap = max(int(cfg.capacity_factor * k * Sg / E), 1)
+    weights, idx, aux = _router_topk(p, cfg, x)  # (B,S,k)
+
+    xg = x.reshape(G, Sg, D)
+    weights = weights.reshape(G, Sg, k)
+    idx = idx.reshape(G, Sg, k)
+
+    # position of each (token, k) within its chosen expert's bucket
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)  # (G,Sg,k,E)
+    flat = onehot.reshape(G, Sg * k, E)
+    pos = jnp.cumsum(flat, axis=1) - flat  # (G, Sg*k, E): slots before me
+    pos = jnp.einsum("gte,gte->gt", pos, flat).reshape(G, Sg, k)  # my slot
+    keep = pos < cap  # overflow tokens dropped (capacity semantics)
+    w = weights * keep
+
+    # dispatch one-hot: (G, Sg, k, E) x slot-one-hot (G, Sg, k, cap)
+    slot = jax.nn.one_hot(pos, cap, dtype=x.dtype) * keep[..., None].astype(x.dtype)
+    dispatch = jnp.einsum("gske,gskc->gsec", onehot.astype(x.dtype), slot)
+    xin = jnp.einsum("gsec,gsd->gecd", dispatch, xg)  # (G,E,cap,D)
+    h = jax.nn.silu(
+        jnp.einsum("gecd,edf->gecf", xin, p["we_g"], preferred_element_type=jnp.float32)
+    ) * jnp.einsum("gecd,edf->gecf", xin, p["we_u"], preferred_element_type=jnp.float32)
+    out_e = jnp.einsum(
+        "gecf,efd->gecd", h.astype(x.dtype), p["we_d"], preferred_element_type=jnp.float32
+    ).astype(x.dtype)
+    combine = jnp.einsum("gske,gskc,gsk->gsec", onehot.astype(x.dtype), slot, w.astype(x.dtype))
+    out = jnp.einsum("gsec,gecd->gsd", combine, out_e).reshape(B, S, D)
+    if cfg.n_shared_experts:
+        out = out + mlp(p["shared"], x)
+    return out, aux
+
+
+def moe_sort(p: Params, cfg: ModelConfig, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Dropless sort-based MoE using `jax.lax.ragged_dot` (MegaBlocks-on-TPU
+    style, cf. MaxText 'megablox') — the optimized path: no capacity waste,
+    no (e,c) one-hot tensors; grouped GEMM over expert-sorted tokens."""
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    T = B * S
+    weights, idx, aux = _router_topk(p, cfg, x)
+    xf = x.reshape(T, D)
+    eid = idx.reshape(T * k)
+    wid = weights.reshape(T * k).astype(x.dtype)
+    tok = jnp.repeat(jnp.arange(T), k)
+
+    order = jnp.argsort(eid)  # stable
+    eid_s, tok_s, w_s = eid[order], tok[order], wid[order]
+    xin = xf[tok_s]  # (T*k, D) gathered
+    group_sizes = jnp.bincount(eid_s, length=E).astype(jnp.int32)
+
+    g = jax.lax.ragged_dot(xin, p["we_g"], group_sizes)
+    u = jax.lax.ragged_dot(xin, p["we_u"], group_sizes)
+    h = (jax.nn.silu(g.astype(jnp.float32)) * u.astype(jnp.float32)).astype(x.dtype)
+    out_s = jax.lax.ragged_dot(h, p["we_d"], group_sizes)  # (T*k, D)
+    out = jnp.zeros((T, D), out_s.dtype).at[tok_s].add(out_s * w_s[:, None])
+    out = out.reshape(B, S, D)
+    if cfg.n_shared_experts:
+        out = out + mlp(p["shared"], x)
+    return out, aux
+
+
+def moe(p: Params, cfg: ModelConfig, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    if cfg.moe_impl == "sort":
+        return moe_sort(p, cfg, x)
+    return moe_einsum(p, cfg, x)

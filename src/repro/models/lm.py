@@ -1,0 +1,365 @@
+"""Unified decoder LM over all assigned architecture families, written as a
+probabilistic program (the paper's technique as a first-class feature).
+
+Structure
+---------
+* `init_params(cfg, key)`  — pure parameter initialization (pytree).
+* `forward(cfg, params, tokens_or_embeds, ...)` — pure forward; scan-over-
+  repeating-units keeps HLO size O(1) in depth; per-layer remat optional.
+* `lm_program(cfg)`        — probabilistic program: registers params as
+  `param` sites (pyro.module semantics) and observes tokens through a
+  `sample("obs", Categorical(logits), obs=...)` site under a batch `plate`.
+  SVI with no latent sites == maximum-likelihood training; `lift` the head
+  to get a Bayesian last layer.
+* `train_step` / `prefill_step` / `decode_step` builders for the launcher.
+
+Layer layout: layers are grouped into repeating *units* (`cfg.pattern`,
+length 1 for uniform archs). Unit parameters are stacked along a leading
+`n_units` axis and consumed by `lax.scan`; `L % len(pattern)` leftover
+layers are unrolled as the `tail`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from . import layers as LL
+from . import rglru as RG
+from . import ssm as SSD
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# per-layer dispatch
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(key, cfg: ModelConfig, kind: str) -> Params:
+    dt = jnp.dtype(cfg.param_dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    p: Params = {"ln1": jnp.zeros((cfg.d_model,), dt)}
+    if kind == "ssd":
+        p["core"] = SSD.init_ssd(k1, cfg)
+        return p  # mamba blocks: single norm, no separate mlp
+    if kind == "rglru":
+        p["core"] = RG.init_rglru(k1, cfg)
+    elif kind == "attn":
+        p["core"] = LL.init_mla(k1, cfg) if cfg.mla else LL.init_attention(k1, cfg)
+    else:  # pragma: no cover
+        raise ValueError(kind)
+    p["ln2"] = jnp.zeros((cfg.d_model,), dt)
+    p["mlp"] = LL.init_moe(k2, cfg) if cfg.moe else LL.init_mlp(k3, cfg)
+    return p
+
+
+def _apply_layer(
+    p: Params,
+    cfg: ModelConfig,
+    kind: str,
+    x: jax.Array,
+    positions: jax.Array,
+    mode: str,
+    cache: Optional[Dict],
+) -> Tuple[jax.Array, Optional[Dict], jax.Array]:
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = LL.rmsnorm(x, p["ln1"])
+    if kind == "ssd":
+        y, new_cache = SSD.ssd_block(p["core"], cfg, h, mode=mode, cache=cache)
+        return x + y, new_cache, aux
+    if kind == "rglru":
+        y, new_cache = RG.rglru_block(p["core"], cfg, h, mode=mode, cache=cache)
+    elif cfg.mla:
+        y, new_cache = LL.mla_attention(
+            p["core"], cfg, h, positions, mode=mode, cache=cache,
+            absorb=(mode == "decode"),
+        )
+    else:
+        y, new_cache = LL.attention(
+            p["core"], cfg, h, positions, mode=mode, cache=cache, window=cfg.window
+        )
+    x = x + y
+    h = LL.rmsnorm(x, p["ln2"])
+    if cfg.moe:
+        y, aux = LL.moe(p["mlp"], cfg, h)
+    else:
+        y = LL.mlp(p["mlp"], h)
+    return x + y, new_cache, aux
+
+
+def _init_layer_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int, dtype):
+    if kind == "ssd":
+        return SSD.init_ssd_cache(cfg, batch, dtype)
+    if kind == "rglru":
+        return RG.init_rglru_cache(cfg, batch, dtype)
+    if cfg.mla:
+        return LL.init_mla_cache(cfg, batch, max_len, dtype)
+    # local-window layers never need more than `window` cache entries
+    eff = min(max_len, cfg.window) if cfg.window else max_len
+    return LL.init_attention_cache(cfg, batch, eff, dtype)
+
+
+# ---------------------------------------------------------------------------
+# whole-model init / forward
+# ---------------------------------------------------------------------------
+
+
+def _pattern(cfg: ModelConfig) -> Tuple[str, ...]:
+    if cfg.family == "hybrid" and cfg.pattern:
+        return tuple(cfg.pattern)
+    return ("ssd",) if cfg.family == "ssm" else ("attn",)
+
+
+def _layout(cfg: ModelConfig) -> Tuple[Tuple[str, ...], int, Tuple[str, ...]]:
+    pat = _pattern(cfg)
+    n_units = cfg.n_layers // len(pat)
+    tail = tuple(pat[i] for i in range(cfg.n_layers - n_units * len(pat)))
+    return pat, n_units, tail
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    dt = jnp.dtype(cfg.param_dtype)
+    pat, n_units, tail = _layout(cfg)
+    keys = jax.random.split(key, 4)
+    params: Params = {
+        "embed": LL._dense_init(keys[0], (cfg.vocab, cfg.d_model), dt, scale=1.0),
+        "final_norm": jnp.zeros((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = LL._dense_init(keys[1], (cfg.d_model, cfg.vocab), dt)
+
+    def stack_init(kind, pos):
+        ks = jax.random.split(jax.random.fold_in(keys[2], pos), n_units)
+        return jax.vmap(lambda k: _init_layer(k, cfg, kind))(ks)
+
+    if n_units:
+        params["scan"] = {str(i): stack_init(kind, i) for i, kind in enumerate(pat)}
+    for j, kind in enumerate(tail):
+        params[f"tail_{j}"] = _init_layer(jax.random.fold_in(keys[3], j), cfg, kind)
+    return params
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    dt = jnp.dtype(cfg.compute_dtype)
+    pat, n_units, tail = _layout(cfg)
+    cache: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+    if n_units:
+        cache["scan"] = {
+            str(i): jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None], (n_units,) + x.shape),
+                _init_layer_cache(cfg, kind, batch, max_len, dt),
+            )
+            for i, kind in enumerate(pat)
+        }
+    for j, kind in enumerate(tail):
+        cache[f"tail_{j}"] = _init_layer_cache(cfg, kind, batch, max_len, dt)
+    return cache
+
+
+def forward(
+    cfg: ModelConfig,
+    params: Params,
+    inputs: jax.Array,
+    *,
+    mode: str = "train",
+    cache: Optional[Dict[str, Any]] = None,
+    positions: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Optional[Dict[str, Any]], jax.Array]:
+    """inputs: int tokens (B,S) or float embeddings (B,S,D) (modality stubs).
+    Returns (logits (B,S,V) float32, new_cache, moe_aux_loss)."""
+    from ..distributed.sharding import constrain_activation
+
+    pat, n_units, tail = _layout(cfg)
+    if jnp.issubdtype(inputs.dtype, jnp.integer):
+        x = jnp.take(params["embed"], inputs, axis=0)
+    else:
+        x = inputs.astype(jnp.dtype(cfg.compute_dtype))
+    x = x.astype(jnp.dtype(cfg.compute_dtype))
+    x = constrain_activation(x)
+    B, S = x.shape[:2]
+    if positions is None:
+        if mode == "decode":
+            assert cache is not None
+            positions = jnp.broadcast_to(cache["pos"], (B, S))
+        else:
+            positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    aux_total = jnp.zeros((), jnp.float32)
+    new_cache: Dict[str, Any] = {} if (mode != "train" and cache is not None) or mode == "prefill" else None
+    if mode == "prefill" and cache is None:
+        cache = init_cache(cfg, B, S)
+        new_cache = {}
+
+    def unit_body(x, unit_params, unit_cache):
+        """One pattern unit (len(pat) layers). Returns (x, new_unit_cache, aux)."""
+        aux = jnp.zeros((), jnp.float32)
+        ncache = {}
+        for i, kind in enumerate(pat):
+            c = unit_cache.get(str(i)) if unit_cache else None
+            x, nc, a = _apply_layer(unit_params[str(i)], cfg, kind, x, positions, mode, c)
+            sp = {1: "model"} if (cfg.seq_parallel and mode == "train") else None
+            x = constrain_activation(x, extra=sp)
+            aux += a
+            if nc is not None:
+                ncache[str(i)] = nc
+        return x, ncache, aux
+
+    if cfg.remat and mode == "train":
+        if cfg.remat_policy == "residual":
+            # Save ONLY the named bf16 residual stream between units. The
+            # dots-saveable policy stacks f32 matmul outputs across the layer
+            # scan — 2 x (L, B, S, D) f32 buffers that dominated the memory
+            # roofline term (qwen3 hillclimb, EXPERIMENTS §Perf iter 2b).
+            from jax.ad_checkpoint import checkpoint_name
+
+            inner_body = unit_body
+
+            def named_body(x, unit_params, unit_cache):
+                x, ncache, aux = inner_body(x, unit_params, unit_cache)
+                return checkpoint_name(x, "residual"), ncache, aux
+
+            unit_body = jax.checkpoint(
+                named_body,
+                policy=jax.checkpoint_policies.save_only_these_names("residual"),
+            )
+        else:  # "dots" — the paper-faithful baseline policy
+            unit_body = jax.checkpoint(
+                unit_body,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+            )
+
+    if n_units:
+        scan_params = params["scan"]
+        scan_cache = cache.get("scan") if cache else None
+
+        if scan_cache is not None:
+            def scan_fn(carry, xs):
+                x, aux = carry
+                up, uc = xs
+                x, ncache, a = unit_body(x, up, uc)
+                return (x, aux + a), ncache
+
+            (x, aux_total), ncaches = jax.lax.scan(
+                scan_fn, (x, aux_total), (scan_params, scan_cache)
+            )
+        else:
+            def scan_fn_nc(carry, up):
+                x, aux = carry
+                x, ncache, a = unit_body(x, up, None)
+                return (x, aux + a), ncache
+
+            (x, aux_total), ncaches = jax.lax.scan(scan_fn_nc, (x, aux_total), scan_params)
+        if new_cache is not None and ncaches:
+            new_cache["scan"] = ncaches
+
+    for j, kind in enumerate(tail):
+        c = cache.get(f"tail_{j}") if cache else None
+        x, nc, a = _apply_layer(params[f"tail_{j}"], cfg, kind, x, positions, mode, c)
+        aux_total += a
+        if new_cache is not None and nc is not None:
+            new_cache[f"tail_{j}"] = nc
+
+    x = LL.rmsnorm(x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head, preferred_element_type=jnp.float32)
+    logits = constrain_activation(logits, extra={-1: "model"})
+    if new_cache is not None:
+        base_pos = cache["pos"] if (cache is not None and mode == "decode") else 0
+        new_cache["pos"] = base_pos + (1 if mode == "decode" else S)
+    return logits, new_cache, aux_total
+
+
+# ---------------------------------------------------------------------------
+# the probabilistic program (paper technique — first-class feature)
+# ---------------------------------------------------------------------------
+
+
+def lm_program(cfg: ModelConfig, params_template: Optional[Params] = None):
+    """Build the generative program  p(tokens | params):
+        params ~ `param` sites (via `module`)      [or lifted priors]
+        for b in plate(batch):  obs_t ~ Categorical(logits_t)
+    Training this with SVI + no latents == maximum likelihood; the ELBO is
+    exactly the negative token cross-entropy plus the MoE aux loss (through a
+    `factor` site), so the PPL path and the hand-written path share HLO.
+    """
+    from ..core import primitives as P
+    from ..distributions import Categorical
+
+    def program(batch: Dict[str, jax.Array]):
+        template = params_template
+        if template is None:
+            template = init_params(cfg, jax.random.PRNGKey(0))
+        params = P.module("lm", template)
+        inputs = batch.get("inputs", batch.get("tokens"))
+        targets = batch["targets"]
+        logits, _, aux = forward(cfg, params, inputs, mode="train")
+        if cfg.moe:
+            P.factor("moe_aux", -cfg.router_aux_weight * aux)
+        with P.plate("batch", targets.shape[0], dim=-2):
+            with P.plate("time", targets.shape[1], dim=-1):
+                if cfg.use_pallas:
+                    from ..kernels.ops import categorical_logprob
+
+                    P.factor("obs", categorical_logprob(logits, targets))
+                else:
+                    P.sample("obs", Categorical(logits=logits), obs=targets)
+        return logits
+
+    return program
+
+
+# ---------------------------------------------------------------------------
+# step builders (pure, jit/pjit-able)
+# ---------------------------------------------------------------------------
+
+
+def nll_loss(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array]) -> jax.Array:
+    """Hand-written baseline loss (the Fig-3 'raw framework' comparator)."""
+    inputs = batch.get("inputs", batch.get("tokens"))
+    logits, _, aux = forward(cfg, params, inputs, mode="train")
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    tok_lp = jnp.take_along_axis(logp, batch["targets"][..., None], axis=-1)[..., 0]
+    loss = -jnp.mean(tok_lp)
+    if cfg.moe:
+        loss = loss + cfg.router_aux_weight * aux / batch["targets"].size
+    return loss
+
+
+def make_train_step(cfg: ModelConfig, optimizer):
+    """(opt_state, batch) -> (opt_state, metrics): MLE via the PPL path.
+    The ELBO of `lm_program` with an empty guide is -sum log p(obs) — we use
+    the mean-per-token scaling to match `nll_loss` exactly."""
+
+    def loss_fn(params, batch):
+        return nll_loss(cfg, params, batch)
+
+    def train_step(opt_state, batch):
+        params = optimizer.get_params(opt_state)
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        opt_state = optimizer.update(grads, opt_state)
+        return opt_state, {"loss": loss}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params: Params, tokens_or_embeds: jax.Array):
+        logits, cache, _ = forward(cfg, params, tokens_or_embeds, mode="prefill")
+        return logits[:, -1], cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params: Params, cache: Dict[str, Any], token: jax.Array, rng: jax.Array):
+        """token: (B, 1) int32 (or (B,1,D) embeds). Greedy+sampled logits."""
+        logits, cache, _ = forward(cfg, params, token, mode="decode", cache=cache)
+        next_token = jax.random.categorical(rng, logits[:, -1])
+        return next_token, cache, logits[:, -1]
+
+    return decode_step

@@ -1,0 +1,135 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Real-Gated Linear Recurrent Unit:
+    r_t = sigmoid(W_a x_t + b_a)          (recurrence gate, block-diagonal)
+    i_t = sigmoid(W_x x_t + b_x)          (input gate, block-diagonal)
+    a_t = exp(-c * softplus(Lambda) * r_t)        with c = 8
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The recurrence is linear in h, so the full sequence runs as a parallel
+`jax.lax.associative_scan` (log-depth on TPU) — this is the hardware
+adaptation of the paper's custom linear-scan GPU kernel. Decode mode is the
+plain one-step recurrence with a constant-size state, which is why
+recurrentgemma supports the long_500k shape.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import _dense_init
+from .ssm import _causal_conv
+
+Params = Dict[str, Any]
+
+_C = 8.0  # Griffin's fixed gate sharpness
+
+
+def init_rglru(key, cfg: ModelConfig) -> Params:
+    D = cfg.d_model
+    w = cfg.lru_width or D
+    blocks = max(cfg.n_heads, 1)
+    bw = w // blocks
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    # Lambda init so that a in [0.9, 0.999] at r=1 (paper appendix)
+    u = jax.random.uniform(ks[0], (w,), jnp.float32, 0.9**2, 0.999**2)
+    lam = jnp.log(jnp.exp(-jnp.log(u) / (2 * _C)) - 1.0)  # softplus^-1
+    return {
+        "wx_in": _dense_init(ks[1], (D, w), dt),  # x branch input proj
+        "wy_in": _dense_init(ks[2], (D, w), dt),  # gated (gelu) branch
+        "conv_w": _dense_init(ks[3], (cfg.conv_width, w), dt, scale=0.5),
+        "wa": _dense_init(ks[4], (blocks, bw, bw), jnp.float32),  # block-diag
+        "wxg": _dense_init(ks[5], (blocks, bw, bw), jnp.float32),
+        "ba": jnp.zeros((w,), jnp.float32),
+        "bxg": jnp.zeros((w,), jnp.float32),
+        "Lambda": lam,
+        "out_proj": _dense_init(jax.random.fold_in(key, 7), (w, D), dt),
+    }
+
+
+def _block_diag_proj(x, w_blocks, bias):
+    """x: (B,S,W) -> block-diagonal linear. w_blocks: (blocks, bw, bw)."""
+    B, S, W = x.shape
+    nb, bw, _ = w_blocks.shape
+    xb = x.reshape(B, S, nb, bw)
+    out = jnp.einsum("bsnw,nwv->bsnv", xb.astype(jnp.float32), w_blocks)
+    return out.reshape(B, S, W) + bias
+
+
+def rglru_scan(a: jax.Array, b: jax.Array, h0: Optional[jax.Array] = None) -> jax.Array:
+    """Solve h_t = a_t h_{t-1} + b_t along axis 1 via associative scan.
+    a, b: (B, S, W) float32."""
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rglru_block(
+    p: Params,
+    cfg: ModelConfig,
+    x: jax.Array,
+    *,
+    mode: str = "train",
+    cache: Optional[Dict[str, jax.Array]] = None,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Full recurrent block: (conv -> RG-LRU) * gelu-gate -> out_proj.
+    decode cache: {'h': (B,W) f32, 'conv': (B,width-1,W)}."""
+    B, S, D = x.shape
+    w = cfg.lru_width or D
+
+    xs = jnp.einsum("bsd,dw->bsw", x, p["wx_in"], preferred_element_type=jnp.float32).astype(x.dtype)
+    ys = jnp.einsum("bsd,dw->bsw", x, p["wy_in"], preferred_element_type=jnp.float32)
+    gate = jax.nn.gelu(ys)  # float32
+
+    if mode == "decode":
+        assert cache is not None and S == 1
+        conv_buf = jnp.concatenate([cache["conv"], xs], axis=1)
+        xc = jnp.sum(conv_buf * p["conv_w"][None], axis=1, keepdims=True).astype(jnp.float32)
+        new_conv = conv_buf[:, 1:]
+    else:
+        xc = _causal_conv(xs, p["conv_w"]).astype(jnp.float32)
+        new_conv = (
+            jnp.pad(xs, ((0, 0), (cfg.conv_width - 1, 0), (0, 0)))[:, -(cfg.conv_width - 1):]
+            if mode == "prefill"
+            else None
+        )
+
+    r = jax.nn.sigmoid(_block_diag_proj(xc.astype(x.dtype), p["wa"], p["ba"]))
+    i = jax.nn.sigmoid(_block_diag_proj(xc.astype(x.dtype), p["wxg"], p["bxg"]))
+    log_a = -_C * jax.nn.softplus(p["Lambda"])[None, None, :] * r  # (B,S,W) <= 0
+    a = jnp.exp(log_a)
+    gated_x = i * xc
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated_x
+
+    if mode == "decode":
+        h = a[:, 0] * cache["h"] + b[:, 0]  # (B,W)
+        new_cache = {"h": h, "conv": new_conv}
+        hseq = h[:, None]
+    else:
+        h0 = cache["h"] if (cache is not None and "h" in cache) else None
+        hseq = rglru_scan(a, b, h0)
+        new_cache = {"h": hseq[:, -1], "conv": new_conv} if mode == "prefill" else None
+
+    out = hseq * gate
+    out = jnp.einsum("bsw,wd->bsd", out.astype(x.dtype), p["out_proj"],
+                     preferred_element_type=jnp.float32)
+    return out.astype(x.dtype), new_cache
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, dtype) -> Dict[str, jax.Array]:
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), dtype),
+    }

@@ -1,0 +1,201 @@
+"""Mamba-2 SSD block (state-space duality, arXiv:2405.21060).
+
+Chunked SSD algorithm: within a chunk of length Q the output is a masked
+quadratic form (runs on the MXU); across chunks a cheap state recurrence
+carries (nheads, headdim, dstate) states. `kernels/ssd_scan.py` provides the
+Pallas TPU version of the chunk kernel; this module is the reference path and
+the layer plumbing (projections, conv, gating).
+
+Decode mode carries a constant-size recurrent state — this is why mamba2
+is a `long_500k`-capable architecture.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import _dense_init, rmsnorm
+
+Params = Dict[str, Any]
+
+
+def init_ssd(key, cfg: ModelConfig) -> Params:
+    D = cfg.d_model
+    di, ns, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    return {
+        # fused input projection: [z (di), x (di), B (ns), C (ns), dt (nh)]
+        "in_proj": _dense_init(ks[0], (D, 2 * di + 2 * ns + nh), dt),
+        "conv_w": _dense_init(ks[1], (cfg.conv_width, di + 2 * ns), dt, scale=0.5),
+        "A_log": jnp.zeros((nh,), jnp.float32),  # A = -exp(A_log) in (-inf,0)
+        "D_skip": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "gate_norm": jnp.zeros((di,), dt),
+        "out_proj": _dense_init(ks[2], (di, D), dt),
+    }
+
+
+def ssd_reference(x, dt, A, B, C, chunk: int):
+    """Pure-jnp chunked SSD: x (b,s,h,p), dt (b,s,h), A (h,), B/C (b,s,n).
+    Returns y (b,s,h,p). Matches the Mamba-2 SSD recurrence:
+        h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t ;  y_t = C_t h_t
+    computed chunk-parallel (intra-chunk quadratic + inter-chunk scan)."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    Q = chunk
+    nc = s // Q
+    xc = x.reshape(b, nc, Q, h, p)
+    dtc = dt.reshape(b, nc, Q, h)
+    Bc = B.reshape(b, nc, Q, n)
+    Cc = C.reshape(b, nc, Q, n)
+
+    dA = dtc * A  # (b,nc,Q,h), negative
+    cum = jnp.cumsum(dA, axis=2)  # within-chunk cumulative log-decay
+
+    # --- intra-chunk (quadratic, MXU-friendly) ---
+    # L[i,j] = exp(cum_i - cum_j) for i >= j
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (b,nc,Q,Q,h)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(causal[None, None, :, :, None], jnp.exp(diff), 0.0)
+    CB = jnp.einsum("bcqn,bckn->bcqk", Cc.astype(jnp.float32), Bc.astype(jnp.float32))
+    M = CB[..., None] * L  # (b,nc,Q,Q,h)
+    y_intra = jnp.einsum("bcqkh,bckh,bckhp->bcqhp", M, dtc, xc.astype(jnp.float32))
+
+    # --- chunk states ---
+    # state contribution of chunk c: sum_k exp(cum_Q - cum_k) dt_k B_k x_k
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)  # (b,nc,Q,h)
+    states = jnp.einsum(
+        "bckn,bckh,bckhp->bchnp",
+        Bc.astype(jnp.float32), (dtc * decay_to_end), xc.astype(jnp.float32),
+    )  # (b,nc,h,n,p)
+
+    # --- inter-chunk recurrence over nc ---
+    chunk_decay = jnp.exp(jnp.sum(dA, axis=2))  # (b,nc,h)
+
+    def step(carry, inp):
+        st, dec = inp  # (b,h,n,p), (b,h)
+        new = carry * dec[..., None, None] + st
+        return new, carry  # emit state *entering* the chunk
+
+    init = jnp.zeros_like(states[:, 0])
+    _, prev_states = jax.lax.scan(
+        step,
+        init,
+        (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)),
+    )
+    prev_states = prev_states.swapaxes(0, 1)  # (b,nc,h,n,p): state at chunk start
+
+    # --- inter-chunk output: y_inter_q = C_q exp(cum_q) h_chunkstart ---
+    in_decay = jnp.exp(cum)  # (b,nc,Q,h)
+    y_inter = jnp.einsum(
+        "bcqn,bcqh,bchnp->bcqhp", Cc.astype(jnp.float32), in_decay, prev_states
+    )
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y
+
+
+def _ssd_inner(cfg, x, dt, A, B, C):
+    if cfg.use_pallas:
+        from ..kernels.ops import ssd_scan
+
+        return ssd_scan(x, dt, A, B, C, chunk=cfg.ssm_chunk)
+    return ssd_reference(x, dt, A, B, C, cfg.ssm_chunk)
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d. x: (B,S,C), w: (width,C)."""
+    width = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(width)
+    )
+    return out
+
+
+def ssd_block(
+    p: Params,
+    cfg: ModelConfig,
+    x: jax.Array,
+    *,
+    mode: str = "train",
+    cache: Optional[Dict[str, jax.Array]] = None,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Full Mamba-2 block: in_proj -> conv -> SSD -> gated norm -> out_proj.
+    decode carries {'state': (B,h,n,p), 'conv': (B,width-1,di+2ns)}."""
+    B_, S, D = x.shape
+    di, ns, nh, hp = cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_headdim
+
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, p["in_proj"], preferred_element_type=jnp.float32)
+    z = zxbcdt[..., :di].astype(x.dtype)
+    xbc = zxbcdt[..., di : di + di + 2 * ns].astype(x.dtype)
+    dt_raw = zxbcdt[..., -nh:]
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"])  # (B,S,nh) f32
+    A = -jnp.exp(p["A_log"])  # (nh,)
+
+    if mode == "decode":
+        assert cache is not None and S == 1
+        conv_buf = jnp.concatenate([cache["conv"], xbc], axis=1)  # (B,width,di+2ns)
+        xbc_c = jax.nn.silu(
+            jnp.sum(conv_buf * p["conv_w"][None], axis=1, keepdims=True).astype(jnp.float32)
+        ).astype(x.dtype)
+        xs = xbc_c[..., :di].reshape(B_, 1, nh, hp)
+        Bmat = xbc_c[..., di : di + ns]
+        Cmat = xbc_c[..., di + ns :]
+        dec = jnp.exp(dt[:, 0] * A)  # (B,nh)
+        state = cache["state"] * dec[..., None, None] + jnp.einsum(
+            "bn,bh,bhp->bhnp", Bmat[:, 0].astype(jnp.float32), dt[:, 0],
+            xs[:, 0].astype(jnp.float32),
+        )
+        y = jnp.einsum("bn,bhnp->bhp", Cmat[:, 0].astype(jnp.float32), state)
+        y = y[:, None] + p["D_skip"][None, None, :, None] * xs.astype(jnp.float32)
+        new_cache = {"state": state, "conv": conv_buf[:, 1:]}
+    else:
+        xbc_c = jax.nn.silu(_causal_conv(xbc, p["conv_w"]).astype(jnp.float32)).astype(x.dtype)
+        xs = xbc_c[..., :di].reshape(B_, S, nh, hp)
+        Bmat = xbc_c[..., di : di + ns]
+        Cmat = xbc_c[..., di + ns :]
+        # pad S to a chunk multiple: dt=0 tail entries have decay exp(0)=1 and
+        # zero input, so they alter neither outputs nor the carried state
+        pad = (-S) % cfg.ssm_chunk
+        if pad:
+            xs_p = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dt_p = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            B_p = jnp.pad(Bmat, ((0, 0), (0, pad), (0, 0)))
+            C_p = jnp.pad(Cmat, ((0, 0), (0, pad), (0, 0)))
+            y = _ssd_inner(cfg, xs_p, dt_p, A, B_p, C_p)[:, :S]
+        else:
+            y = _ssd_inner(cfg, xs, dt, A, Bmat, Cmat)
+        y = y + p["D_skip"][None, None, :, None] * xs.astype(jnp.float32)
+        if mode == "prefill":
+            # final state for subsequent decode (recompute via recurrence tail)
+            decay_all = jnp.exp(jnp.cumsum(dt * A, axis=1))  # (B,S,nh)
+            w = decay_all[:, -1:] / decay_all  # decay from t to end
+            state = jnp.einsum(
+                "bsn,bsh,bshp->bhnp",
+                Bmat.astype(jnp.float32), dt * w, xs.astype(jnp.float32),
+            )
+            new_cache = {
+                "state": state,
+                "conv": jnp.pad(xbc, ((0, 0), (cfg.conv_width - 1, 0), (0, 0)))[
+                    :, -(cfg.conv_width - 1) :
+                ],
+            }
+        else:
+            new_cache = None
+
+    y = y.reshape(B_, S, di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype), p["gate_norm"])
+    out = jnp.einsum("bsd,dk->bsk", y, p["out_proj"], preferred_element_type=jnp.float32)
+    return out.astype(x.dtype), new_cache
+
+
+def init_ssd_cache(cfg: ModelConfig, batch: int, dtype) -> Dict[str, jax.Array]:
+    di, ns = cfg.d_inner, cfg.ssm_state
+    return {
+        "state": jnp.zeros((batch, cfg.ssm_nheads, ns, cfg.ssm_headdim), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, di + 2 * ns), dtype),
+    }

@@ -1,0 +1,28 @@
+from .optimizers import (
+    Adafactor,
+    Adam,
+    AdamW,
+    MultiSteps,
+    Optimizer,
+    OptState,
+    SGD,
+    clip_by_global_norm,
+    global_norm,
+)
+from .schedules import constant, exponential_decay, warmup_cosine, warmup_rsqrt
+
+__all__ = [
+    "Adafactor",
+    "Adam",
+    "AdamW",
+    "MultiSteps",
+    "Optimizer",
+    "OptState",
+    "SGD",
+    "clip_by_global_norm",
+    "global_norm",
+    "constant",
+    "exponential_decay",
+    "warmup_cosine",
+    "warmup_rsqrt",
+]

@@ -1,0 +1,229 @@
+"""Optimizers built from scratch (no optax in this environment).
+
+Pure-functional: `init(params) -> state`, `update(grads, state) -> state`,
+`get_params(state) -> params`. States are pytrees, so they pjit-shard exactly
+like the parameters they track (DESIGN.md §6: optimizer moments inherit the
+FSDP+TP sharding of their parameters).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+def _as_schedule(lr: Union[float, Schedule]) -> Schedule:
+    if callable(lr):
+        return lr
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, tree), norm
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    params: Any
+    mu: Any  # first moment (or momentum); None-like zeros when unused
+    nu: Any  # second moment
+
+
+class Optimizer:
+    """Base class; subclasses define `_update_leaf`."""
+
+    def __init__(
+        self,
+        learning_rate: Union[float, Schedule] = 1e-3,
+        clip_norm: Optional[float] = None,
+        weight_decay: float = 0.0,
+    ):
+        self.lr = _as_schedule(learning_rate)
+        self.clip_norm = clip_norm
+        self.weight_decay = weight_decay
+
+    def init(self, params) -> OptState:
+        # mu/nu must be distinct buffers (donation forbids aliased arguments)
+        mu = jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        nu = jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return OptState(jnp.zeros((), jnp.int32), params, mu, nu)
+
+    def update(self, grads, state: OptState) -> OptState:
+        if self.clip_norm is not None:
+            grads, _ = clip_by_global_norm(grads, self.clip_norm)
+        step = state.step + 1
+        lr = self.lr(step)
+        new_params, new_mu, new_nu = {}, {}, {}
+        flat_p, treedef = jax.tree_util.tree_flatten(state.params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_mu = treedef.flatten_up_to(state.mu)
+        flat_nu = treedef.flatten_up_to(state.nu)
+        out_p, out_mu, out_nu = [], [], []
+        for p, g, mu, nu in zip(flat_p, flat_g, flat_mu, flat_nu):
+            if self.weight_decay:
+                g = g + self.weight_decay * p
+            p2, mu2, nu2 = self._update_leaf(step, lr, p, g, mu, nu)
+            out_p.append(p2)
+            out_mu.append(mu2)
+            out_nu.append(nu2)
+        return OptState(
+            step,
+            jax.tree_util.tree_unflatten(treedef, out_p),
+            jax.tree_util.tree_unflatten(treedef, out_mu),
+            jax.tree_util.tree_unflatten(treedef, out_nu),
+        )
+
+    def get_params(self, state: OptState):
+        return state.params
+
+    def _update_leaf(self, step, lr, p, g, mu, nu):
+        raise NotImplementedError
+
+
+class SGD(Optimizer):
+    def __init__(self, learning_rate=1e-3, momentum: float = 0.0, nesterov: bool = False, **kw):
+        super().__init__(learning_rate, **kw)
+        self.momentum = momentum
+        self.nesterov = nesterov
+
+    def _update_leaf(self, step, lr, p, g, mu, nu):
+        if self.momentum == 0.0:
+            return p - lr * g, mu, nu
+        mu2 = self.momentum * mu + g
+        d = g + self.momentum * mu2 if self.nesterov else mu2
+        return p - lr * d, mu2, nu
+
+
+class Adam(Optimizer):
+    def __init__(self, learning_rate=1e-3, b1=0.9, b2=0.999, eps=1e-8, **kw):
+        super().__init__(learning_rate, **kw)
+        self.b1, self.b2, self.eps = b1, b2, eps
+
+    def _update_leaf(self, step, lr, p, g, mu, nu):
+        g32 = g.astype(jnp.float32)
+        mu2 = self.b1 * mu + (1 - self.b1) * g32
+        nu2 = self.b2 * nu + (1 - self.b2) * jnp.square(g32)
+        t = step.astype(jnp.float32)
+        mu_hat = mu2 / (1 - self.b1 ** t)
+        nu_hat = nu2 / (1 - self.b2 ** t)
+        upd = lr * mu_hat / (jnp.sqrt(nu_hat) + self.eps)
+        return (p.astype(jnp.float32) - upd).astype(p.dtype), mu2, nu2
+
+
+class AdamW(Adam):
+    """Adam with decoupled weight decay (applied to the update, not the grad)."""
+
+    def _update_leaf(self, step, lr, p, g, mu, nu):
+        g32 = g.astype(jnp.float32)
+        mu2 = self.b1 * mu + (1 - self.b1) * g32
+        nu2 = self.b2 * nu + (1 - self.b2) * jnp.square(g32)
+        t = step.astype(jnp.float32)
+        mu_hat = mu2 / (1 - self.b1 ** t)
+        nu_hat = nu2 / (1 - self.b2 ** t)
+        upd = lr * (mu_hat / (jnp.sqrt(nu_hat) + self.eps) + self.weight_decay * p.astype(jnp.float32))
+        return (p.astype(jnp.float32) - upd).astype(p.dtype), mu2, nu2
+
+    def update(self, grads, state: OptState) -> OptState:
+        # decay handled in _update_leaf; bypass the grad-coupled decay in base
+        if self.clip_norm is not None:
+            grads, _ = clip_by_global_norm(grads, self.clip_norm)
+        step = state.step + 1
+        lr = self.lr(step)
+        flat_p, treedef = jax.tree_util.tree_flatten(state.params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_mu = treedef.flatten_up_to(state.mu)
+        flat_nu = treedef.flatten_up_to(state.nu)
+        out = [self._update_leaf(step, lr, p, g, mu, nu) for p, g, mu, nu in zip(flat_p, flat_g, flat_mu, flat_nu)]
+        return OptState(
+            step,
+            jax.tree_util.tree_unflatten(treedef, [o[0] for o in out]),
+            jax.tree_util.tree_unflatten(treedef, [o[1] for o in out]),
+            jax.tree_util.tree_unflatten(treedef, [o[2] for o in out]),
+        )
+
+
+class Adafactor(Optimizer):
+    """Memory-factored second-moment optimizer (Shazeer & Stern 2018) —
+    the memory-saving choice at 132B scale: O(n+m) state per (n,m) matrix."""
+
+    def __init__(self, learning_rate=1e-2, decay=0.8, eps=1e-30, clip_threshold=1.0, **kw):
+        super().__init__(learning_rate, **kw)
+        self.decay = decay
+        self.eps = eps
+        self.clip_threshold = clip_threshold
+
+    def init(self, params) -> OptState:
+        def row_col(p):
+            if p.ndim >= 2:
+                return (
+                    jnp.zeros(p.shape[:-1], jnp.float32),
+                    jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                )
+            return (jnp.zeros_like(p, jnp.float32), jnp.zeros((), jnp.float32))
+
+        mu = jax.tree_util.tree_map(lambda p: row_col(p)[0], params)
+        nu = jax.tree_util.tree_map(lambda p: row_col(p)[1], params)
+        return OptState(jnp.zeros((), jnp.int32), params, mu, nu)
+
+    def _update_leaf(self, step, lr, p, g, row, col):
+        g32 = g.astype(jnp.float32)
+        t = step.astype(jnp.float32)
+        beta = 1.0 - t ** (-self.decay)
+        g2 = jnp.square(g32) + self.eps
+        if p.ndim >= 2:
+            row2 = beta * row + (1 - beta) * g2.mean(-1)
+            col2 = beta * col + (1 - beta) * g2.mean(-2)
+            r = row2 / row2.mean(-1, keepdims=True)
+            v = r[..., None] * col2[..., None, :]
+        else:
+            row2 = beta * row + (1 - beta) * g2
+            col2 = col
+            v = row2
+        u = g32 / jnp.sqrt(v)
+        rms_u = jnp.sqrt(jnp.mean(jnp.square(u)))
+        u = u / jnp.maximum(1.0, rms_u / self.clip_threshold)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), row2, col2
+
+
+class MultiSteps:
+    """Gradient accumulation wrapper: apply the inner optimizer every
+    `every_k` micro-steps (distributed-opt trick for huge global batches)."""
+
+    def __init__(self, inner: Optimizer, every_k: int):
+        self.inner = inner
+        self.every_k = every_k
+
+    def init(self, params):
+        acc = jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return (self.inner.init(params), acc, jnp.zeros((), jnp.int32))
+
+    def update(self, grads, state):
+        inner_state, acc, k = state
+        acc = jax.tree_util.tree_map(lambda a, g: a + g.astype(jnp.float32), acc, grads)
+        k = k + 1
+
+        def apply(args):
+            inner_state, acc = args
+            mean = jax.tree_util.tree_map(lambda a: a / self.every_k, acc)
+            new_inner = self.inner.update(mean, inner_state)
+            zeros = jax.tree_util.tree_map(jnp.zeros_like, acc)
+            return new_inner, zeros
+
+        def skip(args):
+            return args
+
+        inner_state, acc = jax.lax.cond(k % self.every_k == 0, apply, skip, (inner_state, acc))
+        return (inner_state, acc, k)
+
+    def get_params(self, state):
+        return self.inner.get_params(state[0])

@@ -1,0 +1,37 @@
+"""Learning-rate schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int, end_lr: float = 0.0):
+    def schedule(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / max(1, warmup_steps)
+        frac = jnp.clip((step - warmup_steps) / max(1, total_steps - warmup_steps), 0.0, 1.0)
+        cos = end_lr + 0.5 * (peak_lr - end_lr) * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return schedule
+
+
+def warmup_rsqrt(peak_lr: float, warmup_steps: int):
+    def schedule(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / max(1, warmup_steps)
+        decay = peak_lr * jnp.sqrt(warmup_steps / jnp.maximum(step, warmup_steps))
+        return jnp.where(step < warmup_steps, warm, decay)
+
+    return schedule
+
+
+def exponential_decay(init_lr: float, decay_rate: float, decay_steps: int):
+    def schedule(step):
+        step = jnp.asarray(step, jnp.float32)
+        return init_lr * decay_rate ** (step / decay_steps)
+
+    return schedule

@@ -1,0 +1,9 @@
+import os
+
+# Smoke tests and benches must see ONE device — the 512-device flag belongs
+# to launch/dryrun.py exclusively (assignment spec).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,175 @@
+"""Distribution properties — hypothesis-driven invariants + analytic spot
+checks against scipy."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+import scipy.stats as ss
+from hypothesis import given, settings, strategies as st
+
+from repro import distributions as dist
+from repro.distributions import biject_to, constraints, kl_divergence
+
+KEY = jax.random.PRNGKey(0)
+
+finite_floats = st.floats(-5, 5, allow_nan=False)
+pos_floats = st.floats(0.1, 5, allow_nan=False)
+
+
+CASES = [
+    (lambda a, b: dist.Normal(a, b), lambda a, b: ss.norm(a, b), finite_floats, pos_floats),
+    (lambda a, b: dist.Laplace(a, b), lambda a, b: ss.laplace(a, b), finite_floats, pos_floats),
+    (lambda a, b: dist.Gamma(a, b), lambda a, b: ss.gamma(a, scale=1 / b), pos_floats, pos_floats),
+    (lambda a, b: dist.Beta(a, b), lambda a, b: ss.beta(a, b), pos_floats, pos_floats),
+    (lambda a, b: dist.LogNormal(a, b), lambda a, b: ss.lognorm(b, scale=np.exp(a)), finite_floats, pos_floats),
+    (lambda a, b: dist.StudentT(3.0, a, b), lambda a, b: ss.t(3.0, a, b), finite_floats, pos_floats),
+    (lambda a, b: dist.Cauchy(a, b), lambda a, b: ss.cauchy(a, b), finite_floats, pos_floats),
+    (lambda a, b: dist.Uniform(a, a + b), lambda a, b: ss.uniform(a, b), finite_floats, pos_floats),
+]
+
+
+@pytest.mark.parametrize("mk,mk_ref,_,__", CASES, ids=lambda c: getattr(c, "__name__", ""))
+def test_logprob_matches_scipy(mk, mk_ref, _, __):
+    d = mk(0.7, 1.3)
+    ref = mk_ref(0.7, 1.3)
+    xs = np.asarray(d.sample(KEY, (64,)))
+    assert np.allclose(d.log_prob(jnp.asarray(xs)), ref.logpdf(xs), atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(a=finite_floats, b=pos_floats)
+def test_normal_sample_moments(a, b):
+    d = dist.Normal(a, b)
+    xs = d.sample(KEY, (20_000,))
+    assert abs(float(xs.mean()) - a) < 0.1 * b + 0.05
+    assert abs(float(xs.std()) - b) < 0.1 * b + 0.05
+
+
+@settings(max_examples=20, deadline=None)
+@given(loc=finite_floats, scale=pos_floats, loc2=finite_floats, scale2=pos_floats)
+def test_kl_normal_properties(loc, scale, loc2, scale2):
+    p = dist.Normal(loc, scale)
+    q = dist.Normal(loc2, scale2)
+    assert float(kl_divergence(p, p)) == pytest.approx(0.0, abs=1e-5)
+    kl = float(kl_divergence(p, q))
+    assert kl >= -1e-6
+    # analytic
+    expected = np.log(scale2 / scale) + (scale**2 + (loc - loc2) ** 2) / (2 * scale2**2) - 0.5
+    assert kl == pytest.approx(expected, rel=1e-4, abs=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(x=st.lists(finite_floats, min_size=2, max_size=6))
+def test_biject_roundtrips(x):
+    x = jnp.asarray(x)
+    for c in (constraints.positive, constraints.unit_interval, constraints.real,
+              constraints.softplus_positive if hasattr(constraints, "softplus_positive") else constraints.positive):
+        t = biject_to(c)
+        y = t(x)
+        x2 = t.inv(y)
+        assert jnp.allclose(x, x2, atol=1e-4), c
+
+
+def test_simplex_bijector():
+    t = biject_to(constraints.simplex)
+    x = jnp.asarray([0.3, -0.7, 1.1])
+    y = t(x)
+    assert y.shape == (4,)
+    assert jnp.allclose(jnp.sum(y), 1.0, atol=1e-5)
+    assert jnp.all(y > 0)
+    assert jnp.allclose(t.inv(y), x, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(x=st.lists(finite_floats, min_size=3, max_size=5))
+def test_transform_jacobian_matches_autodiff(x):
+    """log|det J| of scalar transforms == sum log |dy/dx| by autodiff."""
+    x = jnp.asarray(x)
+    from repro.distributions.transforms import ExpTransform, SigmoidTransform, TanhTransform
+
+    for t in (ExpTransform(), SigmoidTransform(), TanhTransform()):
+        y = t(x)
+        lad = t.log_abs_det_jacobian(x, y)
+        grad = jax.vmap(jax.grad(lambda v: t(v)))(x)
+        assert jnp.allclose(lad, jnp.log(jnp.abs(grad)), atol=2e-3, rtol=1e-3), type(t).__name__
+
+
+def test_categorical_logits_probs_agree():
+    logits = jax.random.normal(KEY, (5, 16))
+    d1 = dist.Categorical(logits=logits)
+    d2 = dist.Categorical(probs=jax.nn.softmax(logits, -1))
+    v = jnp.arange(5) % 16
+    assert jnp.allclose(d1.log_prob(v), d2.log_prob(v), atol=1e-5)
+
+
+def test_categorical_normalization():
+    logits = jax.random.normal(KEY, (16,)) * 3
+    d = dist.Categorical(logits=logits)
+    total = jnp.exp(jax.vmap(d.log_prob)(jnp.arange(16))).sum()
+    assert jnp.allclose(total, 1.0, atol=1e-5)
+
+
+def test_bernoulli_sample_mean():
+    d = dist.Bernoulli(probs=0.3)
+    xs = d.sample(KEY, (50_000,))
+    assert abs(float(xs.mean()) - 0.3) < 0.01
+
+
+def test_independent_reinterprets_batch():
+    d = dist.Normal(jnp.zeros((3, 4)), 1.0)
+    di = dist.Independent(d, 1)
+    x = di.sample(KEY)
+    assert di.log_prob(x).shape == (3,)
+    assert jnp.allclose(di.log_prob(x), d.log_prob(x).sum(-1))
+
+
+def test_transformed_distribution_density():
+    """TD(Normal, Exp) == LogNormal."""
+    from repro.distributions.transforms import ExpTransform
+
+    td = dist.TransformedDistribution(dist.Normal(0.2, 0.8), [ExpTransform()])
+    ln = dist.LogNormal(0.2, 0.8)
+    x = jnp.asarray([0.5, 1.0, 2.7])
+    assert jnp.allclose(td.log_prob(x), ln.log_prob(x), atol=1e-5)
+    s = td.sample(KEY, (10,))
+    assert jnp.all(s > 0)
+
+
+def test_mixture_same_family():
+    mix = dist.Categorical(probs=jnp.asarray([0.25, 0.75]))
+    comp = dist.Normal(jnp.asarray([-2.0, 3.0]), jnp.asarray([0.5, 0.5]))
+    d = dist.MixtureSameFamily(mix, comp)
+    xs = d.sample(KEY, (30_000,))
+    assert abs(float(xs.mean()) - (0.25 * -2 + 0.75 * 3)) < 0.05
+    lp = d.log_prob(jnp.asarray(3.0))
+    expected = np.log(0.25 * ss.norm(-2, 0.5).pdf(3.0) + 0.75 * ss.norm(3, 0.5).pdf(3.0))
+    assert float(lp) == pytest.approx(expected, rel=1e-4)
+
+
+def test_multivariate_normal_logprob():
+    cov = jnp.asarray([[2.0, 0.5], [0.5, 1.0]])
+    d = dist.MultivariateNormal(jnp.zeros(2), scale_tril=jnp.linalg.cholesky(cov))
+    x = jnp.asarray([0.3, -0.8])
+    assert float(d.log_prob(x)) == pytest.approx(
+        ss.multivariate_normal(np.zeros(2), np.asarray(cov)).logpdf(np.asarray(x)), rel=1e-4
+    )
+
+
+def test_dirichlet_mean():
+    alpha = jnp.asarray([2.0, 3.0, 5.0])
+    d = dist.Dirichlet(alpha)
+    xs = d.sample(KEY, (20_000,))
+    assert np.allclose(xs.mean(0), alpha / alpha.sum(), atol=0.01)
+
+
+def test_poisson_pmf():
+    d = dist.Poisson(3.5)
+    ks = jnp.arange(10)
+    assert np.allclose(jax.vmap(d.log_prob)(ks), ss.poisson(3.5).logpmf(np.arange(10)), atol=1e-4)
+
+
+def test_expanded_distribution_broadcast():
+    d = dist.Normal(0.0, 1.0).expand((3, 2))
+    x = d.sample(KEY)
+    assert x.shape == (3, 2)
+    assert d.log_prob(x).shape == (3, 2)

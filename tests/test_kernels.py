@@ -1,0 +1,100 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode): shape/dtype sweeps
+per the assignment."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import categorical_logprob, flash_attention, ssd_scan
+from repro.kernels.ref import (
+    categorical_logprob_ref,
+    flash_attention_ref,
+    ssd_scan_ref,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("B,H,K,S,d", [
+    (1, 4, 4, 128, 32),   # MHA
+    (2, 8, 2, 256, 64),   # GQA 4:1
+    (1, 8, 1, 128, 64),   # MQA
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, H, K, S, d, dtype):
+    q = jax.random.normal(KEY, (B, H, S, d), dtype)
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (B, K, S, d), dtype)
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (B, K, S, d), dtype)
+    out = flash_attention(q, k, v, block_q=64, block_k=64)
+    ref = flash_attention_ref(q, k, v)
+    atol = 1e-4 if dtype == jnp.float32 else 2e-2
+    assert jnp.allclose(out.astype(jnp.float32), ref.astype(jnp.float32), atol=atol)
+
+
+def test_flash_attention_noncausal():
+    q = jax.random.normal(KEY, (1, 2, 128, 32))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (1, 2, 128, 32))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (1, 2, 128, 32))
+    out = flash_attention(q, k, v, causal=False, block_q=64, block_k=64)
+    ref = flash_attention_ref(q, k, v, causal=False)
+    assert jnp.allclose(out, ref, atol=1e-4)
+
+
+@pytest.mark.parametrize("T,V", [(64, 1000), (100, 5000), (256, 2048), (7, 33)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_categorical_logprob_sweep(T, V, dtype):
+    logits = (jax.random.normal(KEY, (T, V)) * 3).astype(dtype)
+    toks = jax.random.randint(jax.random.fold_in(KEY, 3), (T,), 0, V)
+    lp = categorical_logprob(logits, toks, block_t=32, block_v=512)
+    ref = categorical_logprob_ref(logits, toks)
+    assert jnp.allclose(lp, ref, atol=1e-3)
+
+
+def test_categorical_logprob_batched_shape():
+    logits = jax.random.normal(KEY, (2, 8, 100))
+    toks = jax.random.randint(KEY, (2, 8), 0, 100)
+    lp = categorical_logprob(logits, toks)
+    assert lp.shape == (2, 8)
+    assert jnp.allclose(lp, categorical_logprob_ref(logits, toks), atol=1e-4)
+
+
+def test_categorical_logprob_extreme_logits():
+    """Online LSE must survive large-magnitude logits."""
+    logits = jnp.asarray([[1e4, -1e4, 0.0, 500.0]] * 8)
+    toks = jnp.asarray([0, 1, 2, 3, 0, 1, 2, 3])
+    lp = categorical_logprob(logits, toks, block_t=8, block_v=2)
+    ref = categorical_logprob_ref(logits, toks)
+    assert jnp.allclose(lp, ref, atol=1e-3)
+
+
+@pytest.mark.parametrize("b,s,h,p,n,chunk", [
+    (1, 32, 2, 8, 4, 8),
+    (2, 64, 4, 16, 8, 16),
+    (1, 128, 3, 32, 16, 32),
+])
+def test_ssd_scan_sweep(b, s, h, p, n, chunk):
+    x = jax.random.normal(KEY, (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(KEY, 4), (b, s, h)))
+    A = -jnp.exp(jax.random.normal(jax.random.fold_in(KEY, 5), (h,)))
+    B = jax.random.normal(jax.random.fold_in(KEY, 6), (b, s, n))
+    C = jax.random.normal(jax.random.fold_in(KEY, 7), (b, s, n))
+    y = ssd_scan(x, dt, A, B, C, chunk=chunk)
+    ref = ssd_scan_ref(x, dt, A, B, C, chunk=chunk)
+    assert jnp.allclose(y, ref, atol=1e-3)
+
+
+def test_ssd_scan_matches_naive_recurrence():
+    b, s, h, p, n = 1, 24, 2, 4, 4
+    x = jax.random.normal(KEY, (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(KEY, 8), (b, s, h)))
+    A = -jnp.exp(jax.random.normal(jax.random.fold_in(KEY, 9), (h,)))
+    B = jax.random.normal(jax.random.fold_in(KEY, 10), (b, s, n))
+    C = jax.random.normal(jax.random.fold_in(KEY, 11), (b, s, n))
+    st = jnp.zeros((b, h, n, p))
+    ys = []
+    for t in range(s):
+        st = st * jnp.exp(dt[:, t] * A)[..., None, None] + jnp.einsum(
+            "bn,bh,bhp->bhnp", B[:, t], dt[:, t], x[:, t])
+        ys.append(jnp.einsum("bn,bhnp->bhp", C[:, t], st))
+    naive = jnp.stack(ys, 1)
+    y = ssd_scan(x, dt, A, B, C, chunk=8)
+    assert jnp.allclose(y, naive, atol=1e-3)
