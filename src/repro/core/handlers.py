@@ -168,7 +168,10 @@ class seed(Messenger):
 
 class substitute(Messenger):
     """Fix sample/param sites to given values (by dict or by function).
-    This is how optimizers inject current parameter values each step."""
+    This is how optimizers inject current parameter values each step.
+    `data` entries keyed by a plate name fix that plate's subsample indices —
+    the mechanism by which SVI.update accepts minibatch indices as part of
+    its pure (jit-stable) signature."""
 
     def __init__(self, fn=None, data: Optional[Dict[str, Any]] = None, substitute_fn=None):
         if (data is None) == (substitute_fn is None):
@@ -178,7 +181,7 @@ class substitute(Messenger):
         super().__init__(fn)
 
     def process_message(self, msg):
-        if msg["type"] not in ("sample", "param"):
+        if msg["type"] not in ("sample", "param", "plate"):
             return
         if msg["value"] is not None:
             return

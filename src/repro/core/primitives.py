@@ -144,23 +144,35 @@ class plate(Messenger):
             kwargs={"rng_key": None},
         )
         apply_stack(msg)
-        return msg["value"]
+        idx = msg["value"]
+        if idx is not None and jnp.shape(idx) != (self.subsample_size,):
+            raise ValueError(
+                f"plate '{self.name}' got subsample indices of shape "
+                f"{jnp.shape(idx)}; expected ({self.subsample_size},)"
+            )
+        return idx
 
     def __enter__(self):
         super().__enter__()
-        self._indices = self._subsample()
-        if self.dim is None:
-            # allocate the innermost free dim not used by enclosing plates
-            used = {
-                f.dim
-                for h in _enclosing_plates(self)
-                for f in [h.frame]
-            }
-            d = -1
-            while d in used:
-                d -= 1
-            self.dim = d
-        self.frame = CondIndepStackFrame(self.name, self.dim, self.size, self.subsample_size)
+        try:
+            self._indices = self._subsample()
+            if self.dim is None:
+                # allocate the innermost free dim not used by enclosing plates
+                used = {
+                    f.dim
+                    for h in _enclosing_plates(self)
+                    for f in [h.frame]
+                }
+                d = -1
+                while d in used:
+                    d -= 1
+                self.dim = d
+            self.frame = CondIndepStackFrame(self.name, self.dim, self.size, self.subsample_size)
+        except Exception:
+            # un-push self so a failed __enter__ (bad indices, missing rng
+            # key) can't leak a half-initialized handler on the global stack
+            super().__exit__(None, None, None)
+            raise
         return self._indices
 
     @property

@@ -12,8 +12,10 @@ from .sharding import (
     batch_shardings,
     cache_shardings,
     constrain_activation,
+    constrain_leading_dim,
     param_shardings,
     replicated,
+    shard_batch,
     spec_for_param,
 )
 
@@ -26,6 +28,7 @@ __all__ = [
     "cache_shardings",
     "compress_error_feedback",
     "constrain_activation",
+    "constrain_leading_dim",
     "dequantize_int8",
     "dequantize_tree",
     "param_shardings",
@@ -33,5 +36,6 @@ __all__ = [
     "quantize_int8",
     "quantize_tree",
     "replicated",
+    "shard_batch",
     "spec_for_param",
 ]

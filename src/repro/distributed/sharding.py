@@ -101,20 +101,33 @@ def _divisible(spec: P, shape, mesh: Mesh) -> P:
     return P(*out)
 
 
+def _canonical(spec: P) -> P:
+    """Strip trailing Nones (P('data', None) == P('data') semantically). GSPMD
+    reports jit output shardings in this minimal form; emitting the same form
+    here keeps device_put-placed state and jit-returned state cache-identical."""
+    dims = list(spec)
+    while dims and dims[-1] is None:
+        dims.pop()
+    return P(*dims)
+
+
 def param_shardings(params: Any, mesh: Mesh) -> Any:
     """Pytree of NamedShardings matching `params` (works on ShapeDtypeStructs)."""
 
     def leaf(path, x):
         spec = spec_for_param(_path_str(path), len(x.shape), mesh)
         spec = _divisible(spec, x.shape, mesh)
-        return NamedSharding(mesh, spec)
+        return NamedSharding(mesh, _canonical(spec))
 
     return jax.tree_util.tree_map_with_path(leaf, params)
 
 
 def batch_axes(mesh: Mesh):
     """The composite data-parallel axis: ('pod','data') when a pod axis
-    exists, else 'data'."""
+    exists, else 'data'; meshes without a 'data' axis fall back to their
+    first axis (so generic SVI meshes work, not just the LM layout)."""
+    if "data" not in mesh.axis_names:
+        return mesh.axis_names[0]
     return ("pod", "data") if "pod" in mesh.axis_names else "data"
 
 
@@ -181,6 +194,30 @@ def cache_shardings(cache: Any, cfg: ModelConfig, mesh: Mesh, *,
         return NamedSharding(mesh, P(*dims))
 
     return jax.tree_util.tree_map_with_path(leaf, cache)
+
+
+def constrain_leading_dim(x: Any, mesh: Mesh, axis=None) -> Any:
+    """with_sharding_constraint `x`'s leading dim onto `axis` (default: the
+    composite data axes). Scalars, non-arrays, and leading dims that don't
+    divide the axis size pass through unconstrained (replication is correct,
+    just not parallel). Shared by SVI batch sharding and ELBO particle
+    sharding so the divisibility/spec logic lives in exactly one place."""
+    if axis is None:
+        axis = batch_axes(mesh)
+    size = 1
+    for a in (axis if isinstance(axis, tuple) else (axis,)):
+        size *= mesh.shape[a]
+    if not hasattr(x, "ndim") or x.ndim == 0 or x.shape[0] % size != 0:
+        return x
+    spec = P(axis, *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def shard_batch(tree: Any, mesh: Mesh) -> Any:
+    """Constrain every array leaf's leading (batch) dim onto the data axes —
+    the in-jit counterpart of `batch_shardings` for SVI minibatch args."""
+    dp = batch_axes(mesh)
+    return jax.tree.map(lambda x: constrain_leading_dim(x, mesh, dp), tree)
 
 
 def replicated(mesh: Mesh):

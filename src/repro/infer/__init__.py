@@ -5,7 +5,7 @@ from .autoguide import (
     AutoLowRankMultivariateNormal,
     AutoNormal,
 )
-from .elbo import RenyiELBO, Trace_ELBO, TraceMeanField_ELBO
+from .elbo import ELBO, RenyiELBO, Trace_ELBO, TraceMeanField_ELBO, vectorize_particles
 from .tracegraph_elbo import TraceGraph_ELBO
 from .importance import Importance
 from .mcmc import HMC, MCMC, NUTS
@@ -19,6 +19,7 @@ __all__ = [
     "AutoIAFNormal",
     "AutoLowRankMultivariateNormal",
     "AutoNormal",
+    "ELBO",
     "RenyiELBO",
     "Trace_ELBO",
     "TraceGraph_ELBO",
@@ -34,4 +35,5 @@ __all__ = [
     "log_density",
     "potential_energy",
     "substitute_params",
+    "vectorize_particles",
 ]

@@ -9,17 +9,25 @@ gradient-based stochastic variational inference").
   estimates "rather than exact analytic expressions"; we provide both and
   benchmark the difference).
 * RenyiELBO — importance-weighted (IWAE-style) alpha-divergence bound.
+
+All estimators share one particle-vectorization engine (`ELBO` +
+`vectorize_particles`): a subclass defines `_single_particle` (one MC draw ->
+(elbo, surrogate)) and `_reduce` (collapse the particle axis). The engine
+handles the num_particles == 1 fast path uniformly and, when a device `mesh`
+is supplied, shards the particle axis across it so multi-particle estimates
+run data-parallel instead of serially on one device. On a 1-device mesh the
+sharded path is bit-for-bit identical to the local vmap path.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict
+from typing import Callable, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import Mesh
 
 from ..core.handlers import replay, seed, trace
 from ..distributions import kl_divergence
-from ..distributions.util import sum_rightmost
 from .util import log_mean_exp, substitute_params
 
 
@@ -29,6 +37,91 @@ def _apply_scale_mask(lp, site):
     if site["scale"] is not None:
         lp = lp * site["scale"]
     return lp
+
+
+# ---------------------------------------------------------------------------
+# the shared particle-vectorization path
+# ---------------------------------------------------------------------------
+
+
+def shard_particles(
+    keys: jax.Array, mesh: Optional[Mesh], axis: Union[str, Tuple[str, ...], None]
+) -> jax.Array:
+    """Constrain the leading (particle) dim of `keys` onto a mesh axis so XLA
+    SPMD splits the vmapped particle computation across devices. Falls back to
+    replication when no mesh is given or the particle count does not divide
+    the axis size (correctness over parallelism)."""
+    if mesh is None:
+        return keys
+    from ..distributed.sharding import constrain_leading_dim  # lazy: keeps infer light
+
+    return constrain_leading_dim(keys, mesh, axis)
+
+
+def vectorize_particles(
+    fn: Callable,
+    rng_key: jax.Array,
+    num_particles: int,
+    mesh: Optional[Mesh] = None,
+    particle_axis: Union[str, Tuple[str, ...], None] = None,
+):
+    """Run `fn(key)` for `num_particles` MC particles. One particle calls `fn`
+    directly; more are vmapped over split keys, with the particle axis
+    sharded across `mesh` when provided. Returns a pytree of stacked outputs
+    with leading dim `num_particles`."""
+    if num_particles == 1:
+        # add the particle axis explicitly (atleast_1d would leave non-scalar
+        # outputs without one, breaking axis-0 reductions like RenyiELBO's)
+        return jax.tree.map(lambda x: jnp.asarray(x)[None], fn(rng_key))
+    keys = shard_particles(jax.random.split(rng_key, num_particles), mesh, particle_axis)
+    return jax.vmap(fn)(keys)
+
+
+class ELBO:
+    """Base estimator: the engine every concrete ELBO plugs into.
+
+    Parameters
+    ----------
+    num_particles: MC particles per loss/gradient evaluation.
+    mesh: optional `jax.sharding.Mesh`; when set, particles are split across
+        `particle_axis` (default: the 'data' axis) instead of all running on
+        every device.
+    particle_axis: mesh axis (or tuple of axes) to shard particles over.
+    """
+
+    def __init__(
+        self,
+        num_particles: int = 1,
+        mesh: Optional[Mesh] = None,
+        particle_axis: Union[str, Tuple[str, ...], None] = None,
+    ):
+        if num_particles < 1:
+            raise ValueError(f"num_particles must be >= 1, got {num_particles}")
+        self.num_particles = num_particles
+        self.mesh = mesh
+        self.particle_axis = particle_axis
+
+    def loss(self, rng_key, params, model, guide, *args, **kwargs):
+        return self.loss_with_surrogate(rng_key, params, model, guide, *args, **kwargs)[0]
+
+    def loss_with_surrogate(self, rng_key, params, model, guide, *args, **kwargs):
+        elbos, surrogates = vectorize_particles(
+            lambda key: self._single_particle(key, params, model, guide, args, kwargs),
+            rng_key,
+            self.num_particles,
+            mesh=self.mesh,
+            particle_axis=self.particle_axis,
+        )
+        return self._reduce(elbos, surrogates)
+
+    # -- subclass hooks ------------------------------------------------------
+    def _single_particle(self, rng_key, params, model, guide, args, kwargs):
+        """One MC draw -> (elbo, surrogate), both scalars."""
+        raise NotImplementedError
+
+    def _reduce(self, elbos, surrogates):
+        """Collapse the (num_particles,) axis to (-loss, -surrogate)."""
+        return -jnp.mean(elbos), -jnp.mean(surrogates)
 
 
 def _single_particle_elbo(rng_key, params, model, guide, args, kwargs):
@@ -61,24 +154,11 @@ def _single_particle_elbo(rng_key, params, model, guide, args, kwargs):
     return elbo, surrogate
 
 
-class Trace_ELBO:
-    """Monte-Carlo ELBO (paper default). `num_particles` vectorized via vmap."""
+class Trace_ELBO(ELBO):
+    """Monte-Carlo ELBO (paper default), vectorized by the shared engine."""
 
-    def __init__(self, num_particles: int = 1):
-        self.num_particles = num_particles
-
-    def loss(self, rng_key, params, model, guide, *args, **kwargs):
-        return self.loss_with_surrogate(rng_key, params, model, guide, *args, **kwargs)[0]
-
-    def loss_with_surrogate(self, rng_key, params, model, guide, *args, **kwargs):
-        if self.num_particles == 1:
-            elbo, surrogate = _single_particle_elbo(rng_key, params, model, guide, args, kwargs)
-            return -elbo, -surrogate
-        keys = jax.random.split(rng_key, self.num_particles)
-        elbos, surrogates = jax.vmap(
-            lambda k: _single_particle_elbo(k, params, model, guide, args, kwargs)
-        )(keys)
-        return -jnp.mean(elbos), -jnp.mean(surrogates)
+    def _single_particle(self, rng_key, params, model, guide, args, kwargs):
+        return _single_particle_elbo(rng_key, params, model, guide, args, kwargs)
 
 
 class TraceMeanField_ELBO(Trace_ELBO):
@@ -86,62 +166,58 @@ class TraceMeanField_ELBO(Trace_ELBO):
     where available (mean-field assumption: guide sites independent given
     upstream), falling back to the MC estimate elsewhere."""
 
-    def loss_with_surrogate(self, rng_key, params, model, guide, *args, **kwargs):
-        def single(key):
-            key_guide, key_model = jax.random.split(key)
-            guide_tr = trace(seed(substitute_params(guide, params), key_guide)).get_trace(
-                *args, **kwargs
-            )
-            model_tr = trace(
-                replay(seed(substitute_params(model, params), key_model), guide_tr)
-            ).get_trace(*args, **kwargs)
-            elbo = 0.0
-            for name, site in model_tr.nodes.items():
-                if site["type"] != "sample":
-                    continue
-                if site["is_observed"]:
+    def _single_particle(self, rng_key, params, model, guide, args, kwargs):
+        key_guide, key_model = jax.random.split(rng_key)
+        guide_tr = trace(seed(substitute_params(guide, params), key_guide)).get_trace(
+            *args, **kwargs
+        )
+        model_tr = trace(
+            replay(seed(substitute_params(model, params), key_model), guide_tr)
+        ).get_trace(*args, **kwargs)
+        elbo = 0.0
+        for name, site in model_tr.nodes.items():
+            if site["type"] != "sample":
+                continue
+            if site["is_observed"]:
+                lp = _apply_scale_mask(site["fn"].log_prob(site["value"]), site)
+                elbo = elbo + jnp.sum(lp)
+            else:
+                guide_site = guide_tr.nodes[name]
+                try:
+                    kl = kl_divergence(guide_site["fn"], site["fn"])
+                    kl = _apply_scale_mask(kl, site)
+                    elbo = elbo - jnp.sum(kl)
+                except NotImplementedError:
                     lp = _apply_scale_mask(site["fn"].log_prob(site["value"]), site)
-                    elbo = elbo + jnp.sum(lp)
-                else:
-                    guide_site = guide_tr.nodes[name]
-                    try:
-                        kl = kl_divergence(guide_site["fn"], site["fn"])
-                        kl = _apply_scale_mask(kl, site)
-                        elbo = elbo - jnp.sum(kl)
-                    except NotImplementedError:
-                        lp = _apply_scale_mask(site["fn"].log_prob(site["value"]), site)
-                        lq = _apply_scale_mask(
-                            guide_site["fn"].log_prob(guide_site["value"]), guide_site
-                        )
-                        elbo = elbo + jnp.sum(lp) - jnp.sum(lq)
-            return elbo
-
-        if self.num_particles == 1:
-            elbo = single(rng_key)
-        else:
-            elbo = jnp.mean(jax.vmap(single)(jax.random.split(rng_key, self.num_particles)))
-        return -elbo, -elbo
+                    lq = _apply_scale_mask(
+                        guide_site["fn"].log_prob(guide_site["value"]), guide_site
+                    )
+                    elbo = elbo + jnp.sum(lp) - jnp.sum(lq)
+        return elbo, elbo
 
 
-class RenyiELBO:
-    """Renyi alpha-divergence bound (alpha=0 -> IWAE)."""
+class RenyiELBO(ELBO):
+    """Renyi alpha-divergence bound (alpha=0 -> IWAE). Uses the shared
+    particle path; with num_particles == 1 the bound degenerates to the
+    plain single-sample ELBO (same guard pattern as the other estimators)."""
 
-    def __init__(self, alpha: float = 0.0, num_particles: int = 2):
-        if num_particles < 2:
-            raise ValueError("RenyiELBO needs num_particles >= 2")
+    def __init__(
+        self,
+        alpha: float = 0.0,
+        num_particles: int = 2,
+        mesh: Optional[Mesh] = None,
+        particle_axis: Union[str, Tuple[str, ...], None] = None,
+    ):
+        if alpha == 1.0:
+            raise ValueError("RenyiELBO is undefined at alpha=1 (use Trace_ELBO)")
+        super().__init__(num_particles, mesh=mesh, particle_axis=particle_axis)
         self.alpha = alpha
-        self.num_particles = num_particles
 
-    def loss(self, rng_key, params, model, guide, *args, **kwargs):
-        return self.loss_with_surrogate(rng_key, params, model, guide, *args, **kwargs)[0]
+    def _single_particle(self, rng_key, params, model, guide, args, kwargs):
+        elbo, _ = _single_particle_elbo(rng_key, params, model, guide, args, kwargs)
+        return elbo, elbo
 
-    def loss_with_surrogate(self, rng_key, params, model, guide, *args, **kwargs):
-        def single(key):
-            elbo, _ = _single_particle_elbo(key, params, model, guide, args, kwargs)
-            return elbo
-
-        keys = jax.random.split(rng_key, self.num_particles)
-        log_weights = jax.vmap(single)(keys)  # (K,)
+    def _reduce(self, log_weights, _surrogates):
         scaled = (1.0 - self.alpha) * log_weights
         bound = log_mean_exp(scaled) / (1.0 - self.alpha)
         # surrogate: self-normalized importance weighting

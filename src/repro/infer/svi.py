@@ -3,7 +3,21 @@
 Functional API designed for pjit: `init` traces model+guide to discover
 param sites (storing them *unconstrained*), and `update` is a pure function
 (state, rng, batch) -> (state, loss) suitable for jax.jit / pjit with sharded
-optimizer state. A thin stateful wrapper mirrors Pyro's `svi.step(batch)`.
+optimizer state.
+
+Scale path (ROADMAP north star):
+
+* `update_jit` is a single `jax.jit` of `update` created once per SVI —
+  `run`, `SVIRunner`, benchmarks and user code all share one compile cache,
+  so steady-state steps never re-trace.
+* `mesh=` turns on SPMD: optimizer state is placed via the distributed
+  sharding rules (replicated where no rule matches), minibatch args are
+  constrained onto the data axes, and the ELBO's particle axis is sharded
+  across the mesh (see `infer.elbo.vectorize_particles`).
+* plate subsample indices can be passed explicitly via `update(...,
+  subsample={"plate_name": idx})` — they become traced arguments of the pure
+  update signature, so drawing a fresh minibatch each step reuses the same
+  compiled executable.
 """
 from __future__ import annotations
 
@@ -12,11 +26,50 @@ from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from ..core.handlers import collect_params, seed, substitute, trace
+import copy
+
+from ..core.handlers import collect_params, replay, seed, trace
+from ..core.messenger import Messenger
 from ..distributions import biject_to, constraints
 from ..optim.optimizers import Optimizer
-from .elbo import Trace_ELBO
+from .elbo import ELBO, Trace_ELBO
 from .util import substitute_params
+
+
+class _with_subsample(Messenger):
+    """Fix plate subsample indices from a dict, recording which keys bound.
+    Only `plate` messages match — a key colliding with a sample/param site
+    name cannot corrupt that site."""
+
+    def __init__(self, fn, indices, seen: set):
+        self.indices = indices
+        self.seen = seen
+        super().__init__(fn)
+
+    def process_message(self, msg):
+        if msg["type"] == "plate" and msg["name"] in self.indices:
+            msg["value"] = self.indices[msg["name"]]
+            self.seen.add(msg["name"])
+
+
+def _bind_subsample(model, guide, subsample):
+    """Wrap model+guide so their plates read indices from `subsample`;
+    returns (model, guide, check) where check() raises on keys that bound no
+    plate (typo'd plate names would otherwise silently train on the plate's
+    own random indices)."""
+    indices = dict(subsample)
+    seen: set = set()
+    model = _with_subsample(model, indices, seen)
+    guide = _with_subsample(guide, indices, seen)
+
+    def check():
+        missing = set(indices) - seen
+        if missing:
+            raise KeyError(
+                f"subsample keys {sorted(missing)} match no plate in model or guide"
+            )
+
+    return model, guide, check
 
 
 class SVIState(NamedTuple):
@@ -31,27 +84,36 @@ class SVI:
         model: Callable,
         guide: Callable,
         optim: Optimizer,
-        loss: Optional[Trace_ELBO] = None,
+        loss: Optional[ELBO] = None,
+        mesh=None,
+        shard_args: bool = True,
     ):
         self.model = model
         self.guide = guide
         self.optim = optim
         self.loss = loss or Trace_ELBO()
+        self.mesh = mesh
+        self.shard_args = shard_args
+        if mesh is not None and getattr(self.loss, "mesh", None) is None:
+            # shallow-copy so the caller's estimator isn't mutated (it may be
+            # shared with another SVI or used standalone under no mesh)
+            self.loss = copy.copy(self.loss)
+            self.loss.mesh = mesh
         self._constraints: Dict[str, Any] = {}
+        # The compile-once entry point: one jit cache shared by run(),
+        # SVIRunner and direct callers (same-shape steps never re-trace).
+        self.update_jit = jax.jit(self.update)
 
     # -- param discovery -----------------------------------------------------
     def _find_params(self, rng_key, *args, **kwargs) -> Dict[str, Any]:
         """Trace guide then model, collecting `param` sites (guide first, so
         guide-owned params win name clashes, as in Pyro's param store)."""
-        params: Dict[str, Any] = {}
         key_g, key_m = jax.random.split(rng_key)
         with collect_params() as cp_g:
             with trace() as tr_g:
                 seed(self.guide, key_g)(*args, **kwargs)
         with collect_params() as cp_m:
             # replay latents so the model sees guide values (cheap + robust)
-            from ..core.handlers import replay
-
             with trace():
                 replay(seed(self.model, key_m), tr_g)(*args, **kwargs)
         merged = {**cp_m.params, **cp_g.params}
@@ -67,26 +129,76 @@ class SVI:
         key_init, key_state = jax.random.split(rng_key)
         params = self._find_params(key_init, *args, **kwargs)
         optim_state = self.optim.init(params)
-        return SVIState(optim_state, key_state, jnp.zeros((), jnp.int32))
+        state = SVIState(optim_state, key_state, jnp.zeros((), jnp.int32))
+        # canonicalize leaves (python-float inits stay python/weak-typed up to
+        # here) so the first update_jit call traces the same signature as
+        # every later one — no step-1 recompile
+        def _canon(x):
+            x = jnp.asarray(x)
+            return jax.lax.convert_element_type(x, x.dtype)
+
+        state = jax.tree.map(_canon, state)
+        if self.mesh is not None:
+            from ..distributed.sharding import param_shardings
+
+            # rule-matched leaves shard FSDP/TP-style; the rest (guide params,
+            # rng, step) replicate — optimizer moments follow their params.
+            state = jax.device_put(state, param_shardings(state, self.mesh))
+        return state
 
     # -- pure update (jit/pjit this) ------------------------------------------
-    def update(self, state: SVIState, *args, **kwargs) -> Tuple[SVIState, jax.Array]:
+    def update(
+        self, state: SVIState, *args, subsample: Optional[Dict[str, Any]] = None, **kwargs
+    ) -> Tuple[SVIState, jax.Array]:
         rng_key, rng_step = jax.random.split(state.rng_key)
         params = self.optim.get_params(state.optim_state)
+        model, guide = self.model, self.guide
+        if subsample:
+            # plate indices ride the pure signature as traced arrays: a fresh
+            # minibatch per step hits the same compiled executable.
+            model, guide, check_subsample = _bind_subsample(model, guide, subsample)
+        if self.mesh is not None and self.shard_args:
+            # heuristic: any array arg whose leading dim divides the DP world
+            # size is treated as batched (see sharding.shard_batch); pass
+            # shard_args=False when non-batch args would be caught by it
+            from ..distributed.sharding import shard_batch
+
+            args, kwargs = shard_batch((args, kwargs), self.mesh)
 
         def loss_fn(p):
             loss, surrogate = self.loss.loss_with_surrogate(
-                rng_step, p, self.model, self.guide, *args, **kwargs
+                rng_step, p, model, guide, *args, **kwargs
             )
             return surrogate, loss
 
         grads, loss = jax.grad(loss_fn, has_aux=True)(params)
+        if subsample:
+            check_subsample()  # trace-time: typo'd plate names fail loudly
         optim_state = self.optim.update(grads, state.optim_state)
-        return SVIState(optim_state, rng_key, state.step + 1), loss
+        new_state = SVIState(optim_state, rng_key, state.step + 1)
+        if self.mesh is not None:
+            from ..distributed.sharding import param_shardings
 
-    def evaluate(self, state: SVIState, *args, **kwargs) -> jax.Array:
+            # keep the output state on the same shardings as init() placed it,
+            # so state stays distributed and steady-state calls never re-trace
+            new_state = jax.tree.map(
+                jax.lax.with_sharding_constraint,
+                new_state,
+                param_shardings(new_state, self.mesh),
+            )
+        return new_state, loss
+
+    def evaluate(
+        self, state: SVIState, *args, subsample: Optional[Dict[str, Any]] = None, **kwargs
+    ) -> jax.Array:
         params = self.optim.get_params(state.optim_state)
-        return self.loss.loss(state.rng_key, params, self.model, self.guide, *args, **kwargs)
+        model, guide = self.model, self.guide
+        if subsample:
+            model, guide, check_subsample = _bind_subsample(model, guide, subsample)
+        loss = self.loss.loss(state.rng_key, params, model, guide, *args, **kwargs)
+        if subsample:
+            check_subsample()
+        return loss
 
     # -- params in constrained space -----------------------------------------
     def get_params(self, state: SVIState) -> Dict[str, Any]:
@@ -100,10 +212,9 @@ class SVI:
     # -- Pyro-style stateful convenience ---------------------------------------
     def run(self, rng_key, num_steps: int, *args, progress: bool = False, **kwargs):
         state = self.init(rng_key, *args, **kwargs)
-        update = jax.jit(lambda s: self.update(s, *args, **kwargs))
         losses = []
         for i in range(num_steps):
-            state, loss = update(state)
+            state, loss = self.update_jit(state, *args, **kwargs)
             losses.append(loss)
         return state, jnp.stack(losses)
 
@@ -114,10 +225,9 @@ class SVIRunner:
     def __init__(self, svi: SVI, rng_key, *args, **kwargs):
         self.svi = svi
         self.state = svi.init(rng_key, *args, **kwargs)
-        self._update = jax.jit(svi.update)
 
     def step(self, *args, **kwargs) -> float:
-        self.state, loss = self._update(self.state, *args, **kwargs)
+        self.state, loss = self.svi.update_jit(self.state, *args, **kwargs)
         return float(loss)
 
     @property

@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core.handlers import replay, seed, trace
-from .elbo import _apply_scale_mask
+from .elbo import ELBO, _apply_scale_mask
 from .util import substitute_params
 
 
@@ -24,77 +24,64 @@ def _site_plates(site) -> frozenset:
     return frozenset(f.name for f in site["cond_indep_stack"])
 
 
-class TraceGraph_ELBO:
-    """Plate-aware score-function ELBO. `num_particles` via vmap; baselines
-    are exponential moving averages maintained OUTSIDE jit (pass
+class TraceGraph_ELBO(ELBO):
+    """Plate-aware score-function ELBO on the shared particle engine;
+    baselines are exponential moving averages maintained OUTSIDE jit (pass
     `baselines=` dict and update with the returned new values)."""
 
-    def __init__(self, num_particles: int = 1, baseline_decay: float = 0.9):
-        self.num_particles = num_particles
+    def __init__(self, num_particles: int = 1, baseline_decay: float = 0.9, **engine_kwargs):
+        super().__init__(num_particles, **engine_kwargs)
         self.baseline_decay = baseline_decay
 
-    def loss(self, rng_key, params, model, guide, *args, **kwargs):
-        return self.loss_with_surrogate(rng_key, params, model, guide, *args, **kwargs)[0]
+    def _single_particle(self, rng_key, params, model, guide, args, kwargs):
+        key_g, key_m = jax.random.split(rng_key)
+        guide_tr = trace(seed(substitute_params(guide, params), key_g)).get_trace(
+            *args, **kwargs
+        )
+        model_tr = trace(
+            replay(seed(substitute_params(model, params), key_m), guide_tr)
+        ).get_trace(*args, **kwargs)
 
-    def loss_with_surrogate(self, rng_key, params, model, guide, *args, **kwargs):
-        def single(key):
-            key_g, key_m = jax.random.split(key)
-            guide_tr = trace(seed(substitute_params(guide, params), key_g)).get_trace(
-                *args, **kwargs
-            )
-            model_tr = trace(
-                replay(seed(substitute_params(model, params), key_m), guide_tr)
-            ).get_trace(*args, **kwargs)
+        # cost terms: every model log_prob and negated guide log_prob,
+        # kept as ARRAYS with their plate frames (per-element weighting
+        # is the Rao-Blackwellization — summing first collapses back to
+        # the naive estimator)
+        costs = []  # (frames dict name->dim, lp_array)
+        for name, site in model_tr.nodes.items():
+            if site["type"] != "sample":
+                continue
+            lp = _apply_scale_mask(site["fn"].log_prob(site["value"]), site)
+            costs.append(({f.name: f.dim for f in site["cond_indep_stack"]}, lp))
+        for name, site in guide_tr.nodes.items():
+            if site["type"] != "sample" or site["is_observed"]:
+                continue
+            lq = _apply_scale_mask(site["fn"].log_prob(site["value"]), site)
+            costs.append(({f.name: f.dim for f in site["cond_indep_stack"]}, -lq))
 
-            # cost terms: every model log_prob and negated guide log_prob,
-            # kept as ARRAYS with their plate frames (per-element weighting
-            # is the Rao-Blackwellization — summing first collapses back to
-            # the naive estimator)
-            costs = []  # (frames dict name->dim, lp_array)
-            for name, site in model_tr.nodes.items():
-                if site["type"] != "sample":
-                    continue
-                lp = _apply_scale_mask(site["fn"].log_prob(site["value"]), site)
-                costs.append(({f.name: f.dim for f in site["cond_indep_stack"]}, lp))
-            for name, site in guide_tr.nodes.items():
-                if site["type"] != "sample" or site["is_observed"]:
-                    continue
-                lq = _apply_scale_mask(site["fn"].log_prob(site["value"]), site)
-                costs.append(({f.name: f.dim for f in site["cond_indep_stack"]}, -lq))
+        elbo = sum(jnp.sum(c) for _, c in costs)
 
-            elbo = sum(jnp.sum(c) for _, c in costs)
-
-            # score terms: each non-reparam guide site's per-element score is
-            # weighted by the per-element downstream cost inside its plates
-            surrogate = elbo
-            for name, site in guide_tr.nodes.items():
-                if site["type"] != "sample" or site["is_observed"]:
+        # score terms: each non-reparam guide site's per-element score is
+        # weighted by the per-element downstream cost inside its plates
+        surrogate = elbo
+        for name, site in guide_tr.nodes.items():
+            if site["type"] != "sample" or site["is_observed"]:
+                continue
+            if site["fn"].has_rsample:
+                continue
+            lq = _apply_scale_mask(site["fn"].log_prob(site["value"]), site)
+            s_frames = {f.name: f.dim for f in site["cond_indep_stack"]}
+            downstream = jnp.zeros_like(lq)
+            for c_frames, c in costs:
+                if not set(s_frames).issubset(c_frames):
                     continue
-                if site["fn"].has_rsample:
-                    continue
-                lq = _apply_scale_mask(site["fn"].log_prob(site["value"]), site)
-                s_frames = {f.name: f.dim for f in site["cond_indep_stack"]}
-                downstream = jnp.zeros_like(lq)
-                for c_frames, c in costs:
-                    if not set(s_frames).issubset(c_frames):
-                        continue
-                    # sum the cost over plate dims the site does not share
-                    extra = [d for n, d in c_frames.items() if n not in s_frames]
-                    red = jnp.sum(c, axis=tuple(extra)) if extra else c
-                    downstream = downstream + jnp.broadcast_to(
-                        red, jnp.broadcast_shapes(red.shape, lq.shape)
-                    )
-                w = jax.lax.stop_gradient(downstream)
-                surrogate = surrogate + jnp.sum(
-                    w * (lq - jax.lax.stop_gradient(lq))
+                # sum the cost over plate dims the site does not share
+                extra = [d for n, d in c_frames.items() if n not in s_frames]
+                red = jnp.sum(c, axis=tuple(extra)) if extra else c
+                downstream = downstream + jnp.broadcast_to(
+                    red, jnp.broadcast_shapes(red.shape, lq.shape)
                 )
-            return elbo, surrogate
-
-        if self.num_particles == 1:
-            elbo, surrogate = single(rng_key)
-        else:
-            elbos, surrogates = jax.vmap(single)(
-                jax.random.split(rng_key, self.num_particles)
+            w = jax.lax.stop_gradient(downstream)
+            surrogate = surrogate + jnp.sum(
+                w * (lq - jax.lax.stop_gradient(lq))
             )
-            elbo, surrogate = jnp.mean(elbos), jnp.mean(surrogates)
-        return -elbo, -surrogate
+        return elbo, surrogate

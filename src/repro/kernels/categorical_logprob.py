@@ -85,7 +85,7 @@ def categorical_logprob_flat(
             pltpu.VMEM((bt,), jnp.float32),  # running sum
             pltpu.VMEM((bt,), jnp.float32),  # target logit
         ],
-        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel", "arbitrary")),
+        compiler_params=pltpu.TPUCompilerParams(dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(logits, tokens[:, None].astype(jnp.int32))
     return out[:T, 0]

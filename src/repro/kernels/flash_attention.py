@@ -97,6 +97,6 @@ def flash_attention_gqa(
             pltpu.VMEM((bq,), jnp.float32),      # running denom
             pltpu.VMEM((bq, d), jnp.float32),    # output accumulator
         ],
-        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")),
+        compiler_params=pltpu.TPUCompilerParams(dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v)

@@ -1,33 +1,77 @@
-"""jit'd public wrappers around the Pallas kernels.
+"""Backend-dispatched public wrappers around the Pallas kernels.
 
-On this CPU container the kernels run with interpret=True (Pallas executes
-the kernel body in Python for correctness); on TPU set
-``REPRO_PALLAS_INTERPRET=0`` (or rely on the default platform check) to get
-the compiled Mosaic kernels.
+Every op resolves a *kernel backend* and routes to one of three
+implementations, so the hot log-prob paths work on every platform CI runs on:
+
+  ``tpu``        compiled Mosaic kernels (requires a TPU jax backend)
+  ``interpret``  Pallas interpret mode — the kernel body executed as XLA ops,
+                 correct on any platform (what kernel tests exercise on CPU)
+  ``reference``  the pure-jnp oracles in `kernels/ref.py` (fastest off-TPU)
+
+Resolution precedence: explicit ``backend=`` argument > the
+``REPRO_KERNEL_BACKEND`` env var (``tpu`` / ``interpret`` / ``reference`` /
+``auto``) > the legacy ``REPRO_PALLAS_INTERPRET`` flag > platform default
+(``tpu`` on TPU, ``reference`` everywhere else). The resolved backend is a
+static argument of the underlying jit, so switching backends compiles a
+separate executable instead of clobbering one cache entry.
 """
 from __future__ import annotations
 
 import functools
 import os
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from . import ref
 from .categorical_logprob import categorical_logprob_flat
 from .flash_attention import flash_attention_gqa
 from .ssd_scan import ssd_scan_chunked
 
-
-def _interpret() -> bool:
-    env = os.environ.get("REPRO_PALLAS_INTERPRET")
-    if env is not None:
-        return env not in ("0", "false", "False")
-    return jax.default_backend() != "tpu"
+BACKENDS = ("tpu", "interpret", "reference")
 
 
-@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k"))
-def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 256, block_k: int = 512):
-    """q: (B, H, Sq, d); k/v: (B, K, Skv, d), H % K == 0. Returns (B,H,Sq,d)."""
+def resolve_backend(backend: Optional[str] = None) -> str:
+    """Resolve an explicit/env/platform kernel-backend choice to one of
+    `BACKENDS`. See module docstring for precedence."""
+    if backend is None:
+        backend = os.environ.get("REPRO_KERNEL_BACKEND", "auto")
+    if backend == "ref":  # convenience alias
+        backend = "reference"
+    if backend in BACKENDS:
+        return backend
+    if backend != "auto":
+        raise ValueError(
+            f"unknown kernel backend {backend!r}; expected one of {BACKENDS + ('auto',)}"
+        )
+    legacy = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if legacy is not None:
+        return "tpu" if legacy in ("0", "false", "False") else "interpret"
+    return "tpu" if jax.default_backend() == "tpu" else "reference"
+
+
+# declared per-op support — a new op (or an op dropping a backend) must edit
+# this table, and the README matrix mirrors it
+_SUPPORT = {
+    "flash_attention": ("tpu", "interpret", "reference"),
+    "categorical_logprob": ("tpu", "interpret", "reference"),
+    "ssd_scan": ("tpu", "interpret", "reference"),
+}
+
+
+def backend_support_matrix() -> dict:
+    """Which backends each op supports (README's support matrix, as data)."""
+    return {op: {b: b in sup for b in BACKENDS} for op, sup in _SUPPORT.items()}
+
+
+# -- flash attention ---------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k", "backend"))
+def _flash_attention(q, k, v, *, causal, block_q, block_k, backend):
+    if backend == "reference":
+        return ref.flash_attention_ref(q, k, v, causal=causal)
     B, H, Sq, d = q.shape
     K, Skv = k.shape[1], k.shape[2]
     g = H // K
@@ -36,28 +80,56 @@ def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 256, block_k
     vr = v.reshape(B * K, Skv, d)
     out = flash_attention_gqa(
         qr, kr, vr, causal=causal, block_q=block_q, block_k=block_k,
-        interpret=_interpret(),
+        interpret=(backend == "interpret"),
     )
     return out.reshape(B, K, g, Sq, d).reshape(B, H, Sq, d)
 
 
-@functools.partial(jax.jit, static_argnames=("block_t", "block_v"))
-def categorical_logprob(logits, tokens, *, block_t: int = 256, block_v: int = 2048):
-    """logits: (..., V); tokens: (...). Returns per-token log p, f32."""
+def flash_attention(
+    q, k, v, *, causal: bool = True, block_q: int = 256, block_k: int = 512,
+    backend: Optional[str] = None,
+):
+    """q: (B, H, Sq, d); k/v: (B, K, Skv, d), H % K == 0. Returns (B,H,Sq,d)."""
+    return _flash_attention(
+        q, k, v, causal=causal, block_q=block_q, block_k=block_k,
+        backend=resolve_backend(backend),
+    )
+
+
+# -- categorical log-prob ----------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_v", "backend"))
+def _categorical_logprob(logits, tokens, *, block_t, block_v, backend):
+    if backend == "reference":
+        return ref.categorical_logprob_ref(logits, tokens)
     V = logits.shape[-1]
     batch_shape = logits.shape[:-1]
     out = categorical_logprob_flat(
         logits.reshape(-1, V), tokens.reshape(-1).astype(jnp.int32),
-        block_t=block_t, block_v=block_v, interpret=_interpret(),
+        block_t=block_t, block_v=block_v, interpret=(backend == "interpret"),
     )
     return out.reshape(batch_shape)
 
 
-@functools.partial(jax.jit, static_argnames=("chunk",))
-def ssd_scan(x, dt, A, B, C, *, chunk: int = 128):
-    """Mamba-2 SSD. x: (b,s,h,p), dt: (b,s,h), A: (h,), B/C: (b,s,n).
-    Returns y: (b,s,h,p) float32. s must be a multiple of `chunk`
-    (models/ssm.ssd_block pads)."""
+def categorical_logprob(
+    logits, tokens, *, block_t: int = 256, block_v: int = 2048,
+    backend: Optional[str] = None,
+):
+    """logits: (..., V); tokens: (...). Returns per-token log p, f32."""
+    return _categorical_logprob(
+        logits, tokens, block_t=block_t, block_v=block_v,
+        backend=resolve_backend(backend),
+    )
+
+
+# -- Mamba-2 SSD scan --------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "backend"))
+def _ssd_scan(x, dt, A, B, C, *, chunk, backend):
+    if backend == "reference":
+        return ref.ssd_scan_ref(x, dt, A, B, C, chunk=chunk)
     b, s, h, p = x.shape
     n = B.shape[-1]
     Q = chunk
@@ -67,5 +139,12 @@ def ssd_scan(x, dt, A, B, C, *, chunk: int = 128):
     dAr = dtr * A[None, :, None, None]
     Br = B.reshape(b, C_, Q, n)
     Cr = C.reshape(b, C_, Q, n)
-    y = ssd_scan_chunked(xr, dAr, dtr, Br, Cr, interpret=_interpret())
+    y = ssd_scan_chunked(xr, dAr, dtr, Br, Cr, interpret=(backend == "interpret"))
     return y.reshape(b, h, s, p).transpose(0, 2, 1, 3)
+
+
+def ssd_scan(x, dt, A, B, C, *, chunk: int = 128, backend: Optional[str] = None):
+    """Mamba-2 SSD. x: (b,s,h,p), dt: (b,s,h), A: (h,), B/C: (b,s,n).
+    Returns y: (b,s,h,p) float32. s must be a multiple of `chunk`
+    (models/ssm.ssd_block pads)."""
+    return _ssd_scan(x, dt, A, B, C, chunk=chunk, backend=resolve_backend(backend))

@@ -93,6 +93,6 @@ def ssd_scan_chunked(
         out_specs=pl.BlockSpec((1, 1, 1, Q, P), lambda b, h, c: (b, h, c, 0, 0)),
         out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
         scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel", "parallel", "arbitrary")),
+        compiler_params=pltpu.TPUCompilerParams(dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, dA, dt, Bm, Cm)

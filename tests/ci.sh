@@ -1,0 +1,12 @@
+#!/usr/bin/env bash
+# Local mirror of .github/workflows/ci.yml: pinned deps + the tier-1 verify
+# command on CPU. The suite must never again fail at collection — missing
+# optional deps (hypothesis) skip their modules instead of erroring.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if [[ "${CI_INSTALL:-0}" == "1" ]]; then
+    python -m pip install -r requirements.txt
+fi
+
+JAX_PLATFORMS=cpu PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q "$@"

@@ -5,6 +5,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 import scipy.stats as ss
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install -r requirements.txt)",
+)
 from hypothesis import given, settings, strategies as st
 
 from repro import distributions as dist
