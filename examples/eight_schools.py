@@ -1,0 +1,84 @@
+"""Eight schools (Rubin 1981; Gelman et al., BDA) — the canonical NUTS
+benchmark: a hierarchical meta-analysis of coaching effects in J=8 schools.
+
+We use the non-centered parameterization (theta = mu + tau * theta_std),
+which removes the funnel geometry that makes the centered version produce
+divergences, and run 4 NUTS chains with the multi-chain MCMC engine —
+warmup + collection compile to a single XLA call, chains are vmapped (add
+`chain_method="sharded"` to spread them across devices).
+
+Expected diagnostics for this setup (4 chains x 500 draws, seed 0; exact
+values vary slightly by platform):
+
+* r_hat in [0.99, 1.02] for every site — the chains mix well;
+* bulk n_eff of mu and tau of order 600-1200 (a decent fraction of the
+  2000 collected draws; tau mixes slowest since it controls the funnel);
+* divergences around 1% of draws or fewer (the centered parameterization,
+  by contrast, typically diverges an order of magnitude more often at
+  target_accept=0.8);
+* posterior mu ~ 4.2 +/- 3.3, tau median ~ 2.8 (heavy right tail).
+
+Run:  PYTHONPATH=src python examples/eight_schools.py [--chains 4]
+"""
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+sys.path.insert(0, "src")
+
+from repro import distributions as dist
+from repro.core import primitives as P
+from repro.infer import MCMC, NUTS
+
+J = 8
+Y = jnp.asarray([28.0, 8.0, -3.0, 7.0, -1.0, 1.0, 18.0, 12.0])
+SIGMA = jnp.asarray([15.0, 10.0, 16.0, 11.0, 9.0, 11.0, 10.0, 18.0])
+
+
+def eight_schools(y, sigma):
+    mu = P.sample("mu", dist.Normal(0.0, 5.0))
+    tau = P.sample("tau", dist.HalfCauchy(5.0))
+    with P.plate("J", J):
+        theta_std = P.sample("theta_std", dist.Normal(0.0, 1.0))
+        theta = P.deterministic("theta", mu + tau * theta_std)
+        P.sample("obs", dist.Normal(theta, sigma), obs=y)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--chains", type=int, default=4)
+    ap.add_argument("--warmup", type=int, default=500)
+    ap.add_argument("--samples", type=int, default=500)
+    ap.add_argument("--sharded", action="store_true",
+                    help="shard chains across devices via the mesh rules")
+    args = ap.parse_args(argv)
+
+    kernel = NUTS(eight_schools, max_tree_depth=8)
+    mcmc = MCMC(
+        kernel,
+        num_warmup=args.warmup,
+        num_samples=args.samples,
+        num_chains=args.chains,
+        chain_method="sharded" if args.sharded else "vectorized",
+    )
+    t0 = time.time()
+    mcmc.run(jax.random.PRNGKey(0), Y, SIGMA)
+    dt = time.time() - t0
+
+    total = args.chains * args.samples
+    print(f"{args.chains} chains x {args.samples} draws in {dt:.1f}s "
+          f"({total / dt:.0f} draws/s, {mcmc.num_traces} compiled call)\n")
+    stats = mcmc.summary()  # prints the table, returns the stats dict
+
+    n_div = int(mcmc.get_extra_fields()["diverging"].sum())
+    worst_rhat = max(float(jnp.max(s["r_hat"])) for s in stats.values())
+    print(f"\nworst r_hat: {worst_rhat:.3f} (expect < 1.05)")
+    assert n_div < 0.02 * total, f"too many divergences: {n_div}"
+    assert worst_rhat < 1.1, f"chains did not converge: r_hat={worst_rhat:.3f}"
+
+
+if __name__ == "__main__":
+    main()

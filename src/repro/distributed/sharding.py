@@ -220,6 +220,22 @@ def shard_batch(tree: Any, mesh: Mesh) -> Any:
     return jax.tree.map(lambda x: constrain_leading_dim(x, mesh, dp), tree)
 
 
+def default_mesh(axis_name: str = "data") -> Mesh:
+    """1-D mesh over all local devices — the default for embarrassingly
+    data-parallel workloads (MCMC chain sharding) where no TP axis is needed.
+    `batch_axes` resolves it like any other mesh with a 'data' axis."""
+    return jax.make_mesh((jax.device_count(),), (axis_name,))
+
+
+def shard_chains(tree: Any, mesh: Mesh) -> Any:
+    """Constrain every array leaf's leading (chain) dim onto the data axes —
+    MCMC's counterpart of `shard_batch` (same policy, one implementation).
+    Chains whose count doesn't divide the data-axis size pass through
+    replicated (correct, just not parallel), so a 4-chain run works
+    unchanged on 1, 2 or 4 devices."""
+    return shard_batch(tree, mesh)
+
+
 def replicated(mesh: Mesh):
     return NamedSharding(mesh, P())
 

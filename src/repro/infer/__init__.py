@@ -8,10 +8,11 @@ from .autoguide import (
 from .elbo import ELBO, RenyiELBO, Trace_ELBO, TraceMeanField_ELBO, vectorize_particles
 from .tracegraph_elbo import TraceGraph_ELBO
 from .importance import Importance
+from .diagnostics import effective_sample_size, print_summary, split_rhat, summary
 from .mcmc import HMC, MCMC, NUTS
 from .predictive import Predictive
 from .svi import SVI, SVIRunner, SVIState
-from .util import log_density, potential_energy, substitute_params
+from .util import initialize_model, log_density, potential_energy, substitute_params
 
 __all__ = [
     "AutoDelta",
@@ -32,8 +33,13 @@ __all__ = [
     "SVI",
     "SVIRunner",
     "SVIState",
+    "effective_sample_size",
+    "initialize_model",
     "log_density",
     "potential_energy",
+    "print_summary",
+    "split_rhat",
     "substitute_params",
+    "summary",
     "vectorize_particles",
 ]

@@ -1,4 +1,7 @@
-"""Automatic guide construction (Pyro's `pyro.infer.autoguide`).
+"""Automatic guide construction (Pyro's `pyro.infer.autoguide`; paper §2
+describes guides as "arbitrary Pyro programs" paired with a model for SVI,
+and Fig. 4 extends a mean-field guide with inverse autoregressive flows —
+autoguides synthesize those guide programs from the model's trace).
 
 AutoDelta  -> MAP / MLE (this is how the big LM configs train: SVI with a
               Delta guide over weights == maximum likelihood, making the PPL
@@ -6,6 +9,29 @@ AutoDelta  -> MAP / MLE (this is how the big LM configs train: SVI with a
 AutoNormal -> mean-field ADVI.
 AutoLowRankMVN -> low-rank multivariate normal posterior.
 AutoIAFNormal -> normalizing-flow guide (paper Fig. 4's IAF extension).
+
+Every autoguide traces the model lazily, registers its variational
+parameters in *unconstrained* space, and bijects samples back to each
+site's support — so it composes with the sharded SVI engine's `mesh=` and
+explicit-subsample machinery unchanged.
+
+Example — mean-field ADVI on a conjugate model::
+
+    >>> import jax, jax.numpy as jnp
+    >>> from repro import distributions as dist, optim
+    >>> from repro.core import primitives as P
+    >>> from repro.infer import SVI, AutoNormal, Trace_ELBO
+    >>> def model(data):
+    ...     loc = P.sample("loc", dist.Normal(0.0, 10.0))
+    ...     with P.plate("N", data.shape[0]):
+    ...         P.sample("obs", dist.Normal(loc, 1.0), obs=data)
+    >>> guide = AutoNormal(model)
+    >>> svi = SVI(model, guide, optim.Adam(0.1), Trace_ELBO())
+    >>> state, losses = svi.run(jax.random.PRNGKey(0), 100, jnp.ones(5))
+    >>> sorted(svi.get_params(state))
+    ['auto_loc_loc', 'auto_loc_scale']
+    >>> bool(losses[-1] < losses[0])
+    True
 """
 from __future__ import annotations
 

@@ -1,0 +1,249 @@
+"""MCMC convergence diagnostics (paper §2 frames sampling-based inference as
+a first-class citizen next to SVI; production use of "the No U-turn Sampler"
+requires knowing when chains have converged, so this module implements the
+modern split-R̂ / ESS toolkit of Vehtari, Gelman, Simpson, Carpenter & Bürkner,
+"Rank-normalization, folding, and localization: An improved R̂ for assessing
+convergence of MCMC" (2021), as used by Stan and ArviZ).
+
+All functions take draws shaped ``(num_chains, num_draws, *event)`` — the
+layout of ``MCMC.get_samples(group_by_chain=True)`` — and return per-event
+arrays:
+
+* :func:`split_rhat` — classic split-chain potential scale reduction factor
+  (Gelman & Rubin 1992, split form): each chain is halved so within-chain
+  non-stationarity shows up as between-chain variance. R̂ ≈ 1 at
+  convergence; > 1.01 is suspect.
+* :func:`effective_sample_size` — computed on split chains like R̂;
+  ``kind="bulk"`` rank-normalizes the draws then estimates ESS from
+  chain-averaged autocorrelations truncated by Geyer's initial monotone
+  positive sequence; ``kind="tail"`` is the minimum ESS of the 5% / 95%
+  quantile indicator functions (tail exploration).
+* :func:`summary` / :func:`print_summary` — per-site mean/std/median/credible
+  interval + the diagnostics above, plus the divergence count when MCMC
+  extra fields are given.
+
+Example — diagnostics on synthetic chains::
+
+    >>> import jax, jax.numpy as jnp
+    >>> from repro.infer.diagnostics import effective_sample_size, split_rhat
+    >>> x = jax.random.normal(jax.random.PRNGKey(0), (4, 500))  # iid draws
+    >>> bool(jnp.abs(split_rhat(x) - 1.0) < 0.02)
+    True
+    >>> shifted = x + 10.0 * jnp.arange(4.0)[:, None]  # disjoint chains
+    >>> bool(split_rhat(shifted) > 3.0)
+    True
+    >>> ess = effective_sample_size(x)
+    >>> bool(0.5 * 2000 < ess <= 1.1 * 2000)  # iid: ESS ~ total draws
+    True
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.special import ndtri
+
+__all__ = [
+    "split_rhat",
+    "effective_sample_size",
+    "summary",
+    "print_summary",
+]
+
+
+# ---------------------------------------------------------------------------
+# core estimators on (..., num_chains, num_draws) batches
+# ---------------------------------------------------------------------------
+
+
+def _as_batched(x: jnp.ndarray) -> jnp.ndarray:
+    """(chains, draws, *event) -> (K, chains, draws) with K = prod(event)."""
+    x = jnp.asarray(x)
+    if x.ndim < 2:
+        raise ValueError(
+            f"expected (num_chains, num_draws, ...) draws, got shape {x.shape}"
+        )
+    m, n = x.shape[:2]
+    return jnp.moveaxis(x.reshape(m, n, -1), -1, 0)
+
+
+def _split_chains(x: jnp.ndarray) -> jnp.ndarray:
+    """Halve each chain along draws: (..., m, n) -> (..., 2m, n//2)."""
+    n = x.shape[-1]
+    half = n // 2
+    first = x[..., :half]
+    second = x[..., n - half:]
+    return jnp.concatenate([first, second], axis=-2)
+
+
+def _rhat_batched(x: jnp.ndarray) -> jnp.ndarray:
+    """Split-R̂ on (..., m, n): sqrt(var+ / W)."""
+    x = _split_chains(x)
+    n = x.shape[-1]
+    chain_mean = x.mean(-1)
+    chain_var = x.var(-1, ddof=1)
+    w = chain_var.mean(-1)
+    b = n * chain_mean.var(-1, ddof=1)
+    var_plus = (n - 1) / n * w + b / n
+    return jnp.sqrt(var_plus / w)
+
+
+def _autocov(x: jnp.ndarray) -> jnp.ndarray:
+    """Biased autocovariance along the last axis via FFT: (..., n) -> (..., n)."""
+    n = x.shape[-1]
+    x = x - x.mean(-1, keepdims=True)
+    size = 1
+    while size < 2 * n:
+        size *= 2
+    f = jnp.fft.rfft(x, size)
+    acov = jnp.fft.irfft(f * jnp.conj(f), size)[..., :n]
+    return acov / n
+
+
+def _ess_batched(x: jnp.ndarray) -> jnp.ndarray:
+    """ESS on (..., m, n) raw draws (no rank-normalization), after Stan:
+    chain-averaged autocorrelations, Geyer initial monotone positive
+    sequence truncation."""
+    m, n = x.shape[-2], x.shape[-1]
+    acov = _autocov(x)  # (..., m, n)
+    chain_var = acov[..., 0] * n / (n - 1.0)  # unbiased per-chain variance
+    w = chain_var.mean(-1)  # (...,)
+    mean_acov = acov.mean(-2)  # (..., n)
+    if m > 1:
+        chain_mean = x.mean(-1)
+        b_over_n = chain_mean.var(-1, ddof=1)
+        var_plus = (n - 1.0) / n * w + b_over_n
+    else:
+        var_plus = (n - 1.0) / n * w
+    # guard constant chains (e.g. an all-zero tail indicator): report ESS=mn
+    safe = var_plus > 0
+    var_plus_s = jnp.where(safe, var_plus, 1.0)
+    rho = 1.0 - (w[..., None] - mean_acov) / var_plus_s[..., None]  # (..., n)
+    rho = rho.at[..., 0].set(1.0)
+    # Geyer pair sums P_k = rho_{2k} + rho_{2k+1}
+    n_pairs = n // 2
+    p = rho[..., 0 : 2 * n_pairs : 2] + rho[..., 1 : 2 * n_pairs : 2]
+    # initial positive sequence: keep pairs up to the first non-positive one
+    positive = jnp.cumprod(p > 0, axis=-1).astype(p.dtype)
+    # initial monotone sequence: running minimum over the kept prefix
+    p_mono = jax.lax.associative_scan(jnp.minimum, jnp.clip(p, 0.0), axis=-1)
+    tau = -1.0 + 2.0 * jnp.sum(p_mono * positive, axis=-1)
+    tau = jnp.maximum(tau, 1.0 / jnp.log10(jnp.asarray(float(m * n))))
+    ess = m * n / tau
+    ess = jnp.minimum(ess, m * n * jnp.log10(jnp.asarray(float(m * n))))
+    return jnp.where(safe, ess, float(m * n))
+
+
+def _rank_normalize(x: jnp.ndarray) -> jnp.ndarray:
+    """Rank-normalize draws across all chains jointly: (..., m, n) -> same
+    shape, values replaced by normal scores of their ranks (Blom offsets)."""
+    shape = x.shape
+    flat = x.reshape(shape[:-2] + (-1,))
+    total = flat.shape[-1]
+    order = jnp.argsort(flat, axis=-1)
+    ranks = jnp.argsort(order, axis=-1)
+    u = (ranks + 1.0 - 0.375) / (total + 0.25)
+    return ndtri(u).reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# public API on (num_chains, num_draws, *event) arrays
+# ---------------------------------------------------------------------------
+
+
+def split_rhat(x: jnp.ndarray) -> jnp.ndarray:
+    """Split-chain R̂ of draws shaped (num_chains, num_draws, *event);
+    returns an array shaped like the event (scalar for scalar sites)."""
+    batched = _as_batched(x)
+    out = _rhat_batched(batched)
+    return out.reshape(jnp.shape(x)[2:])
+
+
+def effective_sample_size(x: jnp.ndarray, kind: str = "bulk") -> jnp.ndarray:
+    """Effective sample size of draws shaped (num_chains, num_draws, *event).
+
+    ``kind="bulk"`` (default) follows Vehtari et al. 2021: ESS of the
+    rank-normalized draws. ``kind="tail"`` is the minimum ESS of the
+    I(x <= q05) and I(x <= q95) indicator chains. ``kind="raw"`` skips
+    rank-normalization (classic autocorrelation ESS). All kinds operate on
+    *split* chains (as Stan/ArviZ do), so within-chain drift deflates the
+    estimate instead of hiding in the within-chain variance.
+    """
+    batched = _split_chains(_as_batched(x))  # (K, 2m, n//2)
+    if kind == "bulk":
+        out = _ess_batched(_rank_normalize(batched))
+    elif kind == "raw":
+        out = _ess_batched(batched)
+    elif kind == "tail":
+        q = jnp.quantile(batched, jnp.asarray([0.05, 0.95]), axis=(-2, -1))  # (2, K)
+        lo = (batched <= q[0][..., None, None]).astype(jnp.float32)
+        hi = (batched <= q[1][..., None, None]).astype(jnp.float32)
+        out = jnp.minimum(_ess_batched(lo), _ess_batched(hi))
+    else:
+        raise ValueError(f"kind must be 'bulk', 'tail' or 'raw', got {kind!r}")
+    return out.reshape(jnp.shape(x)[2:])
+
+
+def summary(
+    samples: Dict[str, jnp.ndarray], prob: float = 0.9
+) -> Dict[str, Dict[str, jnp.ndarray]]:
+    """Per-site statistics of ``{site: (num_chains, num_draws, *event)}``:
+    mean, std, median, the central `prob` credible interval, bulk/tail ESS
+    and split-R̂ (each shaped like the site's event shape)."""
+    lo_q, hi_q = 0.5 - prob / 2.0, 0.5 + prob / 2.0
+    out: Dict[str, Dict[str, jnp.ndarray]] = {}
+    for name, x in samples.items():
+        x = jnp.asarray(x)
+        out[name] = {
+            "mean": x.mean((0, 1)),
+            "std": x.std((0, 1)),
+            "median": jnp.quantile(x, 0.5, axis=(0, 1)),
+            f"{lo_q * 100:.1f}%": jnp.quantile(x, lo_q, axis=(0, 1)),
+            f"{hi_q * 100:.1f}%": jnp.quantile(x, hi_q, axis=(0, 1)),
+            "n_eff": effective_sample_size(x, kind="bulk"),
+            "ess_tail": effective_sample_size(x, kind="tail"),
+            "r_hat": split_rhat(x),
+        }
+    return out
+
+
+def print_summary(
+    samples: Dict[str, jnp.ndarray],
+    extra_fields: Optional[Dict[str, jnp.ndarray]] = None,
+    prob: float = 0.9,
+    file=None,
+) -> None:
+    """Render :func:`summary` as an aligned table (one row per scalar site
+    element), plus the total divergence count when `extra_fields` carries
+    the MCMC driver's per-draw ``diverging`` flags."""
+    stats = summary(samples, prob=prob)
+    cols = list(next(iter(stats.values())).keys()) if stats else []
+    rows = []
+    for name, st in stats.items():
+        event_shape = jnp.shape(st["mean"])
+        size = 1
+        for d in event_shape:
+            size *= d
+        for flat_i in range(size):
+            idx = jnp.unravel_index(flat_i, event_shape) if event_shape else ()
+            label = name
+            if event_shape:
+                label += "[" + ",".join(str(int(i)) for i in idx) + "]"
+            rows.append(
+                [label] + [float(jnp.asarray(st[c])[tuple(idx)] if event_shape else st[c]) for c in cols]
+            )
+    widths = [max([len("site")] + [len(r[0]) for r in rows])] + [
+        max(9, len(c)) for c in cols
+    ]
+    header = ["site"] + cols
+    line = "  ".join(h.rjust(w) for h, w in zip(header, widths))
+    print(line, file=file)
+    for r in rows:
+        cells = [r[0].rjust(widths[0])]
+        for v, w in zip(r[1:], widths[1:]):
+            cells.append(f"{v:>{w}.2f}")
+        print("  ".join(cells), file=file)
+    if extra_fields is not None and "diverging" in extra_fields:
+        n_div = int(jnp.asarray(extra_fields["diverging"]).sum())
+        print(f"\nNumber of divergences: {n_div}", file=file)

@@ -1,12 +1,48 @@
-"""Hamiltonian Monte Carlo + No-U-Turn Sampler (paper §2: "Pyro implements
-several generic probabilistic inference algorithms, including the No U-turn
-Sampler ... a variant of Hamiltonian Monte Carlo").
+"""Hamiltonian Monte Carlo + No-U-Turn Sampler with a multi-chain driver
+(paper §2: Pyro "implement[s] several generic probabilistic inference
+algorithms, including ... the No U-turn Sampler, a variant of Hamiltonian
+Monte Carlo"; §1 positions inference as "scalable": built on GPU-accelerated
+tensor math, which here means the whole run compiles to a constant number of
+XLA calls).
 
-Fully jittable: leapfrog, Welford diagonal mass adaptation, and dual-averaging
-step size run inside `lax` control flow. NUTS uses iterative progressive
-doubling with multinomial sampling along the trajectory and a subtree U-turn
-check at each doubling (Hoffman & Gelman 2014; iterative form after Phan et
-al. 2019).
+Kernels are fully jittable: leapfrog, Welford diagonal mass adaptation, and
+dual-averaging step size run inside `lax` control flow. NUTS uses iterative
+progressive doubling with multinomial sampling along the trajectory and a
+subtree U-turn check at each doubling (Hoffman & Gelman 2014; iterative form
+after Phan et al. 2019). Step-size and mass-matrix adaptation freeze once
+`state.i` passes the warmup length, so collection draws come from a fixed
+transition kernel.
+
+The `MCMC` driver runs `num_chains` chains initialized from split PRNG keys.
+Warmup (with windowed mass-matrix re-estimation) and collection each run
+inside a single `lax.scan`, so one `MCMC.run` issues a constant number of
+compiled calls regardless of `num_warmup`/`num_samples`
+(`benchmarks/mcmc_chains.py` asserts this). Chains are vectorized with
+`vmap`; `chain_method="sharded"` additionally constrains the chain axis onto
+the mesh's data axes via `distributed.sharding.shard_chains`, which is a
+no-op transformation of the math — on a 1-device mesh the output is
+bit-for-bit identical to `"vectorized"`.
+
+Example — two HMC chains on a conjugate model, grouped samples::
+
+    >>> import jax, jax.numpy as jnp
+    >>> from repro import distributions as dist
+    >>> from repro.core import primitives as P
+    >>> from repro.infer import HMC, MCMC
+    >>> def model(data):
+    ...     loc = P.sample("loc", dist.Normal(0.0, 10.0))
+    ...     with P.plate("N", data.shape[0]):
+    ...         P.sample("obs", dist.Normal(loc, 1.0), obs=data)
+    >>> data = jnp.asarray([1.0, 2.0, 3.0])
+    >>> mcmc = MCMC(HMC(model, max_num_steps=16), num_warmup=100,
+    ...             num_samples=100, num_chains=2)
+    >>> samples = mcmc.run(jax.random.PRNGKey(0), data)
+    >>> samples["loc"].shape            # chains flattened by default
+    (200,)
+    >>> mcmc.get_samples(group_by_chain=True)["loc"].shape
+    (2, 100)
+    >>> bool(mcmc.get_extra_fields()["diverging"].sum() >= 0)
+    True
 """
 from __future__ import annotations
 
@@ -16,8 +52,9 @@ from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from .util import get_model_transforms, init_to_uniform, potential_energy, transform_fn
+from .util import init_to_uniform, initialize_model, potential_energy, transform_fn
 
 # ---------------------------------------------------------------------------
 # pytree-of-arrays helpers
@@ -36,6 +73,10 @@ def _tree_axpy(alpha, x, y):
 
 def _tree_scale(alpha, x):
     return jax.tree_util.tree_map(lambda xi: alpha * xi, x)
+
+
+def _tree_where(pred, a, b):
+    return jax.tree_util.tree_map(lambda x, y: jnp.where(pred, x, y), a, b)
 
 
 # ---------------------------------------------------------------------------
@@ -154,6 +195,7 @@ class HMCState(NamedTuple):
     i: jax.Array
     accept_prob: jax.Array
     num_steps: jax.Array  # leapfrog steps taken (diagnostics)
+    diverging: jax.Array  # this transition hit an energy error > threshold
 
 
 class HMC:
@@ -183,24 +225,25 @@ class HMC:
         self._transforms = None
 
     # -- setup ---------------------------------------------------------------
-    def _setup(self, rng_key, *args, **kwargs):
+    def setup(self, rng_key, *args, **kwargs):
+        """Trace the model once (host-side): returns (potential_fn, dict of
+        unconstrained init prototypes). For `potential_fn` kernels the
+        prototype is the caller-supplied `init_params`."""
         if self._potential_fn is not None:
             return self._potential_fn, kwargs.pop("init_params")
-        transforms, inits, _ = get_model_transforms(rng_key, self.model, args, kwargs)
+        pe, transforms, inits = initialize_model(rng_key, self.model, args, kwargs)
         self._transforms = transforms
-        pe = partial(potential_energy, self.model, args, kwargs, transforms)
-        init = init_to_uniform(rng_key, inits)
-        return pe, init
+        return pe, inits
 
-    def init(self, rng_key, *args, **kwargs) -> Tuple[HMCState, Callable]:
-        key_setup, key_state = jax.random.split(rng_key)
-        pe_fn, z0 = self._setup(key_setup, *args, **kwargs)
+    def init_state(self, rng_key, pe_fn, z0) -> HMCState:
+        """Build the kernel state at position `z0`. Pure in (rng_key, z0):
+        the multi-chain driver vmaps this over split keys."""
         z0 = jax.tree_util.tree_map(lambda x: jnp.asarray(x, jnp.float32), z0)
         inv_mass = jax.tree_util.tree_map(jnp.ones_like, z0)
-        state = HMCState(
+        return HMCState(
             z0,
             pe_fn(z0),
-            key_state,
+            rng_key,
             jnp.asarray(self.step_size, jnp.float32),
             inv_mass,
             da_init(self.step_size),
@@ -208,8 +251,36 @@ class HMC:
             jnp.zeros((), jnp.int32),
             jnp.zeros(()),
             jnp.zeros((), jnp.int32),
+            jnp.asarray(False),
         )
-        return state, pe_fn
+
+    def init(self, rng_key, *args, **kwargs) -> Tuple[HMCState, Callable]:
+        key_setup, key_state = jax.random.split(rng_key)
+        pe_fn, z0 = self.setup(key_setup, *args, **kwargs)
+        if self.model is not None:
+            z0 = init_to_uniform(key_setup, z0)
+        return self.init_state(key_state, pe_fn, z0), pe_fn
+
+    # -- adaptation bookkeeping shared by HMC and NUTS ------------------------
+    def _adapt(self, state: HMCState, accept_prob, z_next, warmup_len):
+        """Advance dual-averaging / Welford state while `state.i <
+        warmup_len`, freezing both afterwards so collection uses a fixed
+        kernel. Returns (da, step_size, welford)."""
+        in_warmup = state.i < warmup_len
+        if self.adapt_step_size:
+            da_new = da_update(state.da, accept_prob, self.target_accept)
+            da = _tree_where(in_warmup, da_new, state.da)
+            step_size = jnp.where(
+                in_warmup, jnp.exp(da.log_step), jnp.exp(da.log_step_avg)
+            )
+        else:
+            da, step_size = state.da, state.step_size
+        if self.adapt_mass_matrix:
+            wf_new = welford_update(state.welford, z_next)
+            welford = _tree_where(in_warmup, wf_new, state.welford)
+        else:
+            welford = state.welford
+        return da, step_size, welford
 
     # -- one transition (jittable) --------------------------------------------
     def sample_step(self, state: HMCState, pe_fn, warmup_len: int = 0) -> HMCState:
@@ -245,29 +316,28 @@ class HMC:
         energy1 = pe_new + _kinetic(r_new, state.inv_mass)
         delta = energy0 - energy1
         delta = jnp.where(jnp.isnan(delta), -jnp.inf, delta)
+        diverging = -delta > 1000.0
         accept_prob = jnp.minimum(1.0, jnp.exp(delta))
         accept = jax.random.uniform(key_accept) < accept_prob
         z = jax.tree_util.tree_map(
             lambda a, b: jnp.where(accept, a, b), z_new, state.z
         )
         potential = jnp.where(accept, pe_new, state.potential)
-        # adaptation (only effective during warmup; caller freezes after)
-        da = da_update(state.da, accept_prob, self.target_accept) if self.adapt_step_size else state.da
-        in_warmup = state.i < warmup_len
-        step_size = jnp.where(
-            in_warmup & self.adapt_step_size, jnp.exp(da.log_step), jnp.exp(da.log_step_avg)
-        ) if self.adapt_step_size else state.step_size
-        welford = welford_update(state.welford, z) if self.adapt_mass_matrix else state.welford
+        da, step_size, welford = self._adapt(state, accept_prob, z, warmup_len)
         return HMCState(
             z, potential, key, step_size, state.inv_mass, da, welford,
-            state.i + 1, accept_prob, n_steps,
+            state.i + 1, accept_prob, n_steps, diverging,
         )
 
     def finalize_warmup(self, state: HMCState) -> HMCState:
+        inv_mass = state.inv_mass
         if self.adapt_mass_matrix:
-            inv_mass = welford_variance(state.welford)
-        else:
-            inv_mass = state.inv_mass
+            # only trust the estimate once the current window has >= 2 draws
+            # (a freshly reset Welford accumulator would otherwise collapse
+            # the mass matrix to the regularizer floor)
+            var = welford_variance(state.welford)
+            ok = state.welford.n > 1
+            inv_mass = _tree_where(ok, var, inv_mass)
         step_size = jnp.exp(state.da.log_step_avg) if self.adapt_step_size else state.step_size
         return state._replace(inv_mass=inv_mass, step_size=step_size)
 
@@ -424,58 +494,253 @@ class NUTS(HMC):
             )
 
         accept_prob = tree.sum_accept / jnp.maximum(tree.n_leapfrog, 1)
-        da = da_update(state.da, accept_prob, self.target_accept) if self.adapt_step_size else state.da
-        in_warmup = state.i < warmup_len
-        step_size = jnp.where(
-            in_warmup & self.adapt_step_size, jnp.exp(da.log_step), jnp.exp(da.log_step_avg)
-        ) if self.adapt_step_size else state.step_size
-        welford = welford_update(state.welford, tree.z_proposal) if self.adapt_mass_matrix else state.welford
+        da, step_size, welford = self._adapt(
+            state, accept_prob, tree.z_proposal, warmup_len
+        )
         return HMCState(
             tree.z_proposal, tree.pe_proposal, key, step_size, state.inv_mass, da,
-            welford, state.i + 1, accept_prob, tree.n_leapfrog,
+            welford, state.i + 1, accept_prob, tree.n_leapfrog, tree.diverging,
         )
 
 
 # ---------------------------------------------------------------------------
-# MCMC driver
+# MCMC driver: multi-chain, scan-based, optionally mesh-sharded
 # ---------------------------------------------------------------------------
 
 
 class MCMC:
-    def __init__(self, kernel: HMC, num_warmup: int, num_samples: int, thinning: int = 1):
+    """Multi-chain MCMC engine.
+
+    `run` initializes `num_chains` kernel states from split PRNG keys, runs
+    warmup (with windowed mass-matrix re-estimation) and sample collection
+    inside `lax.scan`, and vmaps the whole per-chain program over the chain
+    axis — the entire run is ONE jit-compiled call, so the number of XLA
+    dispatches is constant in `num_warmup` and `num_samples`.
+
+    chain_method:
+      * ``"vectorized"`` — chains ride a plain local `vmap` (default);
+      * ``"sharded"`` — identical computation, but the chain axis is
+        constrained onto the data axes of `mesh` (default: a 1-D mesh over
+        all local devices) via the PR-1 sharding rules, distributing chains
+        across devices. On a 1-device mesh this is bit-for-bit identical to
+        ``"vectorized"``.
+
+    Samples come back as ``{site: (num_chains, num_samples, ...)}`` via
+    ``get_samples(group_by_chain=True)`` (flattened to
+    ``(num_chains * num_samples, ...)`` by default); per-draw diagnostics
+    (accept prob, divergences, step counts, energies) via
+    ``get_extra_fields``.
+    """
+
+    def __init__(
+        self,
+        kernel: HMC,
+        num_warmup: int,
+        num_samples: int,
+        num_chains: int = 1,
+        thinning: int = 1,
+        chain_method: str = "vectorized",
+        mesh=None,
+    ):
+        if chain_method not in ("vectorized", "sharded"):
+            raise ValueError(
+                f"chain_method must be 'vectorized' or 'sharded', got {chain_method!r}"
+            )
+        if num_chains < 1:
+            raise ValueError("num_chains must be >= 1")
         self.kernel = kernel
         self.num_warmup = num_warmup
         self.num_samples = num_samples
+        self.num_chains = num_chains
         self.thinning = thinning
-        self._samples = None
+        self.chain_method = chain_method
+        if chain_method == "sharded" and mesh is None:
+            from ..distributed.sharding import default_mesh
 
-    def run(self, rng_key, *args, **kwargs):
-        state, pe_fn = self.kernel.init(rng_key, *args, **kwargs)
-        warmup_len = self.num_warmup
+            mesh = default_mesh()
+        self.mesh = mesh if chain_method == "sharded" else None
+        self._samples = None  # {site: (C, S, ...)} constrained space
+        self._extra_fields = None  # {field: (C, S)}
+        self._last_state = None
+        # incremented each time the fused driver is *traced*; the benchmark
+        # asserts this stays at 1 per run regardless of num_samples, and that
+        # a second run with the same arg shapes reuses the executable
+        self.num_traces = 0
+        self._exec = None  # cached jitted driver
+        self._exec_key = None
 
-        step = jax.jit(partial(self.kernel.sample_step, pe_fn=pe_fn, warmup_len=warmup_len))
+    # -- the fused driver ----------------------------------------------------
+    def _build_driver(self, randomize: bool, treedef, is_dyn, static_leaves):
+        """Build the fused (init -> warmup -> collect) program. Model args
+        ride the traced signature (array leaves in `is_dyn` positions) so
+        repeat runs with fresh keys/data of the same shapes reuse one
+        compiled executable; non-array leaves are baked in statically."""
+        kernel = self.kernel
+        transforms = kernel._transforms
+        W, S, T = self.num_warmup, self.num_samples, self.thinning
+        win = max(1, W // 2)
+        mesh = self.mesh
+        adapt_mm = kernel.adapt_mass_matrix
+        if mesh is not None:
+            from ..distributed.sharding import shard_chains
 
-        # mass-matrix adaptation windows: re-estimate twice during warmup
-        win = max(1, warmup_len // 2)
-        for i in range(warmup_len):
-            state = step(state)
-            if self.kernel.adapt_mass_matrix and (i + 1) % win == 0:
-                state = state._replace(
-                    inv_mass=welford_variance(state.welford),
-                    welford=welford_init(state.z),
-                )
-        state = self.kernel.finalize_warmup(state)
+        def make_pe(dyn_leaves):
+            if kernel.model is None:
+                return kernel._potential_fn
+            it = iter(dyn_leaves)
+            merged = [next(it) if d else s for d, s in zip(is_dyn, static_leaves)]
+            margs, mkwargs = jax.tree_util.tree_unflatten(treedef, merged)
+            return partial(potential_energy, kernel.model, margs, mkwargs, transforms)
 
-        collected = []
-        for i in range(self.num_samples * self.thinning):
-            state = step(state)
-            if i % self.thinning == 0:
-                collected.append(state.z)
-        self._samples = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *collected)
-        # constrain if we built from a model
-        if self.kernel._transforms is not None:
-            self._samples = transform_fn(self.kernel._transforms, self._samples)
-        return self._samples
+        def one_chain(state, pe_fn):
+            def warmup_body(s, i):
+                s = kernel.sample_step(s, pe_fn, W)
+                if adapt_mm:
+                    # windowed re-estimation: swap in the current Welford
+                    # variance and restart the accumulator at each interior
+                    # window boundary; the final window feeds finalize_warmup
+                    do = ((i + 1) % win == 0) & (i + 1 < W)
+                    s = jax.lax.cond(
+                        do,
+                        lambda s: s._replace(
+                            inv_mass=welford_variance(s.welford),
+                            welford=welford_init(s.z),
+                        ),
+                        lambda s: s,
+                        s,
+                    )
+                return s, None
 
-    def get_samples(self):
-        return self._samples
+            if W > 0:
+                state, _ = jax.lax.scan(warmup_body, state, jnp.arange(W))
+            state = kernel.finalize_warmup(state)
+
+            def collect_body(s, _):
+                if T > 1:
+                    # a divergence anywhere in the thinned block must surface,
+                    # not just one on the kept draw — OR the flags through
+                    def thin_step(carry, _):
+                        s, div = carry
+                        s = kernel.sample_step(s, pe_fn, W)
+                        return (s, div | s.diverging), None
+
+                    (s, diverging), _ = jax.lax.scan(
+                        thin_step, (s, jnp.asarray(False)), None, length=T
+                    )
+                else:
+                    s = kernel.sample_step(s, pe_fn, W)
+                    diverging = s.diverging
+                extras = {
+                    "accept_prob": s.accept_prob,
+                    "diverging": diverging,
+                    "num_steps": s.num_steps,
+                    "potential_energy": s.potential,
+                    "step_size": s.step_size,
+                }
+                return s, (s.z, extras)
+
+            state, (z, extras) = jax.lax.scan(collect_body, state, None, length=S)
+            return state, z, extras
+
+        def driver(chain_keys, proto, dyn_leaves):
+            self.num_traces += 1  # trace-time side effect (retrace detector)
+            pe_fn = make_pe(dyn_leaves)
+
+            def init_one(key, z0):
+                if randomize:
+                    z0 = init_to_uniform(key, z0)
+                return kernel.init_state(key, pe_fn, z0)
+
+            states = jax.vmap(init_one)(chain_keys, proto)
+            if mesh is not None:
+                states = shard_chains(states, mesh)
+            states, z, extras = jax.vmap(partial(one_chain, pe_fn=pe_fn))(states)
+            if mesh is not None:
+                z = shard_chains(z, mesh)
+                extras = shard_chains(extras, mesh)
+            return states, z, extras
+
+        return driver
+
+    # -- public API ----------------------------------------------------------
+    def run(self, rng_key, *args, init_params=None, **kwargs):
+        """Run all chains; returns `get_samples()` (flattened across chains).
+
+        `init_params`, when given, is an *unbatched* pytree of unconstrained
+        initial values broadcast to every chain (chains still decorrelate
+        through their momenta/keys). Required for `potential_fn` kernels.
+        """
+        key_setup, key_init = jax.random.split(rng_key)
+        kernel = self.kernel
+        if kernel.model is not None:
+            _, proto = kernel.setup(key_setup, *args, **kwargs)
+            randomize = init_params is None
+            if init_params is not None:
+                proto = init_params
+        else:
+            if init_params is None:
+                raise ValueError("potential_fn kernels require init_params=")
+            proto, randomize = init_params, False
+
+        C = self.num_chains
+        proto = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(jnp.asarray(x, jnp.float32), (C,) + jnp.shape(x)),
+            proto,
+        )
+        chain_keys = jax.random.split(key_init, C)
+
+        # static/dynamic partition of model args: arrays are traced (a fresh
+        # dataset of the same shape reuses the executable), everything else
+        # (plate sizes, flags) stays static so model control flow is unchanged
+        leaves, treedef = jax.tree_util.tree_flatten((args, kwargs))
+        is_dyn = tuple(isinstance(l, (jax.Array, np.ndarray)) for l in leaves)
+        dyn_leaves = [l for l, d in zip(leaves, is_dyn) if d]
+        static_leaves = tuple(None if d else l for l, d in zip(leaves, is_dyn))
+        exec_key = (randomize, treedef, is_dyn, static_leaves)
+        if self._exec is None or self._exec_key != exec_key:
+            self._exec = jax.jit(
+                self._build_driver(randomize, treedef, is_dyn, static_leaves)
+            )
+            self._exec_key = exec_key
+        states, z, extras = self._exec(chain_keys, proto, dyn_leaves)
+        self._last_state = states
+        self._extra_fields = extras
+        if kernel._transforms:
+            z = transform_fn(kernel._transforms, z)
+        self._samples = z
+        return self.get_samples()
+
+    def get_samples(self, group_by_chain: bool = False):
+        """Posterior samples in constrained space: ``(chain, draw, ...)`` when
+        `group_by_chain`, else flattened to ``(chain * draw, ...)``."""
+        if self._samples is None:
+            return None
+        if group_by_chain:
+            return self._samples
+        return jax.tree_util.tree_map(
+            lambda x: x.reshape((-1,) + x.shape[2:]), self._samples
+        )
+
+    def get_extra_fields(self, group_by_chain: bool = True):
+        """Per-draw diagnostics: accept_prob, diverging, num_steps,
+        potential_energy, step_size — each ``(chain, draw)`` when
+        `group_by_chain` (default), else flattened."""
+        if self._extra_fields is None:
+            return None
+        if group_by_chain:
+            return self._extra_fields
+        return jax.tree_util.tree_map(
+            lambda x: x.reshape((-1,) + x.shape[2:]), self._extra_fields
+        )
+
+    def summary(self, prob: float = 0.9, print_table: bool = True):
+        """Per-site posterior statistics + convergence diagnostics (split-R̂,
+        bulk/tail ESS, divergence count). Prints the table unless
+        `print_table=False`; returns the stats as ``{site: {stat: array}}``."""
+        from .diagnostics import print_summary, summary as _summary
+
+        if self._samples is None:
+            raise RuntimeError("no samples available; call MCMC.run(...) first")
+        if print_table:
+            print_summary(self._samples, extra_fields=self._extra_fields, prob=prob)
+        return _summary(self._samples, prob=prob)

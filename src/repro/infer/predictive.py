@@ -1,6 +1,38 @@
-"""Posterior/prior predictive sampling."""
+"""Posterior/prior predictive sampling (paper §2: inference in Pyro yields
+objects that "can be used to form predictive distributions" — `Predictive`
+replays posterior draws, guide samples, or the prior through the model and
+collects the resulting sample/deterministic sites, fully vectorized with
+`vmap` rather than a Python loop per draw).
+
+`posterior_samples` may be flat ``(num_draws, ...)`` arrays (the default,
+``batch_ndims=1``) or chain-grouped ``(num_chains, num_draws, ...)`` arrays
+straight from ``MCMC.get_samples(group_by_chain=True)`` with
+``batch_ndims=2`` — the predictive fan-out then nests one `vmap` per batch
+dim, so multi-chain posterior-predictive sampling stays a single compiled
+call with ``(chain, draw, ...)``-shaped outputs.
+
+Example — prior predictive, then chain-shaped posterior predictive::
+
+    >>> import jax, jax.numpy as jnp
+    >>> from repro import distributions as dist
+    >>> from repro.core import primitives as P
+    >>> from repro.infer import Predictive
+    >>> def model(data=None):
+    ...     loc = P.sample("loc", dist.Normal(0.0, 1.0))
+    ...     with P.plate("N", 3):
+    ...         P.sample("obs", dist.Normal(loc, 1.0), obs=data)
+    >>> prior = Predictive(model, num_samples=7)(jax.random.PRNGKey(0))
+    >>> prior["obs"].shape
+    (7, 3)
+    >>> post = {"loc": jnp.zeros((2, 5))}   # (chain, draw) from MCMC
+    >>> out = Predictive(model, posterior_samples=post, batch_ndims=2)(
+    ...     jax.random.PRNGKey(1))
+    >>> out["obs"].shape
+    (2, 5, 3)
+"""
 from __future__ import annotations
 
+import math
 from typing import Callable, Dict, Optional
 
 import jax
@@ -13,8 +45,9 @@ from .util import substitute_params
 class Predictive:
     """Vectorized predictive distribution.
 
-    posterior_samples: dict site -> (N, ...) arrays (e.g. from MCMC), or None
-    to sample from the prior / guide.
+    posterior_samples: dict site -> (num_draws, ...) arrays (or, with
+    ``batch_ndims=2``, (num_chains, num_draws, ...) arrays from multi-chain
+    MCMC), or None to sample from the prior / guide.
     """
 
     def __init__(
@@ -25,13 +58,17 @@ class Predictive:
         params: Optional[Dict] = None,
         num_samples: Optional[int] = None,
         return_sites: Optional[list] = None,
+        batch_ndims: int = 1,
     ):
         if posterior_samples is not None and guide is not None:
             raise ValueError("pass either posterior_samples or guide, not both")
+        if batch_ndims not in (1, 2):
+            raise ValueError(f"batch_ndims must be 1 or 2, got {batch_ndims}")
         self.model = model
         self.posterior_samples = posterior_samples
         self.guide = guide
         self.params = params or {}
+        self.batch_ndims = batch_ndims
         self.num_samples = num_samples or (
             len(jax.tree_util.tree_leaves(posterior_samples)[0]) if posterior_samples else 1
         )
@@ -56,7 +93,15 @@ class Predictive:
             ]
             return {n: tr[n]["value"] for n in sites if n in tr.nodes}
 
-        keys = jax.random.split(rng_key, self.num_samples)
         if self.posterior_samples is not None:
-            return jax.vmap(single)(keys, self.posterior_samples)
+            lead = jax.tree_util.tree_leaves(self.posterior_samples)[0].shape[
+                : self.batch_ndims
+            ]
+            keys = jax.random.split(rng_key, math.prod(lead))
+            keys = keys.reshape(lead + keys.shape[1:])
+            fn = single
+            for _ in range(self.batch_ndims):
+                fn = jax.vmap(fn)
+            return fn(keys, self.posterior_samples)
+        keys = jax.random.split(rng_key, self.num_samples)
         return jax.vmap(lambda k: single(k, {}))(keys)

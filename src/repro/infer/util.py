@@ -104,6 +104,19 @@ def get_model_transforms(
     return transforms, inits, tr
 
 
+def initialize_model(
+    rng_key, model: Callable, args: tuple = (), kwargs: Optional[dict] = None
+) -> Tuple[Callable, Dict[str, Any], Dict[str, Any]]:
+    """Trace `model` once and build everything HMC/NUTS needs: returns
+    (potential_fn over unconstrained space, per-site bijectors, unconstrained
+    initial values). The potential_fn is pure and jit/vmap-safe; the
+    multi-chain MCMC driver calls this exactly once per run."""
+    kwargs = kwargs or {}
+    transforms, inits, _ = get_model_transforms(rng_key, model, args, kwargs)
+    pe = partial(potential_energy, model, args, kwargs, transforms)
+    return pe, transforms, inits
+
+
 def init_to_uniform(rng_key, inits: Dict[str, Any], radius: float = 2.0) -> Dict[str, Any]:
     out = {}
     for i, (name, v) in enumerate(sorted(inits.items())):

@@ -10,3 +10,11 @@ if [[ "${CI_INSTALL:-0}" == "1" ]]; then
 fi
 
 JAX_PLATFORMS=cpu PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q "$@"
+
+# docs: the documentation is executable — module docstring examples and the
+# docs/ pages are doctests, and broken example code fails CI
+JAX_PLATFORMS=cpu PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q --doctest-modules \
+    src/repro/infer/mcmc.py src/repro/infer/diagnostics.py \
+    src/repro/infer/predictive.py src/repro/infer/autoguide.py
+JAX_PLATFORMS=cpu PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m doctest \
+    docs/inference.md docs/backends.md
