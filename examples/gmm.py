@@ -1,0 +1,115 @@
+"""Gaussian mixture model via enumeration (Pyro's GMM tutorial, ported).
+
+The discrete assignment `z` is never sampled during training: it is
+annotated for parallel enumeration and `TraceEnum_ELBO` marginalizes it
+exactly inside the compiled SVI step (no REINFORCE variance). The guide is
+an `AutoNormal` over the continuous latents only — autoguides skip
+enumerated sites automatically. After training, `infer_discrete` decodes
+the exact MAP cluster assignment for every point under the learned
+parameters.
+
+Expected output for the default seed: the two learned locs land within
+~0.1 of the true (-2.0, 3.0), the mixture weight lands near the empirical
+cluster fraction (~0.31 for seed 0), and the decoded assignments achieve
+>98% accuracy against the generating labels.
+
+Run:  PYTHONPATH=src python examples/gmm.py [--steps 400]
+"""
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro import distributions as dist, optim
+from repro.core import handlers, primitives as P
+from repro.infer import SVI, AutoNormal, TraceEnum_ELBO, config_enumerate, infer_discrete
+
+K = 2
+TRUE_LOCS = np.array([-2.0, 3.0])
+TRUE_SCALE = 0.7
+TRUE_WEIGHT = 0.375  # P(z = 1)
+
+
+def make_data(n=300, seed=0):
+    rng = np.random.default_rng(seed)
+    labels = (rng.uniform(size=n) < TRUE_WEIGHT).astype(int)
+    points = rng.normal(TRUE_LOCS[labels], TRUE_SCALE).astype(np.float32)
+    return jnp.asarray(points), labels
+
+
+@config_enumerate
+def model(data):
+    weight = P.sample("weight", dist.Beta(1.0, 1.0))
+    with P.plate("components", K):
+        locs = P.sample("locs", dist.Normal(0.0, 10.0))
+    scale = P.sample("scale", dist.LogNormal(0.0, 2.0))
+    with P.plate("N", data.shape[0]):
+        z = P.sample("z", dist.Categorical(jnp.stack([1 - weight, weight])))
+        P.sample("obs", dist.Normal(locs[z], scale), obs=data)
+
+
+def main(argv=None):
+    parser = argparse.ArgumentParser(description="enumerated GMM with SVI")
+    parser.add_argument("--steps", type=int, default=400)
+    parser.add_argument("--num-points", type=int, default=300)
+    parser.add_argument("--seed", type=int, default=0)
+    args = parser.parse_args(argv)
+
+    data, labels = make_data(args.num_points, args.seed)
+
+    def init_loc(name, value, unconstrained):
+        # break the mixture symmetry: start the component locs at the data
+        # extremes (the classic GMM failure mode is a collapsed symmetric init)
+        if name == "locs":
+            return jnp.asarray([data.min(), data.max()])
+        return unconstrained
+
+    guide = AutoNormal(model, init_loc_fn=init_loc)  # skips the enumerated "z"
+    elbo = TraceEnum_ELBO(num_particles=2)
+    svi = SVI(model, guide, optim.Adam(0.05), elbo)
+
+    state = svi.init(jax.random.PRNGKey(args.seed), data)
+    t0 = time.time()
+    for step in range(args.steps):
+        state, loss = svi.update_jit(state, data)
+        if step % 100 == 0 or step == args.steps - 1:
+            print(f"step {step:4d}  elbo loss {float(loss):10.2f}")
+    print(f"{args.steps} steps in {time.time() - t0:.1f}s "
+          f"(compiled once: num_traces={elbo.num_traces})")
+
+    params = svi.get_params(state)
+    locs = np.asarray(params["auto_locs_loc"])
+    weight = float(jax.nn.sigmoid(params["auto_weight_loc"]))
+    order = np.argsort(locs)
+    print(f"learned locs   {locs[order]}  (true {TRUE_LOCS})")
+    print(f"learned weight {weight if order[1] == 1 else 1 - weight:.3f}  "
+          f"(true {TRUE_WEIGHT})")
+
+    # decode MAP assignments under the learned continuous posterior means
+    posterior_means = {
+        "weight": jnp.asarray(weight),
+        "locs": jnp.asarray(locs),
+        "scale": jnp.exp(params["auto_scale_loc"]),
+    }
+    decoded = infer_discrete(
+        handlers.substitute(model, data=posterior_means),
+        temperature=0,
+        rng_key=jax.random.PRNGKey(1),
+    )
+    tr = handlers.trace(handlers.seed(decoded, jax.random.PRNGKey(2))).get_trace(data)
+    assignments = np.asarray(tr["z"]["value"])
+    # align cluster ids with the generating labels before scoring
+    if order[1] != 1:
+        assignments = 1 - assignments
+    accuracy = float((assignments == labels).mean())
+    print(f"MAP assignment accuracy vs generating labels: {accuracy:.3f}")
+    return accuracy
+
+
+if __name__ == "__main__":
+    main()

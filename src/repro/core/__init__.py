@@ -1,8 +1,8 @@
 """repro.core — the paper's contribution: effect-handler PPL runtime."""
 from . import handlers, messenger, primitives, reparam as _reparam_mod
-from .handlers import Trace
+from .handlers import Trace, config_enumerate, enum, infer_config
 from .reparam import LocScaleReparam, reparam
-from .messenger import Messenger, apply_stack
+from .messenger import DimAllocator, Messenger, apply_stack
 from .primitives import (
     deterministic,
     factor,
@@ -18,11 +18,15 @@ __all__ = [
     "handlers",
     "messenger",
     "primitives",
+    "DimAllocator",
     "Messenger",
     "Trace",
     "LocScaleReparam",
     "reparam",
     "apply_stack",
+    "config_enumerate",
+    "enum",
+    "infer_config",
     "sample",
     "param",
     "plate",

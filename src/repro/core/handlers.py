@@ -13,7 +13,7 @@ import jax.numpy as jnp
 
 from ..distributions import Delta, Distribution
 from ..distributions.util import sum_rightmost
-from .messenger import Messenger
+from .messenger import DimAllocator, Messenger
 
 
 def _site_key_int(name: str) -> int:
@@ -297,6 +297,92 @@ class lift(Messenger):
         msg["args"] = ()
         msg["is_observed"] = False
         msg["kwargs"] = {"rng_key": msg["kwargs"].get("rng_key"), "sample_shape": ()}
+
+
+class infer_config(Messenger):
+    """Fill in `infer` annotations on sample sites via a config function
+    (Pyro's poutine.infer_config). Explicit per-site annotations win."""
+
+    def __init__(self, fn=None, config_fn: Optional[Callable] = None):
+        if config_fn is None:
+            raise ValueError("infer_config needs config_fn=")
+        self.config_fn = config_fn
+        super().__init__(fn)
+
+    def process_message(self, msg):
+        if msg["type"] == "sample":
+            extra = self.config_fn(msg)
+            if extra:
+                msg["infer"] = {**extra, **msg["infer"]}
+
+
+def config_enumerate(fn=None, default: str = "parallel"):
+    """Annotate every discrete non-observed sample site with
+    ``infer={"enumerate": default}`` unless the site already carries an
+    explicit annotation. Usable as a decorator or a wrapper:
+
+        model = config_enumerate(model)          # wrap
+        @config_enumerate                        # decorate
+        def model(...): ...
+    """
+    if fn is None:  # decorator-with-arguments form
+        return lambda f: config_enumerate(f, default=default)
+    if default not in ("parallel",):
+        raise NotImplementedError(
+            f"enumerate strategy '{default}' is not supported; only 'parallel' "
+            "(broadcast) enumeration is implemented"
+        )
+
+    def config_fn(msg):
+        if msg["is_observed"] or not getattr(msg["fn"], "is_discrete", False):
+            return {}
+        if "enumerate" in msg["infer"]:
+            return {}
+        return {"enumerate": default}
+
+    return infer_config(fn, config_fn=config_fn)
+
+
+class enum(Messenger):
+    """Parallel enumeration (paper §2's canonical custom-inference example):
+    each discrete sample site annotated with ``infer={"enumerate":
+    "parallel"}`` takes its whole finite support as value, broadcast along a
+    fresh negative batch dim allocated LEFT of every plate dim. Downstream
+    log_probs then carry the enum dims, and `TraceEnum_ELBO` sum-contracts
+    them out of the joint (exact marginalization, fully vectorized)."""
+
+    def __init__(self, fn=None, first_available_dim: int = -1):
+        self.first_available_dim = first_available_dim
+        super().__init__(fn)
+
+    def __enter__(self):
+        self._allocator = DimAllocator(self.first_available_dim)
+        return super().__enter__()
+
+    def process_message(self, msg):
+        if msg["type"] != "sample" or msg["is_observed"] or msg["value"] is not None:
+            return
+        strategy = msg["infer"].get("enumerate")
+        if not strategy:
+            return
+        if strategy != "parallel":
+            raise NotImplementedError(
+                f"site '{msg['name']}': enumerate strategy '{strategy}' is not "
+                "supported; use 'parallel'"
+            )
+        fn = msg["fn"]
+        support = fn.enumerate_support(expand=False)  # (K,) + (1,)*batch + event
+        dim = self._allocator.allocate(msg["name"])
+        if -dim - 1 < len(fn.batch_shape):
+            raise ValueError(
+                f"cannot enumerate site '{msg['name']}': enum dim {dim} collides "
+                f"with its batch dims {fn.batch_shape}; pass a more negative "
+                "first_available_dim (raise max_plate_nesting)"
+            )
+        k = support.shape[0]
+        msg["value"] = support.reshape((k,) + (1,) * (-dim - 1) + fn.event_shape)
+        msg["infer"]["_enumerate_dim"] = dim
+        msg["infer"]["_enumerate_cardinality"] = k
 
 
 class collect_params(Messenger):

@@ -87,6 +87,29 @@ def apply_stack(msg: Dict[str, Any]) -> Dict[str, Any]:
     return msg
 
 
+class DimAllocator:
+    """Allocates fresh negative batch dims for parallel enumeration, growing
+    leftward from `first_available_dim` (which must sit left of every plate
+    dim, i.e. ``first_available_dim <= -1 - max_plate_nesting``). One
+    allocator lives per `enum` handler entry, so dim assignment is a pure
+    function of site execution order — jit-stable across steps."""
+
+    def __init__(self, first_available_dim: int):
+        if first_available_dim >= 0:
+            raise ValueError(
+                f"first_available_dim must be negative (batch dims count from "
+                f"the right), got {first_available_dim}"
+            )
+        self._next = first_available_dim
+        self.allocated: Dict[str, int] = {}
+
+    def allocate(self, name: str) -> int:
+        dim = self._next
+        self._next -= 1
+        self.allocated[name] = dim
+        return dim
+
+
 class Messenger:
     """Base effect handler: a context manager + callable wrapper."""
 
@@ -140,7 +163,9 @@ def make_message(
         "mask": None,  # boolean mask applied to log_prob
         "cond_indep_stack": (),  # active plates
         "intermediates": [],
-        "infer": infer or {},
+        # copy: handlers (enum) write per-site keys into msg["infer"], and the
+        # caller may share one annotation dict across sites
+        "infer": dict(infer) if infer else {},
         "stop": False,
         "done": False,
     }

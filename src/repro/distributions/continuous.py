@@ -239,6 +239,21 @@ class StudentT(Distribution):
         )
         return lp
 
+    @property
+    def mean(self):
+        # defined for df > 1
+        return jnp.broadcast_to(
+            jnp.where(jnp.asarray(self.df) > 1, self.loc, jnp.nan), self.batch_shape
+        )
+
+    @property
+    def variance(self):
+        # defined for df > 2 (infinite for 1 < df <= 2)
+        df = jnp.asarray(self.df, jnp.result_type(float))
+        var = jnp.asarray(self.scale) ** 2 * df / (df - 2)
+        var = jnp.where(df > 2, var, jnp.where(df > 1, jnp.inf, jnp.nan))
+        return jnp.broadcast_to(var, self.batch_shape)
+
 
 class Gamma(Distribution):
     arg_constraints = {"concentration": constraints.positive, "rate": constraints.positive}
@@ -290,6 +305,21 @@ class InverseGamma(Distribution):
 
     def log_prob(self, value):
         return Gamma(self.concentration, self.rate).log_prob(1 / value) - 2 * jnp.log(value)
+
+    @property
+    def mean(self):
+        # defined for concentration > 1
+        a = jnp.asarray(self.concentration, jnp.result_type(float))
+        return jnp.broadcast_to(
+            jnp.where(a > 1, self.rate / (a - 1), jnp.inf), self.batch_shape
+        )
+
+    @property
+    def variance(self):
+        # defined for concentration > 2
+        a = jnp.asarray(self.concentration, jnp.result_type(float))
+        var = jnp.asarray(self.rate) ** 2 / ((a - 1) ** 2 * (a - 2))
+        return jnp.broadcast_to(jnp.where(a > 2, var, jnp.inf), self.batch_shape)
 
 
 class Beta(Distribution):
@@ -359,6 +389,12 @@ class Dirichlet(Distribution):
     def mean(self):
         return self.concentration / self.concentration.sum(-1, keepdims=True)
 
+    @property
+    def variance(self):
+        a = self.concentration
+        a0 = a.sum(-1, keepdims=True)
+        return a * (a0 - a) / (a0 ** 2 * (a0 + 1))
+
 
 class MultivariateNormal(Distribution):
     arg_constraints = {"loc": constraints.real_vector}
@@ -384,15 +420,23 @@ class MultivariateNormal(Distribution):
     def log_prob(self, value):
         d = value.shape[-1]
         diff = value - self.loc
-        y = jax.scipy.linalg.solve_triangular(
-            self.scale_tril, diff[..., None], lower=True
-        )[..., 0]
+        # solve_triangular does NOT broadcast batch dims (sample dims of the
+        # value vs parameter batch) — align both operands explicitly
+        batch = broadcast_shapes(diff.shape[:-1], self.scale_tril.shape[:-2])
+        tril = jnp.broadcast_to(self.scale_tril, batch + self.scale_tril.shape[-2:])
+        diff = jnp.broadcast_to(diff, batch + diff.shape[-1:])
+        y = jax.scipy.linalg.solve_triangular(tril, diff[..., None], lower=True)[..., 0]
         half_log_det = jnp.sum(jnp.log(jnp.diagonal(self.scale_tril, axis1=-2, axis2=-1)), -1)
         return -0.5 * jnp.sum(y ** 2, -1) - half_log_det - 0.5 * d * math.log(2 * math.pi)
 
     @property
     def mean(self):
         return jnp.broadcast_to(self.loc, self.batch_shape + self.event_shape)
+
+    @property
+    def variance(self):
+        var = jnp.sum(self.scale_tril ** 2, -1)
+        return jnp.broadcast_to(var, self.batch_shape + self.event_shape)
 
     @property
     def covariance_matrix(self):
@@ -409,7 +453,18 @@ class LowRankMultivariateNormal(Distribution):
         self.loc = jnp.asarray(loc)
         self.cov_factor = jnp.asarray(cov_factor)  # (..., D, K)
         self.cov_diag = jnp.asarray(cov_diag)  # (..., D)
-        super().__init__(self.loc.shape[:-1], self.loc.shape[-1:])
+        d = self.loc.shape[-1]
+        if self.cov_factor.shape[-2] != d or self.cov_diag.shape[-1] != d:
+            raise ValueError(
+                f"event size mismatch: loc has D={d}, cov_factor "
+                f"{self.cov_factor.shape[-2:]}, cov_diag {self.cov_diag.shape[-1:]}"
+            )
+        # batch shape must broadcast ALL three parameter batches (batched
+        # cov_factor/cov_diag with scalar-batch loc used to be dropped)
+        batch_shape = broadcast_shapes(
+            self.loc.shape[:-1], self.cov_factor.shape[:-2], self.cov_diag.shape[:-1]
+        )
+        super().__init__(batch_shape, self.loc.shape[-1:])
 
     def sample(self, key, sample_shape=()):
         k1, k2 = jax.random.split(key)
@@ -433,15 +488,34 @@ class LowRankMultivariateNormal(Distribution):
         wt_dinv = jnp.swapaxes(w, -1, -2) * dinv[..., None, :]
         capacitance = jnp.eye(k_dim) + wt_dinv @ w
         chol = jnp.linalg.cholesky(capacitance)
-        # mahalanobis via woodbury
+        # mahalanobis via woodbury; align batch dims — solve_triangular does
+        # not broadcast the value's sample dims against the parameter batch
         wt_dinv_diff = jnp.einsum("...kd,...d->...k", wt_dinv, diff)
-        y = jax.scipy.linalg.solve_triangular(chol, wt_dinv_diff[..., None], lower=True)[..., 0]
+        batch = broadcast_shapes(wt_dinv_diff.shape[:-1], chol.shape[:-2])
+        chol_b = jnp.broadcast_to(chol, batch + chol.shape[-2:])
+        wt_dinv_diff = jnp.broadcast_to(wt_dinv_diff, batch + wt_dinv_diff.shape[-1:])
+        y = jax.scipy.linalg.solve_triangular(chol_b, wt_dinv_diff[..., None], lower=True)[..., 0]
         maha = jnp.sum(diff ** 2 * dinv, -1) - jnp.sum(y ** 2, -1)
         log_det = (
             jnp.sum(jnp.log(self.cov_diag), -1)
             + 2 * jnp.sum(jnp.log(jnp.diagonal(chol, axis1=-2, axis2=-1)), -1)
         )
         return -0.5 * (d * math.log(2 * math.pi) + log_det + maha)
+
+    @property
+    def mean(self):
+        return jnp.broadcast_to(self.loc, self.batch_shape + self.event_shape)
+
+    @property
+    def variance(self):
+        var = self.cov_diag + jnp.sum(self.cov_factor ** 2, -1)
+        return jnp.broadcast_to(var, self.batch_shape + self.event_shape)
+
+    @property
+    def covariance_matrix(self):
+        return self.cov_factor @ jnp.swapaxes(self.cov_factor, -1, -2) + jnp.vectorize(
+            jnp.diag, signature="(d)->(d,d)"
+        )(jnp.broadcast_to(self.cov_diag, self.batch_shape + self.event_shape))
 
 
 class VonMises(Distribution):
@@ -465,6 +539,16 @@ class VonMises(Distribution):
             - self.concentration
         )
 
+    @property
+    def mean(self):
+        return jnp.broadcast_to(self.loc, self.batch_shape)
+
+    @property
+    def variance(self):
+        # circular variance: 1 - I1(k)/I0(k)
+        k = self.concentration
+        return jnp.broadcast_to(1.0 - jsp.i1e(k) / jsp.i0e(k), self.batch_shape)
+
 
 class Logistic(Distribution):
     arg_constraints = {"loc": constraints.real, "scale": constraints.positive}
@@ -482,6 +566,16 @@ class Logistic(Distribution):
     def log_prob(self, value):
         z = (value - self.loc) / self.scale
         return -z - 2 * jax.nn.softplus(-z) - jnp.log(self.scale)
+
+    @property
+    def mean(self):
+        return jnp.broadcast_to(self.loc, self.batch_shape)
+
+    @property
+    def variance(self):
+        return jnp.broadcast_to(
+            jnp.asarray(self.scale) ** 2 * math.pi ** 2 / 3, self.batch_shape
+        )
 
 
 class Weibull(Distribution):
@@ -504,3 +598,15 @@ class Weibull(Distribution):
             + (k - 1) * (jnp.log(value) - jnp.log(self.scale))
             - (value / self.scale) ** k
         )
+
+    @property
+    def mean(self):
+        k = self.concentration
+        return self.scale * jnp.exp(jsp.gammaln(1 + 1 / k))
+
+    @property
+    def variance(self):
+        k = self.concentration
+        g1 = jnp.exp(jsp.gammaln(1 + 1 / k))
+        g2 = jnp.exp(jsp.gammaln(1 + 2 / k))
+        return jnp.asarray(self.scale) ** 2 * (g2 - g1 ** 2)

@@ -3,6 +3,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.scipy import special as jsp
 
 from . import constraints
@@ -21,6 +22,7 @@ from .util import (
 class Bernoulli(Distribution):
     support = constraints.boolean
     is_discrete = True
+    has_enumerate_support = True
 
     def __init__(self, probs=None, logits=None):
         if (probs is None) == (logits is None):
@@ -56,12 +58,16 @@ class Bernoulli(Distribution):
         p = clamp_probs(self.probs)
         return -(p * jnp.log(p) + (1 - p) * jnp.log1p(-p))
 
-    def enumerate_support(self):
-        return jnp.arange(2.0).reshape((2,) + (1,) * len(self.batch_shape))
+    def enumerate_support(self, expand=True):
+        values = jnp.arange(2.0).reshape((2,) + (1,) * len(self.batch_shape))
+        if expand:
+            values = jnp.broadcast_to(values, (2,) + self.batch_shape)
+        return values
 
 
 class Categorical(Distribution):
     is_discrete = True
+    has_enumerate_support = True
 
     def __init__(self, probs=None, logits=None):
         if (probs is None) == (logits is None):
@@ -88,9 +94,15 @@ class Categorical(Distribution):
     def log_prob(self, value):
         # normalized logits gathered at value — THE hot path for LM observe
         # sites; the Pallas kernel in kernels/categorical_logprob fuses this.
+        # value and batch dims are broadcast against each other first, so
+        # enumerated values (extra leading dims from the enum messenger)
+        # gather correctly against plate-expanded logits.
         logits = self.logits
         norm = jsp.logsumexp(logits, axis=-1)
         value = jnp.asarray(value, jnp.int32)
+        batch = broadcast_shapes(jnp.shape(value), jnp.shape(logits)[:-1])
+        logits = jnp.broadcast_to(logits, batch + jnp.shape(logits)[-1:])
+        value = jnp.broadcast_to(value, batch)
         picked = jnp.take_along_axis(logits, value[..., None], axis=-1)[..., 0]
         return picked - norm
 
@@ -98,14 +110,22 @@ class Categorical(Distribution):
     def mean(self):
         return jnp.sum(self.probs * jnp.arange(self.num_categories), -1)
 
+    @property
+    def variance(self):
+        second_moment = jnp.sum(self.probs * jnp.arange(self.num_categories) ** 2, -1)
+        return second_moment - self.mean ** 2
+
     def entropy(self):
         logp = jax.nn.log_softmax(self.logits, -1)
         return -jnp.sum(jnp.exp(logp) * logp, -1)
 
-    def enumerate_support(self):
-        return jnp.arange(self.num_categories).reshape(
+    def enumerate_support(self, expand=True):
+        values = jnp.arange(self.num_categories).reshape(
             (self.num_categories,) + (1,) * len(self.batch_shape)
         )
+        if expand:
+            values = jnp.broadcast_to(values, (self.num_categories,) + self.batch_shape)
+        return values
 
 
 class OneHotCategorical(Categorical):
@@ -124,9 +144,25 @@ class OneHotCategorical(Categorical):
         logp = jax.nn.log_softmax(self.logits, -1)
         return jnp.sum(logp * value, -1)
 
+    @property
+    def mean(self):
+        return self.probs
+
+    @property
+    def variance(self):
+        return self.probs * (1 - self.probs)
+
+    def enumerate_support(self, expand=True):
+        n = self.num_categories
+        values = jnp.eye(n).reshape((n,) + (1,) * len(self.batch_shape) + (n,))
+        if expand:
+            values = jnp.broadcast_to(values, (n,) + self.batch_shape + (n,))
+        return values
+
 
 class Binomial(Distribution):
     is_discrete = True
+    has_enumerate_support = True
 
     def __init__(self, total_count=1, probs=None, logits=None):
         if (probs is None) == (logits is None):
@@ -167,11 +203,33 @@ class Binomial(Distribution):
 
     @property
     def mean(self):
-        return self.total_count * self.probs
+        return jnp.broadcast_to(self.total_count * self.probs, self.batch_shape)
 
     @property
     def variance(self):
-        return self.total_count * self.probs * (1 - self.probs)
+        return jnp.broadcast_to(
+            self.total_count * self.probs * (1 - self.probs), self.batch_shape
+        )
+
+    def enumerate_support(self, expand=True):
+        try:
+            counts = np.asarray(self.total_count)
+        except Exception as e:  # total_count is a jax tracer
+            raise NotImplementedError(
+                "Binomial.enumerate_support needs a static (non-traced) "
+                "total_count — pass it as a python int, not a jit argument."
+            ) from e
+        if counts.size > 1 and not (counts == counts.flat[0]).all():
+            raise NotImplementedError(
+                "Binomial.enumerate_support requires a homogeneous total_count "
+                f"(got varying counts {counts.ravel()[:5]}...); split the site "
+                "per count or pad all counts to a common value with masking."
+            )
+        n = int(counts.flat[0]) if counts.size else int(counts)
+        values = jnp.arange(n + 1.0).reshape((n + 1,) + (1,) * len(self.batch_shape))
+        if expand:
+            values = jnp.broadcast_to(values, (n + 1,) + self.batch_shape)
+        return values
 
 
 class Multinomial(Distribution):
@@ -184,7 +242,11 @@ class Multinomial(Distribution):
         self._logits = logits
         self.total_count = total_count
         shape = jnp.shape(probs if probs is not None else logits)
-        super().__init__(shape[:-1], shape[-1:])
+        # batch shape must broadcast total_count against the parameter batch
+        # dims (a batched total_count used to be silently dropped)
+        super().__init__(
+            broadcast_shapes(jnp.shape(total_count), shape[:-1]), shape[-1:]
+        )
 
     @lazy_property
     def probs(self):
@@ -196,6 +258,11 @@ class Multinomial(Distribution):
 
     def sample(self, key, sample_shape=()):
         shape = tuple(sample_shape) + self.batch_shape
+        if jnp.ndim(self.total_count) > 0:
+            raise NotImplementedError(
+                "Multinomial.sample needs a scalar total_count; "
+                "got a batched array — sample per count instead."
+            )
         n = int(self.total_count)
         idx = jax.random.categorical(key, self.logits, shape=(n,) + shape)
         k = self.event_shape[0]
@@ -206,6 +273,25 @@ class Multinomial(Distribution):
         log_factorial_n = jsp.gammaln(value.sum(-1) + 1)
         log_factorial_xs = jsp.gammaln(value + 1).sum(-1)
         return log_factorial_n - log_factorial_xs + jnp.sum(value * logp, -1)
+
+    @property
+    def mean(self):
+        n = jnp.asarray(self.total_count)[..., None]
+        return jnp.broadcast_to(n * self.probs, self.batch_shape + self.event_shape)
+
+    @property
+    def variance(self):
+        n = jnp.asarray(self.total_count)[..., None]
+        return jnp.broadcast_to(
+            n * self.probs * (1 - self.probs), self.batch_shape + self.event_shape
+        )
+
+    def enumerate_support(self, expand=True):
+        raise NotImplementedError(
+            "Multinomial support is combinatorially large (C(n+k-1, k-1) "
+            "states) and cannot be enumerated; model the per-trial draws with "
+            "a plated Categorical instead."
+        )
 
 
 class Poisson(Distribution):
@@ -230,6 +316,13 @@ class Poisson(Distribution):
     @property
     def variance(self):
         return self.rate
+
+    def enumerate_support(self, expand=True):
+        raise NotImplementedError(
+            "Poisson has countably infinite support and cannot be enumerated; "
+            "truncate it to a Categorical over {0..N} (pick N from the rate's "
+            "tail mass) or marginalize by hand."
+        )
 
 
 class Geometric(Distribution):
@@ -259,6 +352,17 @@ class Geometric(Distribution):
     @property
     def mean(self):
         return (1 - self.probs) / self.probs
+
+    @property
+    def variance(self):
+        return (1 - self.probs) / self.probs ** 2
+
+    def enumerate_support(self, expand=True):
+        raise NotImplementedError(
+            "Geometric has countably infinite support {0, 1, 2, ...} and "
+            "cannot be enumerated; truncate it to a Categorical over {0..N} "
+            "(N chosen so (1-p)^N is negligible) or marginalize by hand."
+        )
 
 
 class NegativeBinomial(Distribution):
@@ -297,4 +401,23 @@ class NegativeBinomial(Distribution):
             - jsp.gammaln(value + 1)
             + r * jnp.log1p(-p)
             + value * jnp.log(p)
+        )
+
+    @property
+    def mean(self):
+        r = jnp.asarray(self.total_count, jnp.float32)
+        return jnp.broadcast_to(r * self.probs / (1 - self.probs), self.batch_shape)
+
+    @property
+    def variance(self):
+        r = jnp.asarray(self.total_count, jnp.float32)
+        return jnp.broadcast_to(
+            r * self.probs / (1 - self.probs) ** 2, self.batch_shape
+        )
+
+    def enumerate_support(self, expand=True):
+        raise NotImplementedError(
+            "NegativeBinomial has countably infinite support and cannot be "
+            "enumerated; truncate it to a Categorical over {0..N} or "
+            "marginalize by hand."
         )

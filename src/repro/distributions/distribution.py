@@ -16,6 +16,7 @@ class Distribution:
     support: constraints.Constraint = constraints.real
     has_rsample: bool = False  # reparametrized sampling available
     is_discrete: bool = False
+    has_enumerate_support: bool = False  # finite support usable by enum/TraceEnum_ELBO
 
     def __init__(self, batch_shape: Tuple[int, ...] = (), event_shape: Tuple[int, ...] = ()):
         self._batch_shape = tuple(batch_shape)
@@ -65,6 +66,24 @@ class Distribution:
 
     def icdf(self, value):
         raise NotImplementedError
+
+    def enumerate_support(self, expand: bool = True):
+        """Enumerate a finite support as values stacked along a new leading
+        dim: shape ``(cardinality,) + batch_shape + event_shape`` when
+        ``expand=True``, or with batch dims kept at 1 when ``expand=False``
+        (the broadcast-friendly form the `enum` messenger uses)."""
+        if self.is_discrete:
+            raise NotImplementedError(
+                f"{type(self).__name__} has no enumerate_support: its support is "
+                "countably infinite or combinatorially large. Bound it explicitly "
+                "(e.g. a Categorical over a truncated range, or Binomial with a "
+                "finite total_count) or marginalize this site by hand."
+            )
+        raise NotImplementedError(
+            f"{type(self).__name__} is continuous and cannot be enumerated; "
+            "parallel enumeration only applies to discrete sites — use a "
+            "reparameterized sample (SVI) or MCMC for this site instead."
+        )
 
     # -- combinators ---------------------------------------------------------
     def to_event(self, reinterpreted_batch_ndims: Optional[int] = None):

@@ -85,6 +85,13 @@ class Independent(Distribution):
     def support(self):
         return self.base_dist.support
 
+    def enumerate_support(self, expand=True):
+        raise NotImplementedError(
+            "Independent cannot enumerate_support: values along reinterpreted "
+            "batch dims would need a joint (exponential) enumeration. Keep the "
+            "dims as batch dims inside a plate and enumerate the base instead."
+        )
+
     def sample(self, key, sample_shape=()):
         return self.base_dist.sample(key, sample_shape)
 
@@ -122,12 +129,30 @@ class MaskedDistribution(Distribution):
     def support(self):
         return self.base_dist.support
 
+    @property
+    def has_enumerate_support(self):
+        return self.base_dist.has_enumerate_support
+
+    def enumerate_support(self, expand=True):
+        return _wrapped_enumerate_support(self, expand)
+
     def sample(self, key, sample_shape=()):
         return self.base_dist.sample(key, sample_shape)
 
     def log_prob(self, value):
         lp = self.base_dist.log_prob(value)
         return jnp.where(self._mask, lp, 0.0)
+
+
+def _wrapped_enumerate_support(dist: Distribution, expand: bool):
+    """Shared enumerate_support for wrappers: re-align the base support to the
+    wrapper's (possibly wider) batch rank."""
+    values = dist.base_dist.enumerate_support(expand=False)
+    k = values.shape[0]
+    values = values.reshape((k,) + (1,) * len(dist.batch_shape) + dist.event_shape)
+    if expand:
+        values = jnp.broadcast_to(values, (k,) + dist.batch_shape + dist.event_shape)
+    return values
 
 
 class ExpandedDistribution(Distribution):
@@ -148,6 +173,13 @@ class ExpandedDistribution(Distribution):
     @property
     def support(self):
         return self.base_dist.support
+
+    @property
+    def has_enumerate_support(self):
+        return self.base_dist.has_enumerate_support
+
+    def enumerate_support(self, expand=True):
+        return _wrapped_enumerate_support(self, expand)
 
     def sample(self, key, sample_shape=()):
         n_extra = len(self.batch_shape) - len(self.base_dist.batch_shape)

@@ -5,7 +5,9 @@ from .autoguide import (
     AutoLowRankMultivariateNormal,
     AutoNormal,
 )
+from ..core.handlers import config_enumerate
 from .elbo import ELBO, RenyiELBO, Trace_ELBO, TraceMeanField_ELBO, vectorize_particles
+from .traceenum_elbo import TraceEnum_ELBO, discrete_marginals, infer_discrete
 from .tracegraph_elbo import TraceGraph_ELBO
 from .importance import Importance
 from .diagnostics import effective_sample_size, print_summary, split_rhat, summary
@@ -23,8 +25,12 @@ __all__ = [
     "ELBO",
     "RenyiELBO",
     "Trace_ELBO",
+    "TraceEnum_ELBO",
     "TraceGraph_ELBO",
     "TraceMeanField_ELBO",
+    "config_enumerate",
+    "discrete_marginals",
+    "infer_discrete",
     "Importance",
     "HMC",
     "MCMC",

@@ -92,7 +92,15 @@ class AutoGuide:
         for name, site in tr.nodes.items():
             if site["type"] == "sample" and not site["is_observed"]:
                 if getattr(site["fn"], "is_discrete", False):
-                    raise ValueError(f"autoguides require continuous latents; '{name}' is discrete")
+                    if site["infer"].get("enumerate") == "parallel":
+                        # marginalized exactly by TraceEnum_ELBO — not a guide latent
+                        continue
+                    raise ValueError(
+                        f"autoguides require continuous latents; '{name}' is discrete. "
+                        "Annotate it with infer={'enumerate': 'parallel'} (or wrap the "
+                        "model in config_enumerate) and train with TraceEnum_ELBO to "
+                        "marginalize it exactly."
+                    )
                 t = biject_to(site["fn"].support)
                 u0 = t.inv(site["value"])
                 init_u = self.init_loc_fn(name, site["value"], u0)

@@ -124,6 +124,25 @@ class ELBO:
         return -jnp.mean(elbos), -jnp.mean(surrogates)
 
 
+def check_no_enumerate_sites(model_tr, guide_tr, estimator: str) -> None:
+    """Reject model latents annotated for enumeration that neither the guide
+    samples nor this estimator can marginalize — they would silently be drawn
+    from the prior and train a wrong objective."""
+    for name, site in model_tr.nodes.items():
+        if (
+            site["type"] == "sample"
+            and not site["is_observed"]
+            and site["infer"].get("enumerate")
+            and name not in guide_tr.nodes
+        ):
+            raise ValueError(
+                f"model site '{name}' is annotated infer={{'enumerate': ...}} "
+                f"but {estimator} cannot marginalize it — train with "
+                "TraceEnum_ELBO (or sample the site in the guide and drop the "
+                "annotation)"
+            )
+
+
 def _single_particle_elbo(rng_key, params, model, guide, args, kwargs):
     """One MC sample of the ELBO with a reparameterized/score-function split."""
     key_guide, key_model = jax.random.split(rng_key)
@@ -131,6 +150,7 @@ def _single_particle_elbo(rng_key, params, model, guide, args, kwargs):
     guide_tr = trace(seeded_guide).get_trace(*args, **kwargs)
     seeded_model = seed(substitute_params(model, params), key_model)
     model_tr = trace(replay(seeded_model, guide_tr)).get_trace(*args, **kwargs)
+    check_no_enumerate_sites(model_tr, guide_tr, "Trace_ELBO")
 
     elbo = 0.0
     score_logq = 0.0  # sum of log q at non-reparam sites (REINFORCE factor)
@@ -174,6 +194,7 @@ class TraceMeanField_ELBO(Trace_ELBO):
         model_tr = trace(
             replay(seed(substitute_params(model, params), key_model), guide_tr)
         ).get_trace(*args, **kwargs)
+        check_no_enumerate_sites(model_tr, guide_tr, "TraceMeanField_ELBO")
         elbo = 0.0
         for name, site in model_tr.nodes.items():
             if site["type"] != "sample":

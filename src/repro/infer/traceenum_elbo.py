@@ -1,0 +1,537 @@
+"""TraceEnum_ELBO + infer_discrete: exact parallel enumeration of discrete
+latents (paper §2's flagship example of composable custom inference).
+
+Enumeration reduces to broadcast-then-contract over named dims (funsor,
+Obermeyer et al. 2019): the `enum` messenger gives every annotated discrete
+site its full support along a fresh negative batch dim left of all plate
+dims, and the contraction below sum-eliminates those dims out of the joint
+log-density with logsumexp (sum-product) or max (max-product for MAP
+decoding), *respecting plate structure*: a plate is a product over
+independent slices, so enum dims local to a plate are eliminated before the
+plate's log-factors are summed over the plate axis, while enum dims shared
+with enclosing ordinals survive the plate sum (the classic "global mixture
+component observed across a data plate" pattern).
+
+Everything here is trace-time Python: under `jax.jit` the handler stack and
+the contraction schedule run while XLA traces, so a compiled SVI step with
+enumeration contains only the einsum-style broadcast/reduce ops —
+`TraceEnum_ELBO` plugs into the shared `ELBO` engine from PR 1 and inherits
+particle vectorization, `mesh=` sharding, and the compile-once `update_jit`
+path unchanged (`num_traces` counts retraces the same way `mcmc.num_traces`
+does).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, FrozenSet, List, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax.scipy import special as jsp
+from jax.sharding import Mesh
+
+from ..core.handlers import block, enum, replay, seed, substitute, trace
+from ..core.primitives import prng_key
+from .elbo import ELBO, _apply_scale_mask
+from .util import substitute_params
+
+# ---------------------------------------------------------------------------
+# log-factor collection
+# ---------------------------------------------------------------------------
+
+
+def _max_plate_nesting(*traces) -> int:
+    """Deepest plate dim used by any site across the given traces."""
+    mpn = 0
+    for tr in traces:
+        for site in tr.nodes.values():
+            for frame in site.get("cond_indep_stack", ()):
+                mpn = max(mpn, -frame.dim)
+    return mpn
+
+
+def _collect_factors(model_tr):
+    """Extract (ordinal, log_prob, pending_scale) triples from a model trace,
+    plus the frame->nesting-depth map used to order plate elimination and the
+    pool of dims the enum messenger allocated. The ordinal of a factor is the
+    frozenset of plate frames enclosing its site.
+
+    Scale handling: a site scale (plate subsampling's size/subsample_size, or
+    handlers.scale) is an exponent on probabilities — for factors entangled
+    with enum dims it must multiply the *marginalized* per-slice log-density,
+    i.e. apply AFTER logsumexp, not before (s*logsumexp(lp), never
+    logsumexp(s*lp)). Factors free of enum dims get their scale applied here;
+    the rest carry it as `pending` until the contraction finishes their local
+    eliminations. Masking: a masked-out slice of an enumerated site fills with
+    -log(K) (so its logsumexp contributes exactly 0), while every other
+    factor fills with 0 as usual."""
+    factors: List[Tuple[FrozenSet, jax.Array, Any]] = []
+    depth: Dict = {}
+    enum_dim_pool = set()
+    for site in model_tr.nodes.values():
+        if site["type"] != "sample":
+            continue
+        enum_dim = site["infer"].get("_enumerate_dim")
+        if enum_dim is not None:
+            enum_dim_pool.add(enum_dim)
+        lp = site["fn"].log_prob(site["value"])
+        mask = site["mask"]
+        if enum_dim is not None:
+            # distribution-level masks (.mask()) zero-fill inside log_prob,
+            # which is wrong across an enum dim — fold them into the site
+            # mask so the -log K neutral fill below covers both paths
+            fn, dist_mask = site["fn"], None
+            while fn is not None:
+                m = getattr(fn, "_mask", None)
+                if m is not None:
+                    dist_mask = m if dist_mask is None else dist_mask & m
+                fn = getattr(fn, "base_dist", None)
+            if dist_mask is not None:
+                mask = dist_mask if mask is None else mask & dist_mask
+        if mask is not None:
+            neutral = (
+                -jnp.log(site["infer"]["_enumerate_cardinality"])
+                if enum_dim is not None
+                else 0.0
+            )
+            lp = jnp.where(mask, lp, neutral)
+        frames = site["cond_indep_stack"]
+        # cond_indep_stack is ordered outermost -> innermost
+        for i, f in enumerate(frames):
+            depth[f] = max(depth.get(f, 0), i)
+        factors.append((frozenset(frames), lp, site["scale"]))
+    pool = frozenset(enum_dim_pool)
+    # scales on enum-free factors commute with everything downstream
+    factors = [
+        (o, lp, s) if _enum_dims(lp, pool) else (o, _scaled(lp, s), None)
+        for o, lp, s in factors
+    ]
+    return factors, depth, pool
+
+
+def _enum_dims(t: jax.Array, pool: FrozenSet[int]) -> FrozenSet[int]:
+    """Allocated enum dims actually present (size > 1) in a right-aligned
+    log-factor. Only dims the enum messenger allocated count — ordinary
+    batch dims are never contracted."""
+    return frozenset(
+        d for d in pool if jnp.ndim(t) >= -d and jnp.shape(t)[jnp.ndim(t) + d] > 1
+    )
+
+
+def _reduce_dims(t: jax.Array, dims, sum_op) -> jax.Array:
+    axes = tuple(jnp.ndim(t) + d for d in dims)
+    return sum_op(t, axes) if axes else t
+
+
+def _logsumexp_op(t, axes):
+    return jsp.logsumexp(t, axis=axes, keepdims=True)
+
+
+def _max_op(t, axes):
+    return jnp.max(t, axis=axes, keepdims=True)
+
+
+def _add_all(ts: List[jax.Array]) -> jax.Array:
+    total = ts[0]
+    for t in ts[1:]:
+        total = total + t
+    return total
+
+
+def _scaled(t: jax.Array, scale) -> jax.Array:
+    return t if scale is None else t * scale
+
+
+def _uniform_scale(scales):
+    """The single pending scale shared by a contraction group (None == 1)."""
+    distinct = []
+    for s in scales:
+        if not any(s is d or (isinstance(s, (int, float)) and s == d) for d in distinct):
+            distinct.append(s)
+    if len(distinct) > 1:
+        raise NotImplementedError(
+            "factors with different log_prob scales meet inside one enumerated "
+            f"contraction (scales {distinct}); apply the same plate/scale "
+            "context to every site entangled with an enumerated variable"
+        )
+    return distinct[0]
+
+
+def _ve_eliminate(ts, dims, pool: FrozenSet[int], sum_op):
+    """Greedy variable elimination over (tensor, pending_scale) pairs: drop
+    each enum dim by combining only the factors that carry it, most-negative
+    (= last-allocated) dim first. For a sequentially-sampled chain
+    z_1 -> ... -> z_T this is the backward algorithm — O(T K^2) instead of
+    the K^T blowup of a joint logsumexp. A group's pending scale resolves
+    (multiplies) as soon as its result carries no more enum dims."""
+    for d in sorted(dims):
+        group = [(t, s) for t, s in ts if d in _enum_dims(t, pool)]
+        rest = [(t, s) for t, s in ts if d not in _enum_dims(t, pool)]
+        if not group:
+            continue
+        scale = _uniform_scale([s for _, s in group])
+        t = _reduce_dims(_add_all([t for t, _ in group]), (d,), sum_op)
+        if scale is not None and not _enum_dims(t, pool):
+            t, scale = t * scale, None
+        ts = rest + [(t, scale)]
+    return ts
+
+
+def contract_log_factors(
+    factors: List[Tuple[FrozenSet, jax.Array, Any]],
+    depth: Dict,
+    pool: FrozenSet[int],
+    keep_dims: FrozenSet[int] = frozenset(),
+    keep_frames: FrozenSet = frozenset(),
+    sum_op=_logsumexp_op,
+) -> jax.Array:
+    """Plate-aware tensor variable elimination in log space.
+
+    Eliminates every enum dim not in `keep_dims` (via `sum_op`, keepdims) and
+    sums out every plate frame not in `keep_frames`, processing ordinals
+    innermost-first so that each enum dim is eliminated at the shallowest
+    ordinal where it still appears — i.e. inside its own plate context but
+    outside any plate it is shared across. Pending site scales resolve after
+    their factor's local eliminations (see `_collect_factors`); a factor
+    still pending at its plate sum carries only dims shared with enclosing
+    ordinals, where scale-inside is the correct minibatch estimator of the
+    full-data inner sum. Returns a single right-aligned log-factor (all
+    reduced axes kept at size 1).
+    """
+    groups: Dict[FrozenSet, List[Tuple[jax.Array, Any]]] = {}
+    for ordinal, t, s in factors:
+        groups.setdefault(ordinal, []).append((t, s))
+
+    while True:
+        pending = [o for o, ts in groups.items() if ts and (o - keep_frames)]
+        if not pending:
+            break
+        # innermost first: the ordinal whose deepest pending frame nests deepest
+        o = max(pending, key=lambda o: max(depth[f] for f in (o - keep_frames)))
+        ts = groups.pop(o)
+        other_dims: set = set()
+        for ts2 in groups.values():
+            for t2, _ in ts2:
+                other_dims |= _enum_dims(t2, pool)
+        local = set()
+        for t, _ in ts:
+            local |= _enum_dims(t, pool)
+        local -= other_dims
+        local -= keep_dims
+        if local:
+            ts = _ve_eliminate(ts, local, pool, sum_op)
+        # the plate is a product over slices: sum the slice log-factor over
+        # the innermost pending frame's axis, then hand the result to the
+        # enclosing ordinal
+        f = max(o - keep_frames, key=lambda fr: depth[fr])
+        t = _add_all([_scaled(t, s) for t, s in ts])
+        if jnp.ndim(t) >= -f.dim:
+            t = jnp.sum(t, axis=jnp.ndim(t) + f.dim, keepdims=True)
+        groups.setdefault(o - {f}, []).append((t, None))
+
+    ts = [p for tl in groups.values() for p in tl]
+    if not ts:
+        return jnp.zeros(())
+    ts = [(_scaled(t, s), None) for t, s in ts]
+    leftover = set()
+    for t, _ in ts:
+        leftover |= _enum_dims(t, pool)
+    ts = _ve_eliminate(ts, leftover - keep_dims, pool, sum_op)
+    return _add_all([t for t, _ in ts])
+
+
+# ---------------------------------------------------------------------------
+# TraceEnum_ELBO
+# ---------------------------------------------------------------------------
+
+
+class TraceEnum_ELBO(ELBO):
+    """ELBO with exact parallel marginalization of enumerated discrete model
+    sites. Annotate sites with ``infer={"enumerate": "parallel"}`` (or wrap
+    the model in `config_enumerate`); the guide must not sample them.
+
+    Plugs into the shared `ELBO` engine: `num_particles`, `mesh=` particle
+    sharding, and SVI's compile-once `update_jit` all work unchanged.
+    `max_plate_nesting` is detected from a prototype trace when not given;
+    pass it explicitly when the model's shapes depend on rarely-exercised
+    branches. `num_traces` counts XLA retraces (jit-stability assertion hook,
+    same idiom as `mcmc.num_traces`).
+    """
+
+    def __init__(
+        self,
+        num_particles: int = 1,
+        max_plate_nesting: Optional[int] = None,
+        mesh: Optional[Mesh] = None,
+        particle_axis: Union[str, Tuple[str, ...], None] = None,
+    ):
+        super().__init__(num_particles, mesh=mesh, particle_axis=particle_axis)
+        self.max_plate_nesting = max_plate_nesting
+        self.num_traces = 0
+
+    def _single_particle(self, rng_key, params, model, guide, args, kwargs):
+        self.num_traces += 1  # trace-time side effect (retrace detector)
+        key_guide, key_model = jax.random.split(rng_key)
+        seeded_guide = seed(substitute_params(guide, params), key_guide)
+        guide_tr = trace(seeded_guide).get_trace(*args, **kwargs)
+        for name, site in guide_tr.nodes.items():
+            if (
+                site["type"] == "sample"
+                and not site["is_observed"]
+                and site["infer"].get("enumerate")
+            ):
+                raise NotImplementedError(
+                    f"guide site '{name}' requests enumeration; guide-side "
+                    "enumeration is not implemented — annotate the model site "
+                    "and remove it from the guide so TraceEnum_ELBO can "
+                    "marginalize it exactly"
+                )
+        seeded_model = seed(substitute_params(model, params), key_model)
+        if self.max_plate_nesting is None:
+            # one extra prototype trace (trace-time only), then cached
+            proto_tr = trace(replay(seeded_model, guide_tr)).get_trace(*args, **kwargs)
+            self.max_plate_nesting = _max_plate_nesting(guide_tr, proto_tr)
+        mpn = self.max_plate_nesting
+        with enum(first_available_dim=-1 - mpn):
+            model_tr = trace(replay(seeded_model, guide_tr)).get_trace(*args, **kwargs)
+
+        factors, depth, pool = _collect_factors(model_tr)
+        elbo = jnp.sum(contract_log_factors(factors, depth, pool))
+        score_logq = 0.0  # REINFORCE factor for non-reparam guide sites
+        for site in guide_tr.nodes.values():
+            if site["type"] != "sample" or site["is_observed"]:
+                continue
+            lq = _apply_scale_mask(site["fn"].log_prob(site["value"]), site)
+            elbo = elbo - jnp.sum(lq)
+            if not site["fn"].has_rsample:
+                score_logq = score_logq + jnp.sum(lq)
+        surrogate = elbo + jax.lax.stop_gradient(elbo) * (
+            score_logq - jax.lax.stop_gradient(score_logq)
+        )
+        return elbo, surrogate
+
+
+# ---------------------------------------------------------------------------
+# infer_discrete: posterior decoding of enumerated sites
+# ---------------------------------------------------------------------------
+
+
+def _index_factor(t: jax.Array, dim: int, idx: jax.Array) -> jax.Array:
+    """Condition a right-aligned log-factor on idx along enum dim `dim`
+    (idx is right-aligned with a size-1 slot at `dim`)."""
+    axis = jnp.ndim(t) + dim
+    if axis < 0 or jnp.shape(t)[axis] == 1:
+        return t  # factor does not carry this dim
+    if jnp.ndim(idx) > jnp.ndim(t):
+        t = jnp.reshape(t, (1,) * (jnp.ndim(idx) - jnp.ndim(t)) + jnp.shape(t))
+        axis = jnp.ndim(t) + dim
+    elif jnp.ndim(idx) < jnp.ndim(t):
+        idx = jnp.reshape(idx, (1,) * (jnp.ndim(t) - jnp.ndim(idx)) + jnp.shape(idx))
+    return jnp.take_along_axis(t, idx.astype(jnp.int32), axis=axis)
+
+
+def _enum_trace(model, rng_key, args, kwargs, first_available_dim):
+    """Run the hidden enumeration pass: seed, auto-detect max_plate_nesting
+    (unless first_available_dim pins it), and trace under `enum`. Shared by
+    discrete_marginals and _decode_discrete."""
+    with block():  # hide the enumeration pass from enclosing handlers
+        seeded = seed(model, jnp.asarray(rng_key))
+        if first_available_dim is None:
+            proto_tr = trace(seeded).get_trace(*args, **kwargs)
+            mpn = _max_plate_nesting(proto_tr)
+        else:
+            mpn = -first_available_dim - 1
+        with enum(first_available_dim=-1 - mpn):
+            tr = trace(seeded).get_trace(*args, **kwargs)
+    return tr
+
+
+def discrete_marginals(
+    model: Callable,
+    rng_key,
+    *args,
+    first_available_dim: Optional[int] = None,
+    **kwargs,
+) -> Dict[str, jax.Array]:
+    """Exact posterior marginals of every enumerated site, as normalized
+    log-probabilities with the site's support on the LAST axis (preceded by
+    the site's plate dims). Condition/substitute the model beforehand.
+
+    Uses the dice-factor identity: d logZ / d (site's log-factor) is the
+    posterior marginal of that factor's indices, which stays exact even when
+    a global enumerated variable couples plate slices (a per-site contraction
+    would drop the other slices' evidence about the global)."""
+    if rng_key is None:
+        rng_key = prng_key()  # ambient seed handler, if any
+    if rng_key is None:
+        rng_key = jax.random.PRNGKey(0)
+    tr = _enum_trace(model, rng_key, args, kwargs, first_available_dim)
+    factors, depth, pool = _collect_factors(tr)
+
+    enum_sites = {
+        name: site
+        for name, site in tr.nodes.items()
+        if site["type"] == "sample" and "_enumerate_dim" in site["infer"]
+    }
+    sample_names = [
+        name for name, site in tr.nodes.items() if site["type"] == "sample"
+    ]
+
+    def log_z(perturbs: Dict[str, jax.Array]) -> jax.Array:
+        perturbed = [
+            (o, t + perturbs[name], s) if name in perturbs else (o, t, s)
+            for name, (o, t, s) in zip(sample_names, factors)
+        ]
+        return jnp.sum(contract_log_factors(perturbed, depth, pool))
+
+    zero = {
+        name: jnp.zeros_like(factors[sample_names.index(name)][1])
+        for name in enum_sites
+    }
+    joint_probs = jax.grad(log_z)(zero)
+
+    marginals: Dict[str, jax.Array] = {}
+    for name, site in enum_sites.items():
+        d = site["infer"]["_enumerate_dim"]
+        probs = joint_probs[name]
+        # sum joint posterior over everything but this site's own enum dim
+        # and its plate dims (per-slice marginals)
+        keep = {d} | {f.dim for f in site["cond_indep_stack"]}
+        drop = tuple(a for a in range(-jnp.ndim(probs), 0) if a not in keep)
+        probs = jnp.sum(probs, axis=drop, keepdims=True) if drop else probs
+        logits = jnp.moveaxis(jnp.log(probs), jnp.ndim(probs) + d, -1)
+        target_rank = max([-f.dim for f in site["cond_indep_stack"]], default=0)
+        marginals[name] = _squeeze_to_rank(
+            jax.nn.log_softmax(logits, -1), target_rank + 1
+        )
+    return marginals
+
+
+def _squeeze_to_rank(x: jax.Array, rank: int) -> jax.Array:
+    """Drop leading size-1 axes until `x` has `rank` dims."""
+    while jnp.ndim(x) > rank and jnp.shape(x)[0] == 1:
+        x = x[0]
+    return x
+
+
+def _decode_discrete(model, rng_key, args, kwargs, first_available_dim, temperature):
+    """Decode enumerated sites: temperature=1 -> exact joint posterior sample
+    (sequential conditioning = chain rule); 0 -> exact joint MAP (max-product
+    elimination + sequential argmax)."""
+    if rng_key is None:
+        rng_key = jax.random.PRNGKey(0)
+    key_trace, key_sample = jax.random.split(jnp.asarray(rng_key))
+    sum_op = _max_op if temperature == 0 else _logsumexp_op
+    tr = _enum_trace(model, key_trace, args, kwargs, first_available_dim)
+    factors, depth, pool = _collect_factors(tr)
+
+    enum_sites = [
+        (name, site)
+        for name, site in tr.nodes.items()
+        if site["type"] == "sample" and "_enumerate_dim" in site["infer"]
+    ]
+    # allocation order == execution order == decreasing dim
+    enum_sites.sort(key=lambda ns: -ns[1]["infer"]["_enumerate_dim"])
+
+    values: Dict[str, jax.Array] = {}
+    for i, (name, site) in enumerate(enum_sites):
+        d = site["infer"]["_enumerate_dim"]
+        ordinal = frozenset(site["cond_indep_stack"])
+        marg = contract_log_factors(
+            factors, depth, pool, keep_dims=frozenset([d]), keep_frames=ordinal,
+            sum_op=sum_op,
+        )
+        logits = jnp.moveaxis(marg, jnp.ndim(marg) + d, -1)  # (*plates, K)
+        # the decoded value's batch rank comes from the site's plate context
+        # (the enum-trace fn.batch_shape is polluted by parent enum dims)
+        target_rank = max([-f.dim for f in site["cond_indep_stack"]], default=0)
+        if temperature == 0:
+            idx = jnp.argmax(logits, -1)
+        else:
+            idx = jax.random.categorical(jax.random.fold_in(key_sample, i), logits)
+        # condition the remaining factors on the decoded value (chain rule)
+        idx_r = jnp.expand_dims(idx, d)
+        factors = [(o, _index_factor(t, d, idx_r), s) for o, t, s in factors]
+        # map index -> support value, shaped like an ordinary draw at the site
+        support = site["fn"].enumerate_support(expand=False)
+        event_shape = site["fn"].event_shape
+        support_flat = jnp.reshape(support, (jnp.shape(support)[0],) + event_shape)
+        val = jnp.take(support_flat, idx, axis=0)
+        values[name] = _squeeze_to_rank(val, target_rank + len(event_shape))
+
+    # pin every free (non-enumerated) latent to its decode-pass draw: the
+    # discrete sites were decoded AGAINST those values, so re-sampling them in
+    # the replay pass would return an inconsistent (continuous, discrete) pair
+    for name, site in tr.nodes.items():
+        if (
+            site["type"] == "sample"
+            and not site["is_observed"]
+            and name not in values
+        ):
+            values[name] = site["value"]
+    return values
+
+
+class _InferDiscrete:
+    """Callable wrapper produced by `infer_discrete`."""
+
+    def __init__(self, fn, first_available_dim, temperature, rng_key):
+        self.fn = fn
+        self.first_available_dim = first_available_dim
+        self.temperature = temperature
+        self.rng_key = rng_key
+        functools.update_wrapper(self, fn, updated=[])
+
+    def __call__(self, *args, **kwargs):
+        # no explicit key -> draw one from the ambient seed handler, so each
+        # seeded call of the wrapper yields a fresh posterior draw instead of
+        # silently repeating one fixed decode
+        rng_key = self.rng_key
+        if rng_key is None:
+            rng_key = prng_key()
+        values = _decode_discrete(
+            self.fn,
+            rng_key,
+            args,
+            kwargs,
+            self.first_available_dim,
+            self.temperature,
+        )
+        return substitute(self.fn, data=values)(*args, **kwargs)
+
+
+def infer_discrete(
+    fn: Optional[Callable] = None,
+    *,
+    first_available_dim: Optional[int] = None,
+    temperature: int = 1,
+    rng_key=None,
+) -> Callable:
+    """Posterior decoding of enumerated discrete sites (Pyro's
+    `infer_discrete`): returns a model whose annotated discrete sites take
+    exact joint posterior samples (``temperature=1``, sequential conditioning
+    via the chain rule) or the exact joint MAP assignment (``temperature=0``,
+    max-product elimination), given the observations/conditioning baked into
+    the model. Any free continuous latents are drawn once (keyed by
+    ``rng_key``) and pinned across the decode and replay passes, so the
+    returned execution is one coherent joint draw — but their posterior is
+    NOT inferred here. Continuous posteriors go in first — substitute
+    SVI/MCMC draws into the model, then decode:
+
+        guide_draws = {...}                      # from SVI or MCMC
+        decoded = infer_discrete(
+            handlers.substitute(config_enumerate(model), data=guide_draws),
+            temperature=0, rng_key=key)
+        tr = handlers.trace(decoded).get_trace(data)
+        assignments = tr["z"]["value"]
+    """
+    if fn is None:
+        return functools.partial(
+            infer_discrete,
+            first_available_dim=first_available_dim,
+            temperature=temperature,
+            rng_key=rng_key,
+        )
+    if temperature not in (0, 1):
+        raise ValueError(f"temperature must be 0 (MAP) or 1 (sample), got {temperature}")
+    return _InferDiscrete(fn, first_available_dim, temperature, rng_key)

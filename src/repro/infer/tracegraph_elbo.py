@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core.handlers import replay, seed, trace
-from .elbo import ELBO, _apply_scale_mask
+from .elbo import ELBO, _apply_scale_mask, check_no_enumerate_sites
 from .util import substitute_params
 
 
@@ -41,6 +41,7 @@ class TraceGraph_ELBO(ELBO):
         model_tr = trace(
             replay(seed(substitute_params(model, params), key_m), guide_tr)
         ).get_trace(*args, **kwargs)
+        check_no_enumerate_sites(model_tr, guide_tr, "TraceGraph_ELBO")
 
         # cost terms: every model log_prob and negated guide log_prob,
         # kept as ARRAYS with their plate frames (per-element weighting

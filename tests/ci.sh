@@ -1,7 +1,17 @@
 #!/usr/bin/env bash
 # Local mirror of .github/workflows/ci.yml: pinned deps + the tier-1 verify
 # command on CPU. The suite must never again fail at collection — missing
-# optional deps (hypothesis) skip their modules instead of erroring.
+# optional deps (hypothesis, scipy) skip their modules instead of erroring.
+#
+# Usage: tests/ci.sh [all|engine|conformance|docs] [extra pytest args...]
+#   engine      - core/inference/kernel suites (-p no:randomly for determinism,
+#                 --durations=10 to keep slow tests visible)
+#   conformance - the distribution conformance + goodness-of-fit suite, run as
+#                 its own step so distribution regressions are attributed
+#                 distinctly from engine failures
+#   docs        - doctested infer/ modules + executable docs/ pages
+# Extra args after the step name are forwarded to pytest, e.g.
+#   tests/ci.sh engine -k enum -x
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -9,12 +19,35 @@ if [[ "${CI_INSTALL:-0}" == "1" ]]; then
     python -m pip install -r requirements.txt
 fi
 
-JAX_PLATFORMS=cpu PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q "$@"
+export JAX_PLATFORMS=cpu
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 
-# docs: the documentation is executable — module docstring examples and the
-# docs/ pages are doctests, and broken example code fails CI
-JAX_PLATFORMS=cpu PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q --doctest-modules \
-    src/repro/infer/mcmc.py src/repro/infer/diagnostics.py \
-    src/repro/infer/predictive.py src/repro/infer/autoguide.py
-JAX_PLATFORMS=cpu PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m doctest \
-    docs/inference.md docs/backends.md
+STEP="${1:-all}"
+if [[ $# -gt 0 ]]; then shift; fi
+
+run_engine() {
+    python -m pytest -p no:randomly -q --durations=10 \
+        --ignore=tests/test_distributions_conformance.py "$@"
+}
+
+run_conformance() {
+    python -m pytest -p no:randomly -q --durations=10 \
+        tests/test_distributions_conformance.py "$@"
+}
+
+run_docs() {
+    # docs: the documentation is executable — module docstring examples and
+    # the docs/ pages are doctests, and broken example code fails CI
+    python -m pytest -q --doctest-modules \
+        src/repro/infer/mcmc.py src/repro/infer/diagnostics.py \
+        src/repro/infer/predictive.py src/repro/infer/autoguide.py
+    python -m doctest docs/inference.md docs/backends.md docs/enumeration.md
+}
+
+case "$STEP" in
+    engine)      run_engine "$@" ;;
+    conformance) run_conformance "$@" ;;
+    docs)        run_docs ;;
+    all)         run_engine "$@"; run_conformance "$@"; run_docs ;;
+    *) echo "unknown step '$STEP' (use all|engine|conformance|docs)" >&2; exit 2 ;;
+esac

@@ -1,0 +1,488 @@
+"""Universal distribution conformance suite (numpyro test_distributions idiom).
+
+One parametrized harness over every distribution in continuous.py/discrete.py:
+
+1. log_prob against scipy.stats (rtol pinned below),
+2. sample shape under sample_shape x batch_shape x event_shape broadcasting,
+3. mean/variance against 50k-sample Monte Carlo,
+4. constraint membership of samples,
+
+plus goodness-of-fit sampling tests (Kolmogorov-Smirnov for continuous,
+chi-square for discrete). The whole module is gated on scipy so collection
+never hard-fails on a minimal install (same importorskip pattern as the
+hypothesis-based property tests).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+ss = pytest.importorskip("scipy.stats", reason="conformance suite needs scipy")
+
+from repro import distributions as dist
+
+KEY = jax.random.PRNGKey(20260728)
+
+# pinned comparison tolerances (float32 end-to-end)
+LOGPROB_RTOL = 1e-4
+LOGPROB_ATOL = 1e-4
+MC_N = 50_000
+MC_RTOL = 0.07
+MC_ATOL = 0.07
+GOF_N = 20_000
+GOF_ALPHA = 0.01
+
+
+class Case:
+    """One distribution under test: scalar-param and batched-param factories,
+    an optional scipy reference (frozen dist or callable x -> logpdf)."""
+
+    def __init__(
+        self,
+        name,
+        mk,
+        ref=None,
+        batched_mk=None,
+        batch_shape=(),
+        event_shape=(),
+        skip_mc=None,
+        gof="none",  # "ks" | "chisq" | "none"
+        gof_support=None,  # inclusive int upper bound for chisq binning
+    ):
+        self.name = name
+        self.mk = mk
+        self.ref = ref
+        self.batched_mk = batched_mk
+        self.batch_shape = batch_shape
+        self.event_shape = event_shape
+        self.skip_mc = skip_mc
+        self.gof = gof
+        self.gof_support = gof_support
+
+
+def _dirichlet_logpdf(alpha):
+    def logpdf(xs):
+        xs = np.asarray(xs, np.float64)
+        xs = xs / xs.sum(-1, keepdims=True)
+        return np.array([ss.dirichlet.logpdf(x, alpha) for x in xs])
+
+    return lambda: logpdf
+
+
+_W = np.array([[0.5, -0.2], [0.1, 0.3], [-0.4, 0.6], [0.2, 0.2]])
+_D = np.array([0.5, 1.0, 0.8, 1.2])
+_MVN_COV = np.array([[1.0, 0.3, 0.1], [0.3, 0.8, 0.2], [0.1, 0.2, 1.2]])
+_PROBS3 = np.array([0.2, 0.5, 0.3])
+
+CASES = [
+    Case(
+        "Normal",
+        lambda: dist.Normal(0.7, 1.3),
+        lambda: ss.norm(0.7, 1.3),
+        lambda: dist.Normal(jnp.zeros((2, 3)), jnp.asarray([1.0, 2.0, 0.5])),
+        (2, 3),
+        gof="ks",
+    ),
+    Case(
+        "LogNormal",
+        lambda: dist.LogNormal(0.2, 0.6),
+        lambda: ss.lognorm(0.6, scale=np.exp(0.2)),
+        lambda: dist.LogNormal(jnp.zeros((3,)), 0.6),
+        (3,),
+        gof="ks",
+    ),
+    Case(
+        "Uniform",
+        lambda: dist.Uniform(-1.0, 2.0),
+        lambda: ss.uniform(-1.0, 3.0),
+        lambda: dist.Uniform(jnp.zeros((4, 1)), 2.0),
+        (4, 1),
+        gof="ks",
+    ),
+    Case(
+        "Exponential",
+        lambda: dist.Exponential(1.7),
+        lambda: ss.expon(scale=1 / 1.7),
+        lambda: dist.Exponential(jnp.asarray([0.5, 1.0, 2.0])),
+        (3,),
+        gof="ks",
+    ),
+    Case(
+        "Laplace",
+        lambda: dist.Laplace(-0.3, 0.9),
+        lambda: ss.laplace(-0.3, 0.9),
+        lambda: dist.Laplace(jnp.zeros((2, 2)), 0.9),
+        (2, 2),
+        gof="ks",
+    ),
+    Case(
+        "Cauchy",
+        lambda: dist.Cauchy(0.4, 1.1),
+        lambda: ss.cauchy(0.4, 1.1),
+        lambda: dist.Cauchy(jnp.zeros((3,)), jnp.asarray([1.0, 2.0, 0.5])),
+        (3,),
+        skip_mc="Cauchy moments are undefined",
+        gof="ks",
+    ),
+    Case(
+        "HalfNormal",
+        lambda: dist.HalfNormal(1.4),
+        lambda: ss.halfnorm(scale=1.4),
+        lambda: dist.HalfNormal(jnp.asarray([0.5, 1.5])),
+        (2,),
+        gof="ks",
+    ),
+    Case(
+        "HalfCauchy",
+        lambda: dist.HalfCauchy(0.8),
+        lambda: ss.halfcauchy(scale=0.8),
+        lambda: dist.HalfCauchy(jnp.asarray([[0.5], [1.5]])),
+        (2, 1),
+        skip_mc="HalfCauchy moments are undefined",
+        gof="ks",
+    ),
+    Case(
+        "StudentT",
+        lambda: dist.StudentT(7.0, 0.5, 1.2),
+        lambda: ss.t(7.0, 0.5, 1.2),
+        lambda: dist.StudentT(7.0, jnp.zeros((2, 3)), 1.2),
+        (2, 3),
+        gof="ks",
+    ),
+    Case(
+        "Gamma",
+        lambda: dist.Gamma(2.5, 1.5),
+        lambda: ss.gamma(2.5, scale=1 / 1.5),
+        lambda: dist.Gamma(jnp.asarray([1.0, 2.0]), jnp.asarray([[0.5], [2.0]])),
+        (2, 2),
+        gof="ks",
+    ),
+    Case(
+        "Chi2",
+        lambda: dist.Chi2(5.0),
+        lambda: ss.chi2(5.0),
+        lambda: dist.Chi2(jnp.asarray([3.0, 5.0, 9.0])),
+        (3,),
+        gof="ks",
+    ),
+    Case(
+        "InverseGamma",
+        lambda: dist.InverseGamma(4.5, 2.0),
+        lambda: ss.invgamma(4.5, scale=2.0),
+        lambda: dist.InverseGamma(jnp.asarray([3.0, 4.5]), 2.0),
+        (2,),
+        skip_mc="4th moment too heavy for stable 50k MC variance",
+        gof="ks",
+    ),
+    Case(
+        "Beta",
+        lambda: dist.Beta(2.0, 3.5),
+        lambda: ss.beta(2.0, 3.5),
+        lambda: dist.Beta(jnp.asarray([1.0, 2.0, 4.0]), 3.5),
+        (3,),
+        gof="ks",
+    ),
+    Case(
+        "Dirichlet",
+        lambda: dist.Dirichlet(jnp.asarray([2.0, 3.0, 1.5])),
+        _dirichlet_logpdf(np.array([2.0, 3.0, 1.5])),
+        lambda: dist.Dirichlet(jnp.broadcast_to(jnp.asarray([2.0, 3.0, 1.5]), (4, 3))),
+        (4,),
+        (3,),
+    ),
+    Case(
+        "MultivariateNormal",
+        lambda: dist.MultivariateNormal(
+            jnp.asarray([0.5, -0.5, 1.0]), covariance_matrix=jnp.asarray(_MVN_COV)
+        ),
+        lambda: ss.multivariate_normal(np.array([0.5, -0.5, 1.0]), _MVN_COV),
+        lambda: dist.MultivariateNormal(
+            jnp.zeros((2, 3)), covariance_matrix=jnp.asarray(_MVN_COV)
+        ),
+        (2,),
+        (3,),
+    ),
+    Case(
+        "LowRankMultivariateNormal",
+        lambda: dist.LowRankMultivariateNormal(
+            jnp.asarray([0.0, 0.5, -0.5, 1.0]), jnp.asarray(_W), jnp.asarray(_D)
+        ),
+        lambda: ss.multivariate_normal(
+            np.array([0.0, 0.5, -0.5, 1.0]), _W @ _W.T + np.diag(_D)
+        ),
+        lambda: dist.LowRankMultivariateNormal(
+            jnp.zeros((3, 1, 4)), jnp.asarray(_W), jnp.asarray(_D)
+        ),
+        (3, 1),
+        (4,),
+    ),
+    Case(
+        "VonMises",
+        lambda: dist.VonMises(0.5, 2.0),
+        lambda: ss.vonmises(2.0, loc=0.5),
+        lambda: dist.VonMises(jnp.zeros((2,)), jnp.asarray([1.0, 4.0])),
+        (2,),
+        skip_mc="circular moments need directional statistics",
+        gof="ks",
+    ),
+    Case(
+        "Logistic",
+        lambda: dist.Logistic(0.3, 0.8),
+        lambda: ss.logistic(0.3, 0.8),
+        lambda: dist.Logistic(jnp.zeros((5,)), 0.8),
+        (5,),
+        gof="ks",
+    ),
+    Case(
+        "Weibull",
+        lambda: dist.Weibull(1.5, 2.0),
+        lambda: ss.weibull_min(2.0, scale=1.5),
+        lambda: dist.Weibull(jnp.asarray([1.0, 1.5]), jnp.asarray([[2.0], [0.8]])),
+        (2, 2),
+        gof="ks",
+    ),
+    # -- discrete ----------------------------------------------------------
+    Case(
+        "Bernoulli",
+        lambda: dist.Bernoulli(0.3),
+        lambda: ss.bernoulli(0.3),
+        lambda: dist.Bernoulli(jnp.asarray([[0.2], [0.7]])),
+        (2, 1),
+        gof="chisq",
+        gof_support=1,
+    ),
+    Case(
+        "Categorical",
+        lambda: dist.Categorical(jnp.asarray(_PROBS3)),
+        lambda: ss.rv_discrete(values=(np.arange(3), _PROBS3)),
+        lambda: dist.Categorical(jnp.broadcast_to(jnp.asarray(_PROBS3), (2, 2, 3))),
+        (2, 2),
+        gof="chisq",
+        gof_support=2,
+    ),
+    Case(
+        "OneHotCategorical",
+        lambda: dist.OneHotCategorical(jnp.asarray(_PROBS3)),
+        lambda: (lambda xs: np.asarray(xs) @ np.log(_PROBS3)),
+        lambda: dist.OneHotCategorical(jnp.broadcast_to(jnp.asarray(_PROBS3), (4, 3))),
+        (4,),
+        (3,),
+    ),
+    Case(
+        "Binomial",
+        lambda: dist.Binomial(10, probs=0.35),
+        lambda: ss.binom(10, 0.35),
+        lambda: dist.Binomial(jnp.asarray([5, 10]), probs=jnp.asarray([[0.3], [0.6]])),
+        (2, 2),
+        gof="chisq",
+        gof_support=10,
+    ),
+    Case(
+        "Multinomial",
+        lambda: dist.Multinomial(8, probs=jnp.asarray(_PROBS3)),
+        lambda: (lambda xs: ss.multinomial(8, _PROBS3).logpmf(np.asarray(xs))),
+        lambda: dist.Multinomial(8, probs=jnp.broadcast_to(jnp.asarray(_PROBS3), (5, 3))),
+        (5,),
+        (3,),
+    ),
+    Case(
+        "Poisson",
+        lambda: dist.Poisson(3.5),
+        lambda: ss.poisson(3.5),
+        lambda: dist.Poisson(jnp.asarray([1.0, 3.5, 10.0])),
+        (3,),
+        gof="chisq",
+        gof_support=25,
+    ),
+    Case(
+        "Geometric",
+        # scipy geom counts trials (support {1,2,...}); ours counts failures
+        lambda: dist.Geometric(0.4),
+        lambda: ss.geom(0.4, loc=-1),
+        lambda: dist.Geometric(jnp.asarray([[0.3], [0.8]])),
+        (2, 1),
+        gof="chisq",
+        gof_support=30,
+    ),
+    Case(
+        "NegativeBinomial",
+        # ours: p = per-trial "failure mass" exponent on value; scipy nbinom(r, 1-p)
+        lambda: dist.NegativeBinomial(6.0, probs=0.4),
+        lambda: ss.nbinom(6.0, 0.6),
+        lambda: dist.NegativeBinomial(jnp.asarray([2.0, 6.0]), probs=0.4),
+        (2,),
+        gof="chisq",
+        gof_support=40,
+    ),
+]
+
+IDS = [c.name for c in CASES]
+
+
+def _ref_logprob(case, xs):
+    ref = case.ref()
+    if hasattr(ref, "logpdf"):
+        return np.asarray(ref.logpdf(np.asarray(xs)))
+    if hasattr(ref, "logpmf"):
+        return np.asarray(ref.logpmf(np.asarray(xs)))
+    return np.asarray(ref(np.asarray(xs)))  # plain callable reference
+
+
+# ---------------------------------------------------------------------------
+# check 1: log_prob vs scipy
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("case", CASES, ids=IDS)
+def test_log_prob_matches_scipy(case):
+    if case.ref is None:
+        pytest.skip(f"{case.name}: no scipy reference")
+    d = case.mk()
+    xs = d.sample(KEY, (64,))
+    ours = np.asarray(d.log_prob(xs))
+    theirs = _ref_logprob(case, xs)
+    assert ours.shape == (64,)
+    np.testing.assert_allclose(ours, theirs, rtol=LOGPROB_RTOL, atol=LOGPROB_ATOL)
+
+
+# ---------------------------------------------------------------------------
+# check 2: shape semantics under broadcasting
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("case", CASES, ids=IDS)
+@pytest.mark.parametrize("sample_shape", [(), (7,), (2, 3)], ids=repr)
+def test_sample_shape(case, sample_shape):
+    d = case.mk()
+    xs = d.sample(KEY, sample_shape)
+    assert xs.shape == sample_shape + case.event_shape
+    assert d.batch_shape == ()
+    assert d.log_prob(xs).shape == sample_shape
+
+    db = case.batched_mk()
+    assert db.batch_shape == case.batch_shape
+    assert db.event_shape == case.event_shape
+    xb = db.sample(KEY, sample_shape)
+    assert xb.shape == sample_shape + case.batch_shape + case.event_shape
+    assert db.log_prob(xb).shape == sample_shape + case.batch_shape
+
+
+# ---------------------------------------------------------------------------
+# check 3: mean / variance vs 50k-sample Monte Carlo
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("case", CASES, ids=IDS)
+def test_moments_vs_monte_carlo(case):
+    if case.skip_mc:
+        pytest.skip(f"{case.name}: {case.skip_mc}")
+    d = case.mk()
+    xs = np.asarray(d.sample(KEY, (MC_N,))).astype(np.float64)
+    try:
+        mean = np.asarray(d.mean)
+        var = np.asarray(d.variance)
+    except NotImplementedError:
+        pytest.skip(f"{case.name}: no analytic moments")
+    np.testing.assert_allclose(xs.mean(0), mean, rtol=MC_RTOL, atol=MC_ATOL)
+    np.testing.assert_allclose(xs.var(0), var, rtol=2 * MC_RTOL, atol=2 * MC_ATOL)
+
+
+# ---------------------------------------------------------------------------
+# check 4: constraint membership
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("case", CASES, ids=IDS)
+def test_samples_satisfy_constraint(case):
+    for mk in (case.mk, case.batched_mk):
+        d = mk()
+        xs = d.sample(KEY, (13,))
+        ok = np.asarray(d.support.check(xs))
+        assert ok.all(), f"{case.name}: samples violate {d.support}"
+
+
+# ---------------------------------------------------------------------------
+# goodness of fit: KS (continuous) / chi-square (discrete)
+# ---------------------------------------------------------------------------
+
+KS_CASES = [c for c in CASES if c.gof == "ks"]
+CHISQ_CASES = [c for c in CASES if c.gof == "chisq"]
+
+
+@pytest.mark.parametrize("case", KS_CASES, ids=[c.name for c in KS_CASES])
+def test_gof_kolmogorov_smirnov(case):
+    d = case.mk()
+    xs = np.asarray(d.sample(KEY, (2000,))).astype(np.float64)
+    stat = ss.kstest(xs, case.ref().cdf)
+    assert stat.pvalue > GOF_ALPHA, f"{case.name}: KS p={stat.pvalue:.2e}"
+
+
+@pytest.mark.parametrize("case", CHISQ_CASES, ids=[c.name for c in CHISQ_CASES])
+def test_gof_chi_square(case):
+    d = case.mk()
+    ref = case.ref()
+    xs = np.asarray(d.sample(KEY, (GOF_N,)), int)
+    hi = case.gof_support
+    # bin the support at 0..hi with an overflow bin carrying the tail mass
+    counts = np.bincount(np.clip(xs, 0, hi + 1), minlength=hi + 2).astype(float)
+    probs = ref.pmf(np.arange(hi + 1))
+    probs = np.append(probs, max(1.0 - probs.sum(), 0.0))
+    keep = probs * GOF_N >= 5  # chi-square validity: expected count >= 5
+    other = ~keep
+    counts = np.append(counts[keep], counts[other].sum())
+    probs = np.append(probs[keep], probs[other].sum())
+    if probs[-1] == 0:
+        counts, probs = counts[:-1], probs[:-1]
+    stat = ss.chisquare(counts, probs * GOF_N)
+    assert stat.pvalue > GOF_ALPHA, f"{case.name}: chi2 p={stat.pvalue:.2e}"
+
+
+# ---------------------------------------------------------------------------
+# enumerate_support coverage: every discrete distribution either enumerates
+# or raises an actionable NotImplementedError
+# ---------------------------------------------------------------------------
+
+DISCRETE_CASES = {
+    "Bernoulli": 2,
+    "Categorical": 3,
+    "OneHotCategorical": 3,
+    "Binomial": 11,
+    "Multinomial": None,
+    "Poisson": None,
+    "Geometric": None,
+    "NegativeBinomial": None,
+}
+
+
+@pytest.mark.parametrize("name", sorted(DISCRETE_CASES), ids=sorted(DISCRETE_CASES))
+def test_enumerate_support_or_actionable_error(name):
+    case = next(c for c in CASES if c.name == name)
+    d = case.mk()
+    cardinality = DISCRETE_CASES[name]
+    if cardinality is None:
+        assert not d.has_enumerate_support
+        with pytest.raises(NotImplementedError) as excinfo:
+            d.enumerate_support()
+        # actionable: names the distribution's problem AND a workaround
+        assert len(str(excinfo.value)) > 60
+        assert "Categorical" in str(excinfo.value) or "marginalize" in str(excinfo.value)
+        return
+    assert d.has_enumerate_support
+    expanded = d.enumerate_support(expand=True)
+    compact = d.enumerate_support(expand=False)
+    assert expanded.shape == (cardinality,) + d.batch_shape + d.event_shape
+    assert compact.shape == (cardinality,) + (1,) * len(d.batch_shape) + d.event_shape
+    # every enumerated value is in-support and probabilities sum to one
+    assert np.asarray(d.support.check(expanded)).all()
+    total = jax.scipy.special.logsumexp(d.log_prob(compact), axis=0)
+    np.testing.assert_allclose(np.asarray(total), 0.0, atol=1e-5)
+
+    if name == "Binomial":
+        # heterogeneous batched counts cannot enumerate — homogeneous ones can
+        with pytest.raises(NotImplementedError, match="homogeneous"):
+            case.batched_mk().enumerate_support()
+        db = dist.Binomial(10, probs=jnp.asarray([[0.3], [0.6]]))
+    else:
+        db = case.batched_mk()
+    eb = db.enumerate_support(expand=True)
+    assert eb.shape == (cardinality,) + db.batch_shape + db.event_shape
