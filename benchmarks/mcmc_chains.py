@@ -9,10 +9,12 @@ free until the machine runs out of parallelism). Also asserts
 `chain_method="sharded"` is bit-identical to `"vectorized"` on the default
 mesh when it degenerates to one device.
 
-Run: PYTHONPATH=src python benchmarks/mcmc_chains.py
+Run: PYTHONPATH=src python benchmarks/mcmc_chains.py [--smoke]
+(--smoke: CI-sized run — shorter warmup/collection, same retrace assertions)
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
@@ -36,12 +38,14 @@ def make_kernel():
     return HMC(model, max_num_steps=32)
 
 
-def main(num_warmup: int = 200, log=print):
+def main(num_warmup: int = 200, smoke: bool = False, log=print):
     data = 1.5 + 0.7 * jax.random.normal(jax.random.PRNGKey(0), (N,))
+    sample_counts = (50, 100) if smoke else (100, 400)
+    chain_counts = (1, 2) if smoke else (1, 2, 4, 8)
 
     # -- 1. constant compiled-call count, independent of num_samples --------
     log("# trace count vs num_samples (must stay 1: scan-based collection)")
-    for num_samples in (100, 400):
+    for num_samples in sample_counts:
         mcmc = MCMC(make_kernel(), num_warmup, num_samples, num_chains=4)
         mcmc.run(jax.random.PRNGKey(1), data)
         log(f"  num_samples={num_samples:>4}  traces={mcmc.num_traces}")
@@ -56,11 +60,11 @@ def main(num_warmup: int = 200, log=print):
     assert mcmc.num_traces == 1, "second run retraced the driver"
 
     # -- 2. draws/sec vs chain count ----------------------------------------
-    num_samples = 500
+    num_samples = 100 if smoke else 500
     log(f"\n# draws/sec vs num_chains ({jax.device_count()} device(s), "
         f"{num_warmup} warmup + {num_samples} samples)")
     log(f"{'chains':>7} {'total_s':>9} {'draws/s':>10}")
-    for num_chains in (1, 2, 4, 8):
+    for num_chains in chain_counts:
         mcmc = MCMC(make_kernel(), num_warmup, num_samples, num_chains=num_chains)
         t0 = time.perf_counter()
         samples = mcmc.run(jax.random.PRNGKey(2), data)
@@ -72,7 +76,7 @@ def main(num_warmup: int = 200, log=print):
     # -- 3. sharded == vectorized parity ------------------------------------
     out = {}
     for method in ("vectorized", "sharded"):
-        mcmc = MCMC(make_kernel(), num_warmup, 200, num_chains=4,
+        mcmc = MCMC(make_kernel(), num_warmup, 50 if smoke else 200, num_chains=4,
                     chain_method=method)
         mcmc.run(jax.random.PRNGKey(3), data)
         out[method] = mcmc.get_samples(group_by_chain=True)
@@ -87,4 +91,7 @@ def main(num_warmup: int = 200, log=print):
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="CI-sized run")
+    args = ap.parse_args()
+    main(num_warmup=50 if args.smoke else 200, smoke=args.smoke)

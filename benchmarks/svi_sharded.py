@@ -5,14 +5,15 @@ per-step retracing: a fresh minibatch (fresh subsample indices) every step
 hits the same compiled executable, so steady-state step time is flat after
 step 1 and `update_jit._cache_size()` stays at 1.
 
-Run: PYTHONPATH=src python benchmarks/svi_sharded.py
+Run: PYTHONPATH=src python benchmarks/svi_sharded.py [--smoke]
+(--smoke: CI-sized run — fewer steps/particles, same retrace assertions)
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro import distributions as dist
 from repro import optim
@@ -66,4 +67,10 @@ def main(steps: int = 50, particles: int = 8, log=print):
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="CI-sized run")
+    args = ap.parse_args()
+    if args.smoke:
+        main(steps=12, particles=2)
+    else:
+        main()

@@ -12,7 +12,6 @@ import jax
 import jax.numpy as jnp
 
 from ..distributions import Delta, Distribution
-from ..distributions.util import sum_rightmost
 from .messenger import DimAllocator, Messenger
 
 

@@ -5,7 +5,7 @@ plus the standard derived primitives (`plate`, `deterministic`, `factor`,
 from __future__ import annotations
 
 from collections import namedtuple
-from typing import Any, Callable, Optional
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp

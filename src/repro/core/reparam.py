@@ -9,7 +9,7 @@ funnel-shaped posteriors (Neal's funnel) in both SVI and HMC:
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Union
+from typing import Dict, Optional
 
 import jax.numpy as jnp
 

@@ -14,7 +14,7 @@ steps (used by examples/train_lm.py and the Fig-3 benchmark).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Iterator, Optional, Tuple
+from typing import Dict, Iterator
 
 import jax
 import jax.numpy as jnp

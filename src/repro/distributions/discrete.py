@@ -15,7 +15,6 @@ from .util import (
     lazy_property,
     logits_to_probs,
     probs_to_logits,
-    promote_shapes,
 )
 
 

@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 
 from . import constraints
-from .util import broadcast_shapes, sum_rightmost
+from .util import broadcast_shapes
 
 
 class Distribution:

@@ -3,7 +3,6 @@ Pyro uses Monte-Carlo KL estimates — we provide both, MC as the faithful
 default and analytic as a beyond-paper variance-reduction option)."""
 from __future__ import annotations
 
-import math
 
 import jax.numpy as jnp
 from jax.scipy import special as jsp

@@ -4,7 +4,7 @@ flow used in the Fig-4 DMM experiment).
 """
 from __future__ import annotations
 
-from typing import Callable, List, Sequence
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -216,7 +216,6 @@ class LowerCholeskyTransform(Transform):
         return mat[..., idx[0], idx[1]]
 
     def log_abs_det_jacobian(self, x, y):
-        n = y.shape[-1]
         return jnp.sum(jnp.log(jnp.diagonal(y, axis1=-2, axis2=-1)), -1)
 
     def forward_shape(self, shape):
@@ -344,7 +343,6 @@ def init_made_params(key, input_dim: int, hidden_dims: Sequence[int], n_outputs:
 
 def made_apply(params, masks, x, n_outputs: int = 2):
     """Run the masked MLP; returns (out_0, ..., out_{n-1}) each of shape x."""
-    input_dim = x.shape[-1]
     h = x
     n_layers = len(masks)
     for i in range(n_layers - 1):

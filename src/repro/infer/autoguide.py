@@ -41,7 +41,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core import primitives
-from ..core.handlers import block, seed, substitute, trace
+from ..core.handlers import block, seed, trace
 from ..distributions import (
     Delta,
     Independent,

@@ -38,7 +38,7 @@ Example — diagnostics on synthetic chains::
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp

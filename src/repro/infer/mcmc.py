@@ -48,7 +48,7 @@ from __future__ import annotations
 
 import math
 from functools import partial
-from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

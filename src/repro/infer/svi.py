@@ -33,7 +33,6 @@ from ..core.messenger import Messenger
 from ..distributions import biject_to, constraints
 from ..optim.optimizers import Optimizer
 from .elbo import ELBO, Trace_ELBO
-from .util import substitute_params
 
 
 class _with_subsample(Messenger):

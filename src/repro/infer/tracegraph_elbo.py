@@ -10,7 +10,6 @@ decaying-average baseline.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict
 
 import jax
 import jax.numpy as jnp

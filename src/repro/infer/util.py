@@ -8,10 +8,8 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from ..core import handlers
 from ..core.handlers import Trace, seed, substitute, trace
 from ..distributions import biject_to, constraints
-from ..distributions.util import sum_rightmost
 
 
 def log_density(

@@ -1,3 +1,15 @@
-from .ops import categorical_logprob, flash_attention, ssd_scan
+from .ops import (
+    categorical_logprob,
+    flash_attention,
+    hmm_scan,
+    semiring_matmul,
+    ssd_scan,
+)
 
-__all__ = ["categorical_logprob", "flash_attention", "ssd_scan"]
+__all__ = [
+    "categorical_logprob",
+    "flash_attention",
+    "hmm_scan",
+    "semiring_matmul",
+    "ssd_scan",
+]

@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import functools
 import os
+import warnings
 from typing import Optional
 
 import jax
@@ -27,6 +28,7 @@ import jax.numpy as jnp
 from . import ref
 from .categorical_logprob import categorical_logprob_flat
 from .flash_attention import flash_attention_gqa
+from .semiring import SEMIRINGS, semiring_matmul_tiled
 from .ssd_scan import ssd_scan_chunked
 
 BACKENDS = ("tpu", "interpret", "reference")
@@ -47,7 +49,21 @@ def resolve_backend(backend: Optional[str] = None) -> str:
         )
     legacy = os.environ.get("REPRO_PALLAS_INTERPRET")
     if legacy is not None:
-        return "tpu" if legacy in ("0", "false", "False") else "interpret"
+        resolved = "tpu" if legacy in ("0", "false", "False") else "interpret"
+        # anything that isn't 0/false used to silently mean interpret — keep
+        # that behavior for compatibility, but say so out loud. FutureWarning
+        # (not DeprecationWarning) because the audience is users running
+        # scripts with the flag exported, and Python hides DeprecationWarning
+        # raised from library code by default.
+        warnings.warn(
+            f"REPRO_PALLAS_INTERPRET is deprecated (value {legacy!r} resolves to "
+            f"{resolved!r}; any value other than '0'/'false' means 'interpret'). "
+            "Set REPRO_KERNEL_BACKEND=tpu|interpret|reference|auto instead — see "
+            "docs/backends.md for the migration.",
+            FutureWarning,
+            stacklevel=2,
+        )
+        return resolved
     return "tpu" if jax.default_backend() == "tpu" else "reference"
 
 
@@ -57,6 +73,8 @@ _SUPPORT = {
     "flash_attention": ("tpu", "interpret", "reference"),
     "categorical_logprob": ("tpu", "interpret", "reference"),
     "ssd_scan": ("tpu", "interpret", "reference"),
+    "semiring_matmul": ("tpu", "interpret", "reference"),
+    "hmm_scan": ("tpu", "interpret", "reference"),
 }
 
 
@@ -148,3 +166,144 @@ def ssd_scan(x, dt, A, B, C, *, chunk: int = 128, backend: Optional[str] = None)
     Returns y: (b,s,h,p) float32. s must be a multiple of `chunk`
     (models/ssm.ssd_block pads)."""
     return _ssd_scan(x, dt, A, B, C, chunk=chunk, backend=resolve_backend(backend))
+
+
+# -- log-space semiring matmul (enumeration hot path) ------------------------
+
+
+def _semiring_matmul_impl(a, b, *, semiring, block, backend):
+    """Batched semiring matmul on a resolved backend (no jit wrapper: called
+    both standalone and from inside `_hmm_scan`'s combine)."""
+    if backend == "reference":
+        return ref.semiring_matmul_ref(a, b, semiring=semiring)
+    if 0 in a.shape or 0 in b.shape:
+        # degenerate slices (e.g. lax.associative_scan on a length-1 chain)
+        # never reach the kernel; the pure-jnp path handles empties exactly
+        return ref.semiring_matmul_ref(a, b, semiring=semiring)
+    return _semiring_matmul_kernel(a, b, semiring, block, backend)
+
+
+# The Pallas kernel has no AD rule, but the enumeration engine differentiates
+# straight through its contractions (TraceEnum_ELBO SVI steps, the dice-factor
+# gradient in discrete_marginals), so the kernel carries a custom VJP: fused
+# forward, pure-jnp reference backward. ref.semiring_matmul_ref is the same
+# function the kernel computes, so its VJP is the kernel's VJP.
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def _semiring_matmul_kernel(a, b, semiring, block, backend):
+    batch = jnp.broadcast_shapes(a.shape[:-2], b.shape[:-2])
+    a = jnp.broadcast_to(a, batch + a.shape[-2:])
+    b = jnp.broadcast_to(b, batch + b.shape[-2:])
+    fn = functools.partial(
+        semiring_matmul_tiled,
+        semiring=semiring,
+        block_m=block,
+        block_n=block,
+        block_k=block,
+        interpret=(backend == "interpret"),
+    )
+    if not batch:
+        return fn(a, b)
+    out = jax.vmap(fn)(
+        a.reshape((-1,) + a.shape[-2:]), b.reshape((-1,) + b.shape[-2:])
+    )
+    return out.reshape(batch + out.shape[-2:])
+
+
+def _semiring_matmul_kernel_fwd(a, b, semiring, block, backend):
+    return _semiring_matmul_kernel(a, b, semiring, block, backend), (a, b)
+
+
+def _semiring_matmul_kernel_bwd(semiring, block, backend, res, g):
+    a, b = res
+    _, vjp = jax.vjp(
+        functools.partial(ref.semiring_matmul_ref, semiring=semiring), a, b
+    )
+    return vjp(g)
+
+
+_semiring_matmul_kernel.defvjp(_semiring_matmul_kernel_fwd, _semiring_matmul_kernel_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("semiring", "block", "backend"))
+def _semiring_matmul(a, b, *, semiring, block, backend):
+    return _semiring_matmul_impl(a, b, semiring=semiring, block=block, backend=backend)
+
+
+def semiring_matmul(
+    a,
+    b,
+    *,
+    semiring: str = "logsumexp",
+    block: int = 64,
+    backend: Optional[str] = None,
+):
+    """Log-space semiring matmul: ``out[..., i, j] = ⊕_k a[..., i, k] + b[..., k, j]``
+    with ``⊕ = logsumexp`` (sum-product) or ``max`` (max-product), ``⊗ = +``.
+    a: (..., M, K); b: (..., K, N); batch dims broadcast. Returns (..., M, N) f32."""
+    if semiring not in SEMIRINGS:
+        raise ValueError(f"unknown semiring {semiring!r}; expected one of {SEMIRINGS}")
+    return _semiring_matmul(
+        a, b, semiring=semiring, block=block, backend=resolve_backend(backend)
+    )
+
+
+def _semiring_eye(k: int) -> jax.Array:
+    """The semiring identity matrix: 0 on the diagonal, -inf off it —
+    M ⊗ I == M exactly for both semirings (the -inf must be genuine: a finite
+    stand-in would put a floor under fully -inf entries in max-product)."""
+    return jnp.where(jnp.eye(k, dtype=bool), 0.0, -jnp.inf)
+
+
+@functools.partial(jax.jit, static_argnames=("semiring", "cumulative", "block", "backend"))
+def _hmm_scan(factors, *, semiring, cumulative, block, backend):
+    combine = functools.partial(
+        _semiring_matmul_impl, semiring=semiring, block=block, backend=backend
+    )
+    if cumulative:
+        return jax.lax.associative_scan(combine, factors, axis=-3)
+    # total-product reduction: the same O(log T)-depth associative combine that
+    # lax.associative_scan uses, minus the prefix completion it would also
+    # compute (~2x less work when only the total is needed). Odd rounds pad
+    # with the semiring identity, which is exact, not approximate.
+    x = factors
+    while x.shape[-3] > 1:
+        n = x.shape[-3]
+        if n % 2:
+            eye = jnp.broadcast_to(
+                _semiring_eye(x.shape[-1]), x.shape[:-3] + (1,) + x.shape[-2:]
+            )
+            x = jnp.concatenate([x, eye], axis=-3)
+        x = combine(x[..., 0::2, :, :], x[..., 1::2, :, :])
+    return x[..., 0, :, :]
+
+
+def hmm_scan(
+    factors,
+    *,
+    semiring: str = "logsumexp",
+    cumulative: bool = False,
+    block: int = 64,
+    backend: Optional[str] = None,
+):
+    """Eliminate a Markov chain of K x K log-factors in O(log T) depth.
+
+    factors: (..., T, K, K), where ``factors[..., t, i, j]`` is the log-factor
+    linking state i of step t-1 to state j of step t. Returns the ordered
+    semiring product ``F_0 ⊗ F_1 ⊗ ... ⊗ F_{T-1}`` — shape (..., K, K) — or,
+    with ``cumulative=True``, all T prefix products via `lax.associative_scan`
+    (shape (..., T, K, K); the last slice is the total). ``semiring="max"``
+    gives the Viterbi (max-product) variant used by
+    ``infer_discrete(temperature=0)``. Matmul associativity is what makes the
+    log-depth tree legal; the sequential O(T) oracle is `ref.hmm_scan_ref`.
+    """
+    if semiring not in SEMIRINGS:
+        raise ValueError(f"unknown semiring {semiring!r}; expected one of {SEMIRINGS}")
+    if factors.shape[-1] != factors.shape[-2]:
+        raise ValueError(f"chain factors must be square, got {factors.shape}")
+    return _hmm_scan(
+        factors,
+        semiring=semiring,
+        cumulative=cumulative,
+        block=block,
+        backend=resolve_backend(backend),
+    )

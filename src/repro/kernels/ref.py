@@ -36,3 +36,39 @@ def ssd_scan_ref(x, dt, A, B, C, *, chunk: int) -> jax.Array:
     from ..models.ssm import ssd_reference
 
     return ssd_reference(x, dt, A, B, C, chunk)
+
+
+def semiring_matmul_ref(a, b, *, semiring: str = "logsumexp") -> jax.Array:
+    """Log-space semiring matmul: out[..., i, j] = ⊕_k a[..., i, k] + b[..., k, j]
+    with ⊕ = logsumexp (sum-product) or max (max-product). Batch dims broadcast.
+
+    The sum-product form uses the shifted-exponential identity
+    ``logsumexp_k(a+b) = am + bm + log(exp(a-am) @ exp(b-bm))`` so the inner
+    loop is a real matmul instead of a materialized (..., M, K, N) broadcast —
+    algebraically identical, and the shift keeps it overflow-safe (this is the
+    same rewrite the Pallas kernel uses per tile). Max-plus has no matmul
+    identity and keeps the broadcast form.
+    """
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    if semiring == "max":
+        return jnp.max(a[..., :, :, None] + b[..., None, :, :], axis=-2)
+    if semiring != "logsumexp":
+        raise ValueError(f"unknown semiring {semiring!r}")
+    am = jnp.max(a, axis=-1, keepdims=True)  # (..., M, 1)
+    bm = jnp.max(b, axis=-2, keepdims=True)  # (..., 1, N)
+    am_s = jnp.where(jnp.isfinite(am), am, 0.0)  # fully -inf rows stay -inf, not nan
+    bm_s = jnp.where(jnp.isfinite(bm), bm, 0.0)
+    p = jnp.einsum("...mk,...kn->...mn", jnp.exp(a - am_s), jnp.exp(b - bm_s))
+    return jnp.log(p) + am_s + bm_s
+
+
+def hmm_scan_ref(factors, *, semiring: str = "logsumexp") -> jax.Array:
+    """Sequential left-fold oracle for `ops.hmm_scan`: the ordered semiring
+    product F_0 ⊗ F_1 ⊗ ... ⊗ F_{T-1} of a (..., T, K, K) stack of log-factors,
+    one pairwise `semiring_matmul_ref` at a time (O(T) depth — the allclose
+    target for the O(log T) associative-tree path)."""
+    out = factors[..., 0, :, :]
+    for t in range(1, factors.shape[-3]):
+        out = semiring_matmul_ref(out, factors[..., t, :, :], semiring=semiring)
+    return out

@@ -21,12 +21,11 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from .. import configs
 from ..distributed.sharding import (
     activation_sharding_scope,
-    batch_axes,
     batch_shardings,
     cache_shardings,
     param_shardings,
@@ -42,7 +41,7 @@ from ..models import (
 from ..optim import Adam
 from .hlo_cost import analyze_hlo
 from .mesh import make_production_mesh
-from .roofline import Roofline, collective_bytes, model_flops
+from .roofline import Roofline, model_flops
 
 
 def _sds(tree):

@@ -11,16 +11,13 @@ from __future__ import annotations
 import argparse
 import sys
 import time
-from functools import partial
-from typing import Any, Dict, Optional
 
 import jax
-import jax.numpy as jnp
 
 from .. import configs
 from ..checkpoint import AsyncCheckpointer, latest_step, restore
 from ..data import DataConfig, SyntheticTokens
-from ..distributed import StepWatchdog, param_shardings, batch_shardings, replicated
+from ..distributed import StepWatchdog
 from ..distributed.sharding import activation_sharding_scope
 from ..models import init_params, make_train_step
 from ..models.frontends import frontend_embed

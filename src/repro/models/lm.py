@@ -20,7 +20,6 @@ layers are unrolled as the `tail`.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

@@ -86,7 +86,6 @@ def rglru_block(
     """Full recurrent block: (conv -> RG-LRU) * gelu-gate -> out_proj.
     decode cache: {'h': (B,W) f32, 'conv': (B,width-1,W)}."""
     B, S, D = x.shape
-    w = cfg.lru_width or D
 
     xs = jnp.einsum("bsd,dw->bsw", x, p["wx_in"], preferred_element_type=jnp.float32).astype(x.dtype)
     ys = jnp.einsum("bsd,dw->bsw", x, p["wy_in"], preferred_element_type=jnp.float32)

@@ -3,13 +3,19 @@
 # command on CPU. The suite must never again fail at collection — missing
 # optional deps (hypothesis, scipy) skip their modules instead of erroring.
 #
-# Usage: tests/ci.sh [all|engine|conformance|docs] [extra pytest args...]
+# Usage: tests/ci.sh [all|lint|engine|conformance|docs|bench] [extra pytest args...]
+#   lint        - ruff check over src/tests/benchmarks + ruff format --check on
+#                 the ratchet list below (skips with a warning if ruff is not
+#                 installed; CI installs it from requirements.txt)
 #   engine      - core/inference/kernel suites (-p no:randomly for determinism,
 #                 --durations=10 to keep slow tests visible)
 #   conformance - the distribution conformance + goodness-of-fit suite, run as
 #                 its own step so distribution regressions are attributed
 #                 distinctly from engine failures
 #   docs        - doctested infer/ modules + executable docs/ pages
+#   bench       - smoke-mode benchmarks; writes BENCH_enum.json (uploaded as a
+#                 workflow artifact) and FAILS on any retrace-counter
+#                 regression (the counters must stay == 1)
 # Extra args after the step name are forwarded to pytest, e.g.
 #   tests/ci.sh engine -k enum -x
 set -euo pipefail
@@ -24,6 +30,20 @@ export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 
 STEP="${1:-all}"
 if [[ $# -gt 0 ]]; then shift; fi
+
+run_lint() {
+    if ! command -v ruff >/dev/null 2>&1; then
+        echo "WARNING: ruff not installed; skipping lint (pip install -r requirements.txt)" >&2
+        return 0
+    fi
+    ruff check src tests benchmarks
+    # format is ratcheted: files (re)written since the lint stage landed must
+    # stay formatter-clean; pre-existing modules join as they get touched
+    ruff format --check \
+        src/repro/kernels/semiring.py \
+        benchmarks/enum_ve.py \
+        tests/test_enum_dispatch.py
+}
 
 run_engine() {
     python -m pytest -p no:randomly -q --durations=10 \
@@ -41,13 +61,24 @@ run_docs() {
     python -m pytest -q --doctest-modules \
         src/repro/infer/mcmc.py src/repro/infer/diagnostics.py \
         src/repro/infer/predictive.py src/repro/infer/autoguide.py
-    python -m doctest docs/inference.md docs/backends.md docs/enumeration.md
+    python -m doctest docs/inference.md docs/backends.md docs/enumeration.md \
+        docs/kernels.md
+}
+
+run_bench() {
+    # smoke-mode benchmarks double as regression gates: each asserts its
+    # retrace counter stays at 1 and exits nonzero otherwise
+    python benchmarks/svi_sharded.py --smoke
+    python benchmarks/mcmc_chains.py --smoke
+    python benchmarks/enum_ve.py --smoke --json BENCH_enum.json
 }
 
 case "$STEP" in
+    lint)        run_lint ;;
     engine)      run_engine "$@" ;;
     conformance) run_conformance "$@" ;;
     docs)        run_docs ;;
-    all)         run_engine "$@"; run_conformance "$@"; run_docs ;;
-    *) echo "unknown step '$STEP' (use all|engine|conformance|docs)" >&2; exit 2 ;;
+    bench)       run_bench ;;
+    all)         run_lint; run_engine "$@"; run_conformance "$@"; run_docs; run_bench ;;
+    *) echo "unknown step '$STEP' (use all|lint|engine|conformance|docs|bench)" >&2; exit 2 ;;
 esac

@@ -6,7 +6,16 @@ import pytest
 from repro import distributions as dist
 from repro.core import primitives as P
 from repro.core.handlers import (
-    Trace, block, condition, do, lift, mask, replay, scale, seed, substitute, trace,
+    block,
+    condition,
+    do,
+    lift,
+    mask,
+    replay,
+    scale,
+    seed,
+    substitute,
+    trace,
 )
 
 

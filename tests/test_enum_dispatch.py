@@ -1,0 +1,317 @@
+"""VE semiring-kernel dispatch: the chain/matmul rewrite must be a pure
+lowering change — same semantics as the legacy pairwise greedy path.
+
+`dispatch="pairwise"` (or REPRO_ENUM_DISPATCH=pairwise) forces the pre-rewrite
+path, so every test here compares before/after on the same fixtures:
+
+* GMM (no chain structure): the dispatch must leave the contraction entirely
+  untouched — results are bit-identical, not merely close.
+* HMM (chain structure): the chain is re-associated into an O(log T) semiring
+  tree, so float results agree to tight tolerance while *discrete* outputs
+  (Viterbi MAP assignments) stay bit-identical.
+* Pending-scale and masked-site (-log K) semantics ride through the kernels
+  unchanged.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import distributions as dist
+from repro.core import handlers
+from repro.core import primitives as P
+from repro.infer import TraceEnum_ELBO, config_enumerate, discrete_marginals, infer_discrete
+from repro.infer.traceenum_elbo import (
+    _dispatch_mode,
+    _from_matrix,
+    _to_matrix,
+    contract_log_factors,
+)
+
+DATA = jnp.asarray([-1.2, -0.8, 1.9, 2.2, 2.0])
+WEIGHTS = jnp.asarray([0.4, 0.6])
+LOCS = jnp.asarray([-1.0, 2.0])
+
+
+def gmm(data):
+    with P.plate("N", data.shape[0]):
+        z = P.sample("z", dist.Categorical(WEIGHTS), infer={"enumerate": "parallel"})
+        P.sample("obs", dist.Normal(LOCS[z], 0.5), obs=data)
+
+
+def make_hmm(T, K, seed=0):
+    rng = np.random.default_rng(seed)
+    trans = jnp.asarray(rng.dirichlet(np.ones(K), size=K), jnp.float32)
+    init_p = jnp.asarray(rng.dirichlet(np.ones(K)), jnp.float32)
+    locs = jnp.linspace(-2.0, 2.0, K)
+    obs = jnp.asarray(rng.normal(size=T), jnp.float32)
+
+    @config_enumerate
+    def hmm(obs_seq):
+        z = P.sample("z_0", dist.Categorical(init_p))
+        P.sample("x_0", dist.Normal(locs[z], 1.0), obs=obs_seq[0])
+        for t in range(1, T):
+            z = P.sample(f"z_{t}", dist.Categorical(trans[z]))
+            P.sample(f"x_{t}", dist.Normal(locs[z], 1.0), obs=obs_seq[t])
+
+    return hmm, obs
+
+
+def loss_with(model, data, mode):
+    """Loss under a forced dispatch mode, with the chain-length threshold
+    dropped to 2 so the small fixtures here actually exercise the kernels."""
+    elbo = TraceEnum_ELBO()
+    import os
+
+    old = os.environ.get("REPRO_ENUM_DISPATCH")
+    old_min = os.environ.get("REPRO_ENUM_CHAIN_MIN")
+    os.environ["REPRO_ENUM_DISPATCH"] = mode
+    os.environ["REPRO_ENUM_CHAIN_MIN"] = "2"
+    try:
+        return float(elbo.loss(jax.random.PRNGKey(0), {}, model, lambda *a: None, data))
+    finally:
+        for var, val in [("REPRO_ENUM_DISPATCH", old), ("REPRO_ENUM_CHAIN_MIN", old_min)]:
+            if val is None:
+                os.environ.pop(var, None)
+            else:
+                os.environ[var] = val
+
+
+# ---------------------------------------------------------------------------
+# before/after equivalence on the existing fixtures
+# ---------------------------------------------------------------------------
+
+
+def test_gmm_loss_bit_identical_across_dispatch():
+    """No chain structure -> the dispatch must not rewrite anything: the two
+    paths execute the same ops and the losses are bit-identical."""
+    assert loss_with(gmm, DATA, "pairwise") == loss_with(gmm, DATA, "auto")
+
+
+@pytest.mark.parametrize("T,K", [(4, 3), (9, 2), (12, 5)])
+def test_hmm_loss_matches_across_dispatch(T, K):
+    """Chain contraction re-associates the logsumexp tree, so demand tight
+    float agreement (the answers are ~1e2 in magnitude)."""
+    hmm, obs = make_hmm(T, K)
+    np.testing.assert_allclose(
+        loss_with(hmm, obs, "pairwise"), loss_with(hmm, obs, "auto"), rtol=2e-6
+    )
+
+
+@pytest.mark.parametrize("T,K", [(4, 3), (9, 4)])
+def test_viterbi_decode_bit_identical_across_dispatch(T, K, monkeypatch):
+    """MAP decoding produces integers: re-association must not change them."""
+    hmm, obs = make_hmm(T, K, seed=1)
+    monkeypatch.setenv("REPRO_ENUM_CHAIN_MIN", "2")
+    paths = {}
+    for mode in ("pairwise", "auto"):
+        monkeypatch.setenv("REPRO_ENUM_DISPATCH", mode)
+        dec = infer_discrete(hmm, temperature=0, rng_key=jax.random.PRNGKey(2))
+        tr = handlers.trace(handlers.seed(dec, jax.random.PRNGKey(3))).get_trace(obs)
+        paths[mode] = [int(tr[f"z_{t}"]["value"]) for t in range(T)]
+    assert paths["pairwise"] == paths["auto"]
+
+
+def test_marginals_match_across_dispatch(monkeypatch):
+    """Also covers differentiating *through* the dispatch: discrete_marginals
+    takes jax.grad of logZ, so the chain path must be AD-transparent."""
+    hmm, obs = make_hmm(6, 3, seed=2)
+    monkeypatch.setenv("REPRO_ENUM_CHAIN_MIN", "2")
+    out = {}
+    for mode in ("pairwise", "auto"):
+        monkeypatch.setenv("REPRO_ENUM_DISPATCH", mode)
+        out[mode] = discrete_marginals(hmm, jax.random.PRNGKey(0), obs)
+    for name in out["pairwise"]:
+        np.testing.assert_allclose(
+            np.asarray(out["pairwise"][name]),
+            np.asarray(out["auto"][name]),
+            atol=1e-5,
+        )
+
+
+# ---------------------------------------------------------------------------
+# semantics that must ride through the kernels unchanged
+# ---------------------------------------------------------------------------
+
+
+def test_chain_under_subsample_scale_across_dispatch():
+    """Pending scales resolve after the chain contraction exactly as the
+    greedy path resolves them: scale OUTSIDE the marginalizing logsumexp."""
+    T, K = 5, 3
+    rng = np.random.default_rng(3)
+    trans = jnp.asarray(rng.dirichlet(np.ones(K), size=K), jnp.float32)
+    locs = jnp.linspace(-1.0, 1.0, K)
+    obs = jnp.asarray(rng.normal(size=T), jnp.float32)
+
+    def chain_scaled(obs_seq):
+        with handlers.scale(scale=2.5):
+            z = P.sample(
+                "z_0",
+                dist.Categorical(jnp.ones(K) / K),
+                infer={"enumerate": "parallel"},
+            )
+            P.sample("x_0", dist.Normal(locs[z], 1.0), obs=obs_seq[0])
+            for t in range(1, T):
+                z = P.sample(
+                    f"z_{t}", dist.Categorical(trans[z]), infer={"enumerate": "parallel"}
+                )
+                P.sample(f"x_{t}", dist.Normal(locs[z], 1.0), obs=obs_seq[t])
+
+    np.testing.assert_allclose(
+        loss_with(chain_scaled, obs, "pairwise"),
+        loss_with(chain_scaled, obs, "auto"),
+        rtol=2e-6,
+    )
+
+
+def test_masked_chain_site_neutral_across_dispatch():
+    """A masked-out enumerated chain site must contribute exactly 0 (-log K
+    fill) through the kernel path too."""
+    K = 3
+    trans = jnp.asarray(np.random.default_rng(4).dirichlet(np.ones(K), size=K), jnp.float32)
+
+    def masked_chain(_):
+        with handlers.mask(mask=False):
+            z = P.sample(
+                "z_0", dist.Categorical(jnp.ones(K) / K), infer={"enumerate": "parallel"}
+            )
+            for t in range(1, 4):
+                z = P.sample(
+                    f"z_{t}", dist.Categorical(trans[z]), infer={"enumerate": "parallel"}
+                )
+
+    for mode in ("pairwise", "auto"):
+        assert abs(loss_with(masked_chain, DATA, mode)) < 1e-5, mode
+
+
+def test_mixed_scales_in_chain_still_raise():
+    """Heterogeneous scales meeting inside one enumerated contraction (a
+    plate-local elimination, where scales are still pending) must keep
+    raising the actionable error: the dispatch skips such chains and the
+    greedy path raises exactly as before. At root level the final stage
+    resolves pending scales before eliminating, so no error there — also
+    unchanged."""
+    K = 2
+
+    def mixed_in_plate(_):
+        with P.plate("N", 3):
+            z0 = P.sample(
+                "z_0", dist.Categorical(jnp.ones(K) / K), infer={"enumerate": "parallel"}
+            )
+            with handlers.scale(scale=3.0):
+                z1 = P.sample(
+                    "z_1",
+                    dist.Categorical(jnp.asarray([[0.7, 0.3], [0.2, 0.8]])[z0]),
+                    infer={"enumerate": "parallel"},
+                )
+            with handlers.scale(scale=7.0):
+                P.sample(
+                    "z_2",
+                    dist.Categorical(jnp.asarray([[0.6, 0.4], [0.1, 0.9]])[z1]),
+                    infer={"enumerate": "parallel"},
+                )
+
+    for mode in ("pairwise", "auto"):
+        with pytest.raises(NotImplementedError, match="scale"):
+            loss_with(mixed_in_plate, DATA, mode)
+
+
+# ---------------------------------------------------------------------------
+# plumbing units
+# ---------------------------------------------------------------------------
+
+
+def test_to_from_matrix_roundtrip():
+    """_to_matrix/_from_matrix are inverses for chain factors with plates."""
+    K1, K2, Pn = 3, 4, 5
+    # dims -4 (row) and -3 (col), one plate axis of size Pn at -1
+    t = jax.random.normal(jax.random.PRNGKey(0), (K1, K2, 1, Pn))
+    m = _to_matrix(t, -4, -3)
+    assert m.shape == (Pn, K1, K2)
+    back = _from_matrix(m, -4, -3)
+    assert back.shape == (K1, K2, 1, Pn)
+    assert bool(jnp.array_equal(back, t))
+    # reversed orientation transposes
+    m2 = _to_matrix(t, -3, -4)
+    assert m2.shape == (Pn, K2, K1)
+    assert bool(jnp.array_equal(jnp.swapaxes(m2, -1, -2), m))
+    back2 = _from_matrix(m2, -3, -4)
+    assert bool(jnp.array_equal(back2, t))
+
+
+def test_short_chains_stay_on_greedy_by_default(monkeypatch):
+    """Below REPRO_ENUM_CHAIN_MIN (default 16 edges) the greedy backward pass
+    is both cheaper per step and near-instant to compile, so the dispatch
+    must leave short chains alone: auto == pairwise bit-for-bit there."""
+    monkeypatch.delenv("REPRO_ENUM_CHAIN_MIN", raising=False)
+    hmm, obs = make_hmm(6, 3)
+    elbo = TraceEnum_ELBO()
+    import os
+
+    os.environ["REPRO_ENUM_DISPATCH"] = "auto"
+    try:
+        auto = float(elbo.loss(jax.random.PRNGKey(0), {}, hmm, lambda o: None, obs))
+        os.environ["REPRO_ENUM_DISPATCH"] = "pairwise"
+        pair = float(
+            TraceEnum_ELBO().loss(jax.random.PRNGKey(0), {}, hmm, lambda o: None, obs)
+        )
+    finally:
+        os.environ.pop("REPRO_ENUM_DISPATCH", None)
+    assert auto == pair  # identical ops, not merely close
+
+
+def test_svi_gradients_through_kernel_backend(monkeypatch):
+    """TraceEnum_ELBO training differentiates through the dispatched chain;
+    with the kernel (interpret) backend that exercises the custom VJP on the
+    Pallas op — gradients must match the reference backend."""
+    monkeypatch.setenv("REPRO_ENUM_CHAIN_MIN", "2")
+    T, K = 5, 3
+    rng = np.random.default_rng(7)
+    trans = jnp.asarray(rng.dirichlet(np.ones(K), size=K), jnp.float32)
+    obs = jnp.asarray(rng.normal(size=T), jnp.float32)
+
+    def hmm_param(locs, obs_seq):
+        @config_enumerate
+        def model(obs_seq):
+            z = P.sample("z_0", dist.Categorical(jnp.ones(K) / K))
+            P.sample("x_0", dist.Normal(locs[z], 1.0), obs=obs_seq[0])
+            for t in range(1, T):
+                z = P.sample(f"z_{t}", dist.Categorical(trans[z]))
+                P.sample(f"x_{t}", dist.Normal(locs[z], 1.0), obs=obs_seq[t])
+
+        return TraceEnum_ELBO().loss(jax.random.PRNGKey(0), {}, model, lambda o: None, obs_seq)
+
+    locs0 = jnp.linspace(-1.0, 1.0, K)
+    grads = {}
+    for backend in ("reference", "interpret"):
+        monkeypatch.setenv("REPRO_KERNEL_BACKEND", backend)
+        grads[backend] = jax.grad(hmm_param)(locs0, obs)
+    assert bool(jnp.all(jnp.isfinite(grads["interpret"])))
+    np.testing.assert_allclose(
+        np.asarray(grads["reference"]), np.asarray(grads["interpret"]), atol=1e-4
+    )
+
+
+def test_dispatch_mode_validation(monkeypatch):
+    assert _dispatch_mode() == "auto"
+    assert _dispatch_mode("pairwise") == "pairwise"
+    monkeypatch.setenv("REPRO_ENUM_DISPATCH", "pairwise")
+    assert _dispatch_mode() == "pairwise"
+    monkeypatch.setenv("REPRO_ENUM_DISPATCH", "fused")
+    with pytest.raises(ValueError, match="dispatch"):
+        _dispatch_mode()
+
+
+def test_contract_dispatch_kwarg_overrides_env(monkeypatch):
+    """The explicit dispatch= argument wins over REPRO_ENUM_DISPATCH."""
+    monkeypatch.setenv("REPRO_ENUM_DISPATCH", "pairwise")
+    monkeypatch.setenv("REPRO_ENUM_CHAIN_MIN", "2")
+    K = 3
+    pool = frozenset({-1, -2, -3})
+    f01 = jax.random.normal(jax.random.PRNGKey(0), (K, K, 1))  # dims -3, -2
+    f12 = jax.random.normal(jax.random.PRNGKey(1), (K, K))  # dims -2, -1
+    f23 = jax.random.normal(jax.random.PRNGKey(2), (K,))  # dim -1
+    factors = [(frozenset(), f01, None), (frozenset(), f12, None), (frozenset(), f23, None)]
+    a = contract_log_factors(factors, {}, pool, dispatch="auto")
+    p = contract_log_factors(factors, {}, pool)  # env says pairwise
+    np.testing.assert_allclose(float(jnp.squeeze(a)), float(jnp.squeeze(p)), rtol=1e-6)

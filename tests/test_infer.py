@@ -2,7 +2,6 @@
 ELBO estimator agreement, autoguides, MCMC, importance sampling."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro import distributions as dist
@@ -90,7 +89,6 @@ def test_beta_bernoulli_conjugate():
     svi = SVI(model, guide, optim.Adam(0.02), Trace_ELBO(num_particles=8))
     state, _ = svi.run(jax.random.PRNGKey(3), 1500, data)
     # posterior Beta(2+6, 2+2): mean 8/12
-    samples = []
     p = svi.get_params(state)
     t = dist.biject_to(dist.constraints.unit_interval)
     post_mean_est = float(t(p["auto_p_loc"]))

@@ -2,8 +2,6 @@
 handler (decentering)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
 
 from repro import distributions as dist
 from repro import optim

@@ -10,7 +10,6 @@ from repro.models import (
     init_cache,
     init_params,
     make_decode_step,
-    make_prefill_step,
 )
 
 

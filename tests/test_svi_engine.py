@@ -243,9 +243,30 @@ def test_backend_env_override(monkeypatch):
     assert ops.resolve_backend() == "reference"
     monkeypatch.delenv("REPRO_KERNEL_BACKEND")
     monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
-    assert ops.resolve_backend() == "interpret"
+    with pytest.warns(FutureWarning, match="REPRO_KERNEL_BACKEND"):
+        assert ops.resolve_backend() == "interpret"
     monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "0")
-    assert ops.resolve_backend() == "tpu"
+    with pytest.warns(FutureWarning, match="deprecated"):
+        assert ops.resolve_backend() == "tpu"
+
+
+def test_legacy_flag_warns_on_surprising_values(monkeypatch):
+    """Any REPRO_PALLAS_INTERPRET value other than 0/false means interpret —
+    historically silently. The resolution is unchanged (compatibility) but now
+    warns, naming the value, what it resolved to, and the replacement env var."""
+    monkeypatch.delenv("REPRO_KERNEL_BACKEND", raising=False)
+    for value, expect in [("interpret", "interpret"), ("2", "interpret"),
+                          ("tpu", "interpret"), ("false", "tpu")]:
+        monkeypatch.setenv("REPRO_PALLAS_INTERPRET", value)
+        with pytest.warns(FutureWarning, match="REPRO_PALLAS_INTERPRET"):
+            assert ops.resolve_backend() == expect, value
+    # the modern env var takes precedence and never warns
+    monkeypatch.setenv("REPRO_KERNEL_BACKEND", "reference")
+    import warnings as _warnings
+
+    with _warnings.catch_warnings():
+        _warnings.simplefilter("error")
+        assert ops.resolve_backend() == "reference"
 
 
 def test_backend_rejects_unknown():
@@ -277,6 +298,12 @@ def test_reference_flash_attention_matches_interpret():
 
 def test_backend_support_matrix_complete():
     m = ops.backend_support_matrix()
-    assert set(m) == {"flash_attention", "categorical_logprob", "ssd_scan"}
+    assert set(m) == {
+        "flash_attention",
+        "categorical_logprob",
+        "ssd_scan",
+        "semiring_matmul",
+        "hmm_scan",
+    }
     for row in m.values():
         assert set(row) == set(ops.BACKENDS)
