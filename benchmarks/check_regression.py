@@ -1,0 +1,123 @@
+"""Bench-regression gate: diff freshly written BENCH_*.json steady-state
+numbers against the committed baselines (HEAD) and fail on regression.
+
+Usage: python benchmarks/check_regression.py BENCH_enum.json BENCH_serve.json
+
+For each file, the committed baseline is read from ``git show HEAD:<file>``
+(a file with no committed baseline is skipped with a note — its first run
+commits the baseline). The two JSON trees are walked in parallel; numeric
+leaves whose key names a steady-state metric are compared:
+
+* lower-is-better  (``steady_ms``, ``step_ms``, ``p50_ms``, ``p99_ms``,
+  ``bucketed_ms_per_req``): fail when
+  ``fresh > base * (1 + tol) + abs_slack``
+* higher-is-better (``requests_per_sec``, ``rows_per_sec``,
+  ``speedup_steady``): fail when ``fresh < base / (1 + tol)``
+
+Cold/compile times and the naive-baseline numbers are deliberately NOT
+gated (they measure the machine and the rejected path, not the engine).
+List entries are matched positionally, but only when their identifying
+fields (``T``/``K``/``dispatch``) agree — a reordered or resized benchmark
+matrix skips the mismatched entries instead of comparing apples to pears.
+
+Knobs (env):
+  REPRO_BENCH_TOLERANCE  relative tolerance, default 0.25 (= fail >25%
+                         regression). Hosted CI runners with noisy/slower
+                         hardware than the baseline machine should raise it.
+  REPRO_BENCH_ABS_MS     absolute slack added to lower-is-better *_ms
+                         gates, default 0.5 — keeps sub-millisecond
+                         metrics from failing on scheduler noise.
+"""
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+LOWER_BETTER = {"steady_ms", "step_ms", "p50_ms", "p99_ms", "bucketed_ms_per_req"}
+HIGHER_BETTER = {"requests_per_sec", "rows_per_sec", "speedup_steady"}
+IDENTITY_KEYS = ("T", "K", "dispatch", "bench")
+
+
+def committed_baseline(name: str):
+    try:
+        out = subprocess.run(
+            ["git", "-C", str(REPO), "show", f"HEAD:{name}"],
+            capture_output=True, text=True, check=True,
+        ).stdout
+    except (subprocess.CalledProcessError, FileNotFoundError):
+        return None
+    return json.loads(out)
+
+
+def walk(base, fresh, path, rows):
+    if isinstance(base, dict) and isinstance(fresh, dict):
+        for k in base:
+            if k in fresh:
+                walk(base[k], fresh[k], f"{path}.{k}" if path else k, rows)
+    elif isinstance(base, list) and isinstance(fresh, list):
+        for i, (b, f) in enumerate(zip(base, fresh)):
+            if isinstance(b, dict) and isinstance(f, dict):
+                if any(b.get(k) != f.get(k) for k in IDENTITY_KEYS):
+                    continue  # matrix entry moved/resized: not comparable
+            walk(b, f, f"{path}[{i}]", rows)
+    elif isinstance(base, (int, float)) and isinstance(fresh, (int, float)):
+        key = path.rsplit(".", 1)[-1].split("[")[0]
+        if key in LOWER_BETTER or key in HIGHER_BETTER:
+            rows.append((path, key, float(base), float(fresh)))
+
+
+def gate(name: str, tol: float, abs_ms: float) -> int:
+    fresh_path = REPO / name
+    if not fresh_path.exists():
+        print(f"FAIL {name}: fresh file missing (did the bench stage run?)")
+        return 1
+    base = committed_baseline(name)
+    if base is None:
+        print(f"skip {name}: no committed baseline in HEAD (first run commits it)")
+        return 0
+    fresh = json.loads(fresh_path.read_text())
+    rows = []
+    walk(base, fresh, "", rows)
+    failures = 0
+    print(f"\n== {name} (tolerance {tol:.0%}, abs slack {abs_ms}ms)")
+    print(f"{'metric':<44} {'base':>10} {'fresh':>10} {'delta':>8}")
+    for path, key, b, f in rows:
+        if key in LOWER_BETTER:
+            limit = b * (1 + tol) + abs_ms
+            bad = f > limit
+            delta = (f - b) / b if b else 0.0
+        else:
+            limit = b / (1 + tol)
+            bad = f < limit
+            delta = (f - b) / b if b else 0.0
+        verdict = "FAIL" if bad else "ok"
+        print(f"{path:<44} {b:>10.3f} {f:>10.3f} {delta:>+7.1%} {verdict}")
+        failures += bad
+    if not rows:
+        print("  (no comparable steady-state metrics found)")
+    return failures
+
+
+def main(argv=None) -> int:
+    names = (argv if argv is not None else sys.argv[1:]) or [
+        "BENCH_enum.json", "BENCH_serve.json"
+    ]
+    tol = float(os.environ.get("REPRO_BENCH_TOLERANCE", "0.25"))
+    abs_ms = float(os.environ.get("REPRO_BENCH_ABS_MS", "0.5"))
+    failures = sum(gate(n, tol, abs_ms) for n in names)
+    if failures:
+        print(f"\n{failures} steady-state metric(s) regressed beyond "
+              f"{tol:.0%} (+{abs_ms}ms slack). If the regression is "
+              f"intended, commit the fresh BENCH_*.json as the new baseline; "
+              f"for noisy runners set REPRO_BENCH_TOLERANCE.")
+        return 1
+    print("\nbench-regression gate: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -6,11 +6,16 @@ DMM (examples/dmm.py) on synthetic chorales with 0/1/2 flows and report
 held-out ELBO per frame (higher = better, as in Fig 4)."""
 from __future__ import annotations
 
-import sys
+import importlib.util
+from pathlib import Path
 
-sys.path.insert(0, "examples")
-
-from dmm import run as dmm_run  # noqa: E402
+# load the example by file path (cwd-independent, no sys.path mutation)
+_spec = importlib.util.spec_from_file_location(
+    "dmm", Path(__file__).resolve().parent.parent / "examples" / "dmm.py"
+)
+_dmm = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(_dmm)
+dmm_run = _dmm.run
 
 
 def main(steps: int = 250, log=print):

@@ -1,0 +1,252 @@
+"""Posterior-serving benchmark: bucketed compiled endpoint vs naive
+per-request `Predictive` (acceptance criterion for the serving PR).
+
+Three stages:
+
+1. Steady state — a stream of variable-size requests through a
+   `ServableModel` endpoint (pad-to-bucket, one jit cache) vs the naive
+   path (`Predictive(jit_compile=False)`: eager re-vmap + re-trace on
+   every request, which is exactly what `Predictive.__call__` did before
+   the serving PR). Asserts the bucketed path is >= 5x faster per request
+   at steady state and that the engine's retrace counter equals the number
+   of shape buckets touched (compiles are bounded by buckets, not by
+   distinct request sizes).
+
+2. Micro-batcher throughput — concurrent clients submit through
+   `serve.MicroBatcher`; reports requests/sec, p50/p99 latency, mean
+   coalesced batch size vs `max_batch`.
+
+3. Sharding parity — serving through a 1-device mesh
+   (`distributed.sharding.default_mesh`) must be bit-identical to
+   unsharded serving.
+
+Writes BENCH_serve.json and exits nonzero on any contract violation.
+
+Run: PYTHONPATH=src python benchmarks/serve_bench.py [--smoke] [--json PATH]
+"""
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+REPO = Path(__file__).resolve().parent.parent
+
+DIM = 4
+SPEEDUP_FLOOR = 5.0
+
+
+def make_artifact(train_steps: int):
+    from repro import distributions as dist, optim
+    from repro.core import primitives as P
+    from repro.infer import SVI, AutoNormal, Trace_ELBO
+
+    def model(x, y=None):
+        w = P.sample("w", dist.Normal(jnp.zeros(DIM), 1.0).to_event(1))
+        b = P.sample("b", dist.Normal(0.0, 1.0))
+        with P.plate("B", x.shape[0]):
+            mu = P.deterministic("mu", x @ w + b)
+            P.sample("y", dist.Normal(mu, 0.1), obs=y)
+
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (128, DIM))
+    y = x @ jnp.arange(1.0, DIM + 1.0) + 0.5
+    guide = AutoNormal(model)
+    svi = SVI(model, guide, optim.Adam(0.05), Trace_ELBO())
+    state, _ = svi.run(jax.random.PRNGKey(1), train_steps, x, y=y)
+    params = svi.optim.get_params(state.optim_state)
+    return model, guide, params
+
+
+def request_sizes(n_requests: int, max_request: int, seed: int = 7):
+    rng = np.random.default_rng(seed)
+    return [int(s) for s in rng.integers(1, max_request + 1, size=n_requests)]
+
+
+def bench_steady_state(model, guide, params, *, num_samples, max_batch,
+                       n_requests, log=print):
+    """Per-request wall time: naive eager Predictive vs bucketed engine."""
+    from repro.infer import Predictive
+    from repro.serve import ServableModel
+
+    sizes = request_sizes(n_requests, max_batch)
+    reqs = [
+        jax.random.normal(jax.random.fold_in(jax.random.PRNGKey(2), i), (n, DIM))
+        for i, n in enumerate(sizes)
+    ]
+
+    # -- naive: the pre-PR read path (re-vmap + re-trace every call) --------
+    naive = Predictive(model, guide=guide, params=params,
+                       num_samples=num_samples, jit_compile=False)
+    naive(jax.random.PRNGKey(3), reqs[0])  # absorb first-touch imports
+    t0 = time.perf_counter()
+    for i, r in enumerate(reqs):
+        jax.block_until_ready(naive(jax.random.fold_in(jax.random.PRNGKey(3), i), r))
+    naive_ms = (time.perf_counter() - t0) / len(reqs) * 1e3
+
+    # -- bucketed: the serving engine ---------------------------------------
+    servable = ServableModel.from_svi(
+        "bench", model, guide, params, num_samples=num_samples, max_batch=max_batch
+    )
+    t0 = time.perf_counter()
+    for b in servable.engine.buckets:  # cold: compile every bucket once
+        jax.block_until_ready(
+            servable.predict(jax.random.PRNGKey(4), jnp.ones((b, DIM)))
+        )
+    cold_s = time.perf_counter() - t0
+    for r in reqs:  # steady state: request shapes recur under real traffic
+        jax.block_until_ready(servable.predict(jax.random.PRNGKey(4), r))
+
+    lat = []
+    for i, r in enumerate(reqs):
+        t0 = time.perf_counter()
+        jax.block_until_ready(
+            servable.predict(jax.random.fold_in(jax.random.PRNGKey(5), i), r)
+        )
+        lat.append((time.perf_counter() - t0) * 1e3)
+    lat_sorted = sorted(lat)
+    bucketed_ms = sum(lat) / len(lat)
+    out = {
+        "requests": len(reqs),
+        "num_samples": num_samples,
+        "max_batch": max_batch,
+        "naive_ms_per_req": round(naive_ms, 3),
+        "bucketed_ms_per_req": round(bucketed_ms, 3),
+        "p50_ms": round(lat_sorted[len(lat) // 2], 3),
+        "p99_ms": round(lat_sorted[min(len(lat) - 1, int(0.99 * len(lat)))], 3),
+        "cold_compile_s": round(cold_s, 3),
+        "speedup_steady": round(naive_ms / bucketed_ms, 2),
+        "num_traces": servable.num_traces,
+        "buckets": sorted(servable.buckets_touched),
+    }
+    log(f"  naive {naive_ms:8.2f} ms/req   bucketed {bucketed_ms:8.3f} ms/req "
+        f"  speedup {out['speedup_steady']:.1f}x")
+    log(f"  compiles {out['num_traces']} over buckets {out['buckets']}")
+    assert servable.num_traces == len(servable.buckets_touched), (
+        f"retrace regression: {servable.num_traces} compiles for "
+        f"{len(servable.buckets_touched)} buckets"
+    )
+    assert out["speedup_steady"] >= SPEEDUP_FLOOR, (
+        f"bucketed serve path only {out['speedup_steady']}x faster than naive "
+        f"Predictive (floor: {SPEEDUP_FLOOR}x)"
+    )
+    return out
+
+
+def bench_batcher(model, guide, params, *, num_samples, max_batch,
+                  n_requests, n_clients, log=print):
+    """Concurrent clients through the micro-batcher."""
+    import threading
+
+    from repro.serve import MicroBatcher, ServableModel
+
+    servable = ServableModel.from_svi(
+        "bench-batcher", model, guide, params,
+        num_samples=num_samples, max_batch=max_batch,
+    )
+    for b in servable.engine.buckets:  # steady-state measurement: warm all
+        servable.predict(jax.random.PRNGKey(0), jnp.ones((b, DIM)))
+
+    sizes = request_sizes(n_requests, max(1, max_batch // 4), seed=11)
+    with MicroBatcher(servable.engine, max_wait_ms=2.0) as mb:
+        mb.stats = type(mb.stats)(window=mb.stats.window)  # reset after warmup
+        per_client = (len(sizes) + n_clients - 1) // n_clients
+
+        def client(cid):
+            for i, n in enumerate(sizes[cid * per_client : (cid + 1) * per_client]):
+                x = jax.random.normal(
+                    jax.random.fold_in(jax.random.PRNGKey(6), cid * 10_000 + i),
+                    (n, DIM),
+                )
+                mb.predict(x, timeout=120)
+
+        t0 = time.perf_counter()
+        threads = [threading.Thread(target=client, args=(c,)) for c in range(n_clients)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        wall_s = time.perf_counter() - t0
+        summary = mb.stats.summary()
+    summary["wall_s"] = round(wall_s, 3)
+    summary["clients"] = n_clients
+    log(f"  {summary['requests']} reqs / {summary['batches']} batches "
+        f"({summary['mean_batch_rows']} rows/batch)  "
+        f"{summary['requests_per_sec']} req/s  "
+        f"p50 {summary['p50_ms']}ms p99 {summary['p99_ms']}ms")
+    return summary
+
+
+def bench_sharding_parity(model, guide, params, *, num_samples, log=print):
+    """1-device mesh serving must be bit-identical to unsharded."""
+    from repro.distributed.sharding import default_mesh
+    from repro.serve import ServableModel
+
+    x = jax.random.normal(jax.random.PRNGKey(9), (6, DIM))
+    plain = ServableModel.from_svi(
+        "parity-plain", model, guide, params, num_samples=num_samples, max_batch=8
+    )
+    sharded = ServableModel.from_svi(
+        "parity-sharded", model, guide, params, num_samples=num_samples,
+        max_batch=8, mesh=default_mesh(),
+    )
+    key = jax.random.PRNGKey(10)
+    o1 = plain.predict(key, x)
+    o2 = sharded.predict(key, x)
+    bitwise = all(
+        bool(jnp.array_equal(a, b, equal_nan=True))
+        for a, b in zip(jax.tree_util.tree_leaves(o1), jax.tree_util.tree_leaves(o2))
+    )
+    log(f"  sharded(1-device mesh) == unsharded: {bitwise}")
+    assert bitwise, "sharded serving is not bit-identical to unsharded on 1 device"
+    return {"bit_identical": bitwise, "devices": jax.device_count()}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true", help="CI-sized run")
+    ap.add_argument("--json", default=str(REPO / "BENCH_serve.json"))
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        train_steps, n_requests, max_batch, num_samples, n_clients = 20, 40, 16, 8, 4
+    else:
+        train_steps, n_requests, max_batch, num_samples, n_clients = 200, 200, 32, 16, 8
+
+    model, guide, params = make_artifact(train_steps)
+    results = {
+        "bench": "serve",
+        "jax": jax.__version__,
+        "jax_backend": jax.default_backend(),
+        "smoke": bool(args.smoke),
+    }
+
+    print("# steady state: bucketed engine vs naive per-request Predictive")
+    results["steady_state"] = bench_steady_state(
+        model, guide, params, num_samples=num_samples, max_batch=max_batch,
+        n_requests=n_requests,
+    )
+    print("# micro-batcher throughput")
+    results["batcher"] = bench_batcher(
+        model, guide, params, num_samples=num_samples, max_batch=max_batch,
+        n_requests=n_requests, n_clients=n_clients,
+    )
+    print("# sharding parity (1-device mesh)")
+    results["sharding"] = bench_sharding_parity(
+        model, guide, params, num_samples=num_samples,
+    )
+
+    Path(args.json).write_text(json.dumps(results, indent=2) + "\n")
+    print(f"\nwrote {args.json}")
+    print(f"OK: speedup {results['steady_state']['speedup_steady']}x >= "
+          f"{SPEEDUP_FLOOR}x; compiles == buckets; sharding bit-identical")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -10,13 +10,10 @@ Run:  PYTHONPATH=src python examples/dmm.py --steps 300 --iaf 0
       PYTHONPATH=src python examples/dmm.py --steps 300 --iaf 2
 """
 import argparse
-import sys
 import time
 
 import jax
 import jax.numpy as jnp
-
-sys.path.insert(0, "src")
 
 from repro import distributions as dist
 from repro.core import primitives as P

@@ -21,13 +21,10 @@ values vary slightly by platform):
 Run:  PYTHONPATH=src python examples/eight_schools.py [--chains 4]
 """
 import argparse
-import sys
 import time
 
 import jax
 import jax.numpy as jnp
-
-sys.path.insert(0, "src")
 
 from repro import distributions as dist
 from repro.core import primitives as P

@@ -16,14 +16,11 @@ cluster fraction (~0.31 for seed 0), and the decoded assignments achieve
 Run:  PYTHONPATH=src python examples/gmm.py [--steps 400]
 """
 import argparse
-import sys
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-
-sys.path.insert(0, "src")
 
 from repro import distributions as dist, optim
 from repro.core import handlers, primitives as P

@@ -6,13 +6,10 @@
 Run:  PYTHONPATH=src python examples/quickstart.py [--steps 500]
 """
 import argparse
-import sys
 import time
 
 import jax
 import jax.numpy as jnp
-
-sys.path.insert(0, "src")
 
 from repro import distributions as dist
 from repro.core import primitives as P

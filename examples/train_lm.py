@@ -11,8 +11,6 @@ Run:  PYTHONPATH=src python examples/train_lm.py --steps 300
 import argparse
 import sys
 
-sys.path.insert(0, "src")
-
 from repro.launch import train as train_mod
 
 

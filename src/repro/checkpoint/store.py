@@ -68,34 +68,48 @@ def save(directory: str, step: int, tree: Any, *, max_keep: Optional[int] = 3) -
 
 
 class AsyncCheckpointer:
-    """Snapshot-to-host on the caller thread (cheap), file I/O off-thread."""
+    """Snapshot-to-host on the caller thread (cheap), file I/O off-thread.
+    Thread-safe: concurrent `save_async`/`wait` callers serialize on an
+    internal lock, preserving the one-outstanding-save contract."""
 
     def __init__(self, directory: str, max_keep: int = 3):
         self.directory = directory
         self.max_keep = max_keep
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
+        self._lock = threading.Lock()
 
     def save_async(self, step: int, tree: Any) -> None:
-        self.wait()  # one outstanding save at a time
-        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        with self._lock:
+            self._wait_locked()  # one outstanding save at a time
+            # copy=True: device_get of a host-resident (numpy / CPU-jax) leaf
+            # returns a VIEW of the caller's buffer — without the copy, a
+            # donated or in-place-updated buffer corrupts the checkpoint
+            # mid-write.
+            host_tree = jax.tree.map(
+                lambda x: np.array(jax.device_get(x), copy=True), tree
+            )
 
-        def work():
-            try:
-                save(self.directory, step, host_tree, max_keep=self.max_keep)
-            except BaseException as e:  # pragma: no cover
-                self._error = e
+            def work():
+                try:
+                    save(self.directory, step, host_tree, max_keep=self.max_keep)
+                except BaseException as e:  # pragma: no cover
+                    self._error = e
 
-        self._thread = threading.Thread(target=work, daemon=True)
-        self._thread.start()
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
 
-    def wait(self) -> None:
+    def _wait_locked(self) -> None:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
         if self._error is not None:
             err, self._error = self._error, None
             raise err
+
+    def wait(self) -> None:
+        with self._lock:
+            self._wait_locked()
 
 
 def latest_step(directory: str) -> Optional[int]:
@@ -158,6 +172,14 @@ def restore(directory: str, step: Optional[int] = None, *, template: Any = None,
         else:
             out.append(jnp.asarray(arr))
     return step, jax.tree_util.tree_unflatten(treedef, out)
+
+
+def restore_latest(directory: str, *, template: Any = None,
+                   shardings: Any = None) -> Tuple[int, Any]:
+    """Restore the newest committed step — the server warm-start entry point
+    (`repro.serve.ServableModel.from_checkpoint` boots through this, with
+    ``shardings`` from the serving mesh for elastic re-mesh restore)."""
+    return restore(directory, None, template=template, shardings=shardings)
 
 
 def _gc(directory: str, max_keep: int) -> None:

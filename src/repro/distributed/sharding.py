@@ -131,11 +131,22 @@ def batch_axes(mesh: Mesh):
     return ("pod", "data") if "pod" in mesh.axis_names else "data"
 
 
+def data_axis_size(mesh: Mesh, axis=None) -> int:
+    """Total shard count along the composite data axes (or an explicit
+    axis/tuple) — the divisor every leading-dim sharding decision checks.
+    One implementation shared by SVI batch sharding, MCMC chain sharding,
+    activation constraints, and the serving engine's bucket placement."""
+    if axis is None:
+        axis = batch_axes(mesh)
+    size = 1
+    for a in (axis if isinstance(axis, tuple) else (axis,)):
+        size *= mesh.shape[a]
+    return size
+
+
 def batch_shardings(batch: Any, mesh: Mesh) -> Any:
     dp = batch_axes(mesh)
-    dp_size = 1
-    for a in (dp if isinstance(dp, tuple) else (dp,)):
-        dp_size *= mesh.shape[a]
+    dp_size = data_axis_size(mesh, dp)
 
     def leaf(x):
         if not x.shape or x.shape[0] % dp_size != 0:
@@ -204,9 +215,7 @@ def constrain_leading_dim(x: Any, mesh: Mesh, axis=None) -> Any:
     sharding so the divisibility/spec logic lives in exactly one place."""
     if axis is None:
         axis = batch_axes(mesh)
-    size = 1
-    for a in (axis if isinstance(axis, tuple) else (axis,)):
-        size *= mesh.shape[a]
+    size = data_axis_size(mesh, axis)
     if not hasattr(x, "ndim") or x.ndim == 0 or x.shape[0] % size != 0:
         return x
     spec = P(axis, *([None] * (x.ndim - 1)))
@@ -274,9 +283,7 @@ def constrain_activation(x: jax.Array, *, extra: Optional[Dict[int, str]] = None
         return x
     mesh, dp = ctx
     dims = [None] * x.ndim
-    dp_size = 1
-    for a in (dp if isinstance(dp, tuple) else (dp,)):
-        dp_size *= mesh.shape[a]
+    dp_size = data_axis_size(mesh, dp)
     if x.shape[0] % dp_size == 0:
         dims[0] = dp
     if extra:

@@ -11,6 +11,23 @@ straight from ``MCMC.get_samples(group_by_chain=True)`` with
 dim, so multi-chain posterior-predictive sampling stays a single compiled
 call with ``(chain, draw, ...)``-shaped outputs.
 
+Calls are compiled: each `Predictive` owns one `jax.jit` cache shared by
+every invocation, so repeated calls with same-shaped inputs never re-trace
+(the serving hot path — `repro.serve` builds its shape-bucketed endpoints
+on top of this). Array and Python-float args/kwargs, the posterior
+samples, and ``self.params`` ride the traced signature — updating
+``pred.params`` after a checkpoint refresh, or varying a per-request float
+(a temperature, a noise scale), never retraces — while the remaining
+non-array leaves (plate-size ints, flags, ``None``) stay static, so
+models that branch or shape on them keep working (a changed static value
+triggers exactly one fresh trace; an int that varies per request grows
+the cache per value — pass it as a jnp scalar if it is data, not shape). The `num_traces` property reports how many
+distinct executables the cache holds; a steady-traffic server should see
+it equal the number of distinct input shapes, never the number of
+requests. Pass ``jit_compile=False`` to recover the legacy eager
+re-vmap-per-call behavior (models with Python control flow on *array*
+values, or unhashable non-array args).
+
 Example — prior predictive, then chain-shaped posterior predictive::
 
     >>> import jax, jax.numpy as jnp
@@ -25,10 +42,13 @@ Example — prior predictive, then chain-shaped posterior predictive::
     >>> prior["obs"].shape
     (7, 3)
     >>> post = {"loc": jnp.zeros((2, 5))}   # (chain, draw) from MCMC
-    >>> out = Predictive(model, posterior_samples=post, batch_ndims=2)(
-    ...     jax.random.PRNGKey(1))
+    >>> pred = Predictive(model, posterior_samples=post, batch_ndims=2)
+    >>> out = pred(jax.random.PRNGKey(1))
     >>> out["obs"].shape
     (2, 5, 3)
+    >>> _ = pred(jax.random.PRNGKey(2))     # same shapes: no re-trace
+    >>> pred.num_traces
+    1
 """
 from __future__ import annotations
 
@@ -36,10 +56,19 @@ import math
 from typing import Callable, Dict, Optional
 
 import jax
-import jax.numpy as jnp
 
 from ..core.handlers import seed, substitute, trace
 from .util import substitute_params
+
+
+class _Dynamic:
+    """Sentinel marking a traced (array) leaf inside the static blob."""
+
+    def __repr__(self):  # pragma: no cover
+        return "<dynamic>"
+
+
+_DYNAMIC = _Dynamic()
 
 
 class Predictive:
@@ -59,6 +88,7 @@ class Predictive:
         num_samples: Optional[int] = None,
         return_sites: Optional[list] = None,
         batch_ndims: int = 1,
+        jit_compile: bool = True,
     ):
         if posterior_samples is not None and guide is not None:
             raise ValueError("pass either posterior_samples or guide, not both")
@@ -73,14 +103,37 @@ class Predictive:
             len(jax.tree_util.tree_leaves(posterior_samples)[0]) if posterior_samples else 1
         )
         self.return_sites = return_sites
+        # One jit per Predictive: samples/params and the array leaves of
+        # args/kwargs ride the traced signature (so same-shape calls share
+        # one executable and a checkpoint refresh of `self.params` takes
+        # effect without retracing), while non-array leaves (plate-size
+        # ints, flags, None) stay static so models may branch/shape on them.
+        self._jitted = (
+            jax.jit(self._vectorized, static_argnames=("static_blob",))
+            if jit_compile
+            else None
+        )
 
-    def __call__(self, rng_key, *args, **kwargs):
+    @property
+    def num_traces(self) -> int:
+        """Distinct compiled executables (one per input-shape signature);
+        0 before the first call and always 0 for ``jit_compile=False``."""
+        return self._jitted._cache_size() if self._jitted is not None else 0
+
+    def _vectorized(self, rng_key, samples, params, dyn_leaves, *, static_blob):
+        treedef, static_leaves = static_blob
+        leaves = [
+            dyn if stat is _DYNAMIC else stat
+            for dyn, stat in zip(dyn_leaves, static_leaves)
+        ]
+        args, kwargs = jax.tree_util.tree_unflatten(treedef, leaves)
+
         def single(key, sample):
-            model = substitute_params(self.model, self.params)
+            model = substitute_params(self.model, params)
             if self.guide is not None:
                 key_g, key = jax.random.split(key)
                 guide_tr = trace(
-                    seed(substitute_params(self.guide, self.params), key_g)
+                    seed(substitute_params(self.guide, params), key_g)
                 ).get_trace(*args, **kwargs)
                 sample = {
                     n: guide_tr[n]["value"] for n in guide_tr.stochastic_nodes()
@@ -93,15 +146,47 @@ class Predictive:
             ]
             return {n: tr[n]["value"] for n in sites if n in tr.nodes}
 
-        if self.posterior_samples is not None:
-            lead = jax.tree_util.tree_leaves(self.posterior_samples)[0].shape[
-                : self.batch_ndims
-            ]
+        if samples:
+            lead = jax.tree_util.tree_leaves(samples)[0].shape[: self.batch_ndims]
             keys = jax.random.split(rng_key, math.prod(lead))
             keys = keys.reshape(lead + keys.shape[1:])
             fn = single
             for _ in range(self.batch_ndims):
                 fn = jax.vmap(fn)
-            return fn(keys, self.posterior_samples)
+            return fn(keys, samples)
         keys = jax.random.split(rng_key, self.num_samples)
         return jax.vmap(lambda k: single(k, {}))(keys)
+
+    @staticmethod
+    def _partition(args, kwargs):
+        """Split (args, kwargs) leaves into traced values and a hashable
+        static blob. Arrays AND Python floats are traced (floats are data —
+        a per-request temperature must not grow the jit cache); ints, bools
+        and other non-array leaves are static (they determine structure:
+        plate sizes, flags — a changed value is a legitimate fresh trace)."""
+        leaves, treedef = jax.tree_util.tree_flatten((args, kwargs))
+        is_dyn = [
+            (hasattr(leaf, "shape") and hasattr(leaf, "dtype"))
+            or (isinstance(leaf, float) and not isinstance(leaf, bool))
+            for leaf in leaves
+        ]
+        dyn = [leaf if d else None for leaf, d in zip(leaves, is_dyn)]
+        static = tuple(_DYNAMIC if d else leaf for leaf, d in zip(leaves, is_dyn))
+        return dyn, (treedef, static)
+
+    def call_with(self, rng_key, params, posterior_samples, *args, **kwargs):
+        """Like ``__call__`` but with params / posterior samples passed
+        explicitly and NO jit of its own — the serving engine threads the
+        artifact state through *its* jit signature via this entry point, so
+        a checkpoint refresh neither retraces nor bakes constants into the
+        per-bucket executables."""
+        samples = posterior_samples if posterior_samples is not None else {}
+        dyn, blob = self._partition(args, kwargs)
+        return self._vectorized(rng_key, samples, params or {}, dyn, static_blob=blob)
+
+    def __call__(self, rng_key, *args, **kwargs):
+        samples = self.posterior_samples if self.posterior_samples is not None else {}
+        dyn, blob = self._partition(args, kwargs)
+        if self._jitted is not None:
+            return self._jitted(rng_key, samples, self.params, dyn, static_blob=blob)
+        return self._vectorized(rng_key, samples, self.params, dyn, static_blob=blob)

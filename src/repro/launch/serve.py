@@ -1,8 +1,22 @@
-"""Serving driver: batched prefill + decode with a static KV/SSM cache.
+"""Serving CLI: posterior endpoints (`repro.serve`) and LM decode.
 
-CPU-runnable (reduced configs):
-    PYTHONPATH=src python -m repro.launch.serve --arch mamba2-130m --smoke \\
-        --batch 4 --prompt-len 32 --gen 32
+Subcommands:
+
+``posterior`` — the production posterior-serving path. Trains (or
+warm-starts from a `checkpoint.store` directory) a Bayesian regression
+artifact, registers it as a `ServableModel`, and drives synthetic traffic
+through the dynamic micro-batcher, printing latency / throughput /
+queue-depth stats and the compile-per-bucket retrace contract::
+
+    PYTHONPATH=src python -m repro.launch.serve posterior --smoke
+    PYTHONPATH=src python -m repro.launch.serve posterior \\
+        --checkpoint /tmp/ckpt --requests 200 --max-batch 32 --mesh
+
+``lm`` — batched prefill + decode with a static KV/SSM cache over the
+model zoo (CPU-runnable at reduced configs)::
+
+    PYTHONPATH=src python -m repro.launch.serve lm --arch mamba2-130m \\
+        --smoke --batch 4 --prompt-len 32 --gen 32
 """
 from __future__ import annotations
 
@@ -13,20 +27,131 @@ import time
 import jax
 import jax.numpy as jnp
 
-from .. import configs
-from ..models import init_cache, init_params, make_decode_step, forward
+
+# ---------------------------------------------------------------------------
+# posterior serving
+# ---------------------------------------------------------------------------
+
+_DIM = 4
 
 
-def main(argv=None) -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="smollm-135m")
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--temperature", type=float, default=1.0)
-    args = ap.parse_args(argv)
+def _regression_model(x, y=None):
+    """Demo artifact: Bayesian linear regression with a learned noise scale."""
+    from .. import distributions as dist
+    from ..core import primitives as P
+
+    w = P.sample("w", dist.Normal(jnp.zeros(_DIM), 1.0).to_event(1))
+    b = P.sample("b", dist.Normal(0.0, 1.0))
+    with P.plate("B", x.shape[0]):
+        mu = P.deterministic("mu", x @ w + b)
+        P.sample("y", dist.Normal(mu, 0.1), obs=y)
+
+
+def _train_artifact(steps: int, seed: int):
+    """Fit the demo model with SVI; returns (guide, unconstrained params)."""
+    from .. import optim
+    from ..infer import SVI, AutoNormal, Trace_ELBO
+
+    key = jax.random.PRNGKey(seed)
+    k_x, k_w, k_y, k_svi = jax.random.split(key, 4)
+    x = jax.random.normal(k_x, (256, _DIM))
+    w_true = jax.random.normal(k_w, (_DIM,))
+    y = x @ w_true + 0.7 + 0.1 * jax.random.normal(k_y, (256,))
+
+    guide = AutoNormal(_regression_model)
+    svi = SVI(_regression_model, guide, optim.Adam(0.05), Trace_ELBO())
+    state, losses = svi.run(k_svi, steps, x, y=y)
+    params = svi.optim.get_params(state.optim_state)
+    return guide, params, float(losses[-1])
+
+
+def serve_posterior(args) -> int:
+    from ..checkpoint import store
+    from ..infer import AutoNormal
+    from ..serve import MicroBatcher, ServableModel, register
+
+    mesh = None
+    if args.mesh:
+        from ..distributed.sharding import default_mesh
+
+        mesh = default_mesh()
+
+    t0 = time.time()
+    ckpt_step = store.latest_step(args.checkpoint) if args.checkpoint else None
+    if ckpt_step is not None:
+        # warm start: boot the endpoint from the latest committed checkpoint
+        servable = ServableModel.from_checkpoint(
+            "regression", _regression_model, args.checkpoint,
+            guide=AutoNormal(_regression_model), num_samples=args.num_samples,
+            max_batch=args.max_batch, mesh=mesh,
+            # dummy training-shaped call so the fresh autoguide's prototype
+            # covers exactly the latents the checkpoint has params for
+            guide_args=(jnp.zeros((1, _DIM)),),
+            guide_kwargs={"y": jnp.zeros(1)},
+        )
+        print(f"warm start: restored step {servable.restored_step} from "
+              f"{args.checkpoint} in {time.time() - t0:.2f}s")
+    else:
+        guide, params, last_loss = _train_artifact(args.train_steps, args.seed)
+        print(f"trained artifact: {args.train_steps} SVI steps "
+              f"(final loss {last_loss:.2f}) in {time.time() - t0:.2f}s")
+        if args.checkpoint:
+            store.save(args.checkpoint, 0, {"params": params})
+            print(f"saved artifact to {args.checkpoint} (step 0); rerun to warm-start")
+        servable = ServableModel.from_svi(
+            "regression", _regression_model, guide, params,
+            num_samples=args.num_samples, max_batch=args.max_batch, mesh=mesh,
+        )
+    register(servable, replace=True)
+
+    # synthetic traffic: bursts of concurrent variable-size requests
+    rng = jax.random.PRNGKey(args.seed + 1)
+    sizes = jax.random.randint(
+        rng, (args.requests,), 1, max(args.max_request, 2)
+    ).tolist()
+    print(f"serving {args.requests} requests (sizes 1..{args.max_request - 1}, "
+          f"bursts of {args.concurrency}, max_wait {args.max_wait_ms}ms, "
+          f"mesh={'1d-data' if mesh is not None else 'none'})")
+
+    t_serve = time.time()
+    with MicroBatcher(
+        servable.engine, max_wait_ms=args.max_wait_ms,
+        rng_key=jax.random.PRNGKey(args.seed + 2),
+    ) as mb:
+        done = 0
+        while done < len(sizes):
+            burst = sizes[done : done + args.concurrency]
+            futs = []
+            for i, n in enumerate(burst):
+                x = jax.random.normal(jax.random.fold_in(rng, done + i), (n, _DIM))
+                futs.append(mb.submit(x))
+            for f in futs:
+                f.result(timeout=120)
+            done += len(burst)
+        summary = mb.stats.summary()
+    t_serve = time.time() - t_serve
+
+    print(f"\n-- stats ({t_serve:.2f}s wall) " + "-" * 40)
+    for k in ("requests", "batches", "requests_per_sec", "rows_per_sec",
+              "p50_ms", "p99_ms", "mean_batch_rows", "max_queue_depth", "pad_waste"):
+        print(f"  {k:>18}: {summary[k]}")
+    buckets = sorted(servable.buckets_touched)
+    print(f"  {'buckets_touched':>18}: {buckets}")
+    print(f"  {'compiles':>18}: {servable.num_traces} (contract: == {len(buckets)})")
+    if servable.num_traces != len(buckets):
+        print("RETRACE REGRESSION: compiles != shape buckets", file=sys.stderr)
+        return 1
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# LM decode serving (the model-zoo driver, unchanged semantics)
+# ---------------------------------------------------------------------------
+
+
+def serve_lm(args) -> int:
+    from .. import configs
+    from ..models import forward, init_cache, init_params, make_decode_step
 
     cfg = configs.get_smoke_config(args.arch) if args.smoke else configs.get_config(args.arch)
     if cfg.modality != "text":
@@ -58,6 +183,55 @@ def main(argv=None) -> int:
     print(f"prefill: {t_prefill*1e3:.0f} ms  decode: {t_decode*1e3/max(args.gen-1,1):.1f} ms/tok")
     print("sample token ids:", gen[0, :16].tolist())
     return 0
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro.launch.serve", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+    )
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    pp = sub.add_parser("posterior", help="serve a posterior artifact")
+    pp.add_argument("--smoke", action="store_true", help="CI-sized run")
+    pp.add_argument("--checkpoint", default=None,
+                    help="checkpoint dir: warm-start if it has a committed "
+                         "step, else train + save there")
+    pp.add_argument("--train-steps", type=int, default=200)
+    pp.add_argument("--num-samples", type=int, default=8,
+                    help="posterior draws per request")
+    pp.add_argument("--requests", type=int, default=200)
+    pp.add_argument("--max-request", type=int, default=8,
+                    help="request sizes are drawn uniform from [1, this)")
+    pp.add_argument("--max-batch", type=int, default=32)
+    pp.add_argument("--max-wait-ms", type=float, default=2.0)
+    pp.add_argument("--concurrency", type=int, default=8)
+    pp.add_argument("--mesh", action="store_true",
+                    help="shard the batch axis over all local devices")
+    pp.add_argument("--seed", type=int, default=0)
+
+    lp = sub.add_parser("lm", help="LM prefill+decode driver")
+    lp.add_argument("--arch", default="smollm-135m")
+    lp.add_argument("--smoke", action="store_true")
+    lp.add_argument("--batch", type=int, default=4)
+    lp.add_argument("--prompt-len", type=int, default=32)
+    lp.add_argument("--gen", type=int, default=32)
+    lp.add_argument("--seed", type=int, default=0)
+    lp.add_argument("--temperature", type=float, default=1.0)
+    args = ap.parse_args(argv)
+
+    if args.cmd == "posterior":
+        if args.smoke:
+            args.train_steps = min(args.train_steps, 30)
+            args.requests = min(args.requests, 40)
+            args.max_batch = min(args.max_batch, 16)
+        return serve_posterior(args)
+    return serve_lm(args)
 
 
 if __name__ == "__main__":

@@ -111,7 +111,11 @@ def main(argv=None) -> int:
     if ckpt:
         ckpt.save_async(args.steps, opt_state)
         ckpt.wait()
-    print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f})")
+    if losses:
+        print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f})")
+    else:
+        # resume landed at/after --steps: nothing to train, nothing to print
+        print(f"no steps to run (resumed at {start_step}, --steps {args.steps})")
     return 0
 
 

@@ -1,0 +1,27 @@
+"""Posterior-serving subsystem: trained inference artifacts (SVI guides,
+MCMC sample stores, enumerated decoders) as compiled, batched, mesh-sharded
+endpoints. See docs/serving.md for the artifact -> endpoint walkthrough."""
+from .batcher import MicroBatcher, ServeStats
+from .engine import CompiledServable, bucket_for, default_buckets
+from .registry import (
+    ServableModel,
+    clear_registry,
+    get_servable,
+    list_servables,
+    register,
+    unregister,
+)
+
+__all__ = [
+    "CompiledServable",
+    "MicroBatcher",
+    "ServableModel",
+    "ServeStats",
+    "bucket_for",
+    "clear_registry",
+    "default_buckets",
+    "get_servable",
+    "list_servables",
+    "register",
+    "unregister",
+]

@@ -1,0 +1,272 @@
+"""Dynamic micro-batching for the posterior-serving engine.
+
+Production predictive traffic arrives as many small, uncoordinated
+requests; the accelerator wants few large batches. `MicroBatcher` bridges
+the two: requests enter an async queue, a worker coalesces them — up to
+``max_batch`` rows or ``max_wait_ms`` after the first request of a batch,
+whichever comes first — runs ONE forward through a `CompiledServable`
+(pad-to-bucket, so the coalesced size still maps onto a compiled bucket),
+and scatters the per-request slices back to each caller's future. Global
+(non-batch) output leaves — e.g. posterior draws of shared latents — are
+handed to every request in the batch whole.
+
+Randomness contract: each *coalesced batch* consumes one fold of the
+batcher's base key, so results are deterministic given the arrival
+grouping; requests coalesced together share the same posterior draws
+(that is what one sharded forward means).
+
+`ServeStats` is the observability surface: per-request latency quantiles
+(p50/p99), lifetime throughput, queue depth at batch formation, padding
+waste, and the engine's retrace counter — `launch/serve.py` prints it and
+`benchmarks/serve_bench.py` persists it to BENCH_serve.json.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from concurrent.futures import Future
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+
+from .engine import CompiledServable, batch_count
+
+
+def _percentile(sorted_vals: List[float], p: float) -> float:
+    if not sorted_vals:
+        return float("nan")
+    idx = min(len(sorted_vals) - 1, int(round(p / 100.0 * (len(sorted_vals) - 1))))
+    return sorted_vals[idx]
+
+
+@dataclass
+class ServeStats:
+    """Rolling serving metrics (thread-safe via the batcher's worker being
+    the only writer; readers snapshot)."""
+
+    window: int = 4096
+    requests: int = 0
+    batches: int = 0
+    rows: int = 0
+    padded_rows: int = 0
+    max_queue_depth: int = 0
+    started_at: float = field(default_factory=time.perf_counter)
+    latencies_ms: List[float] = field(default_factory=list)
+    batch_sizes: List[int] = field(default_factory=list)
+
+    def record_batch(
+        self,
+        n_requests: int,
+        n_rows: int,
+        bucket: int,
+        queue_depth: int,
+        latencies_ms: List[float],
+    ) -> None:
+        self.requests += n_requests
+        self.batches += 1
+        self.rows += n_rows
+        self.padded_rows += bucket - n_rows
+        self.max_queue_depth = max(self.max_queue_depth, queue_depth)
+        self.batch_sizes.append(n_rows)
+        self.latencies_ms.extend(latencies_ms)
+        if len(self.latencies_ms) > self.window:
+            self.latencies_ms = self.latencies_ms[-self.window :]
+        if len(self.batch_sizes) > self.window:
+            self.batch_sizes = self.batch_sizes[-self.window :]
+
+    def summary(self) -> Dict[str, Any]:
+        lat = sorted(self.latencies_ms)
+        elapsed = max(time.perf_counter() - self.started_at, 1e-9)
+        total = max(self.rows + self.padded_rows, 1)
+        return {
+            "requests": self.requests,
+            "batches": self.batches,
+            "rows": self.rows,
+            "requests_per_sec": round(self.requests / elapsed, 2),
+            "rows_per_sec": round(self.rows / elapsed, 2),
+            "p50_ms": round(_percentile(lat, 50), 3),
+            "p99_ms": round(_percentile(lat, 99), 3),
+            "mean_batch_rows": round(sum(self.batch_sizes) / max(len(self.batch_sizes), 1), 2),
+            "max_queue_depth": self.max_queue_depth,
+            "pad_waste": round(self.padded_rows / total, 4),
+        }
+
+
+@dataclass
+class _Request:
+    batch: Any
+    n: int
+    future: Future
+    t_submit: float
+
+
+_STOP = object()
+
+
+class MicroBatcher:
+    """Async request queue -> coalesce -> one sharded forward -> scatter.
+
+    Parameters
+    ----------
+    servable: a `CompiledServable` or a `ServableModel` (its engine is used).
+    max_batch: coalesce at most this many rows per forward (defaults to the
+        engine's largest bucket).
+    max_wait_ms: after the first request of a batch arrives, wait at most
+        this long for more before running (latency/throughput knob).
+    rng_key: base PRNG key; batch ``i`` uses ``fold_in(rng_key, i)``.
+    """
+
+    def __init__(
+        self,
+        servable: CompiledServable,
+        *,
+        max_batch: Optional[int] = None,
+        max_wait_ms: float = 2.0,
+        rng_key=None,
+        stats_window: int = 4096,
+    ):
+        # accept a ServableModel directly (its engine carries the jit cache)
+        servable = getattr(servable, "engine", servable)
+        self.servable = servable
+        self.max_batch = int(max_batch or servable.max_batch)
+        if self.max_batch > servable.max_batch:
+            raise ValueError(
+                f"max_batch {self.max_batch} exceeds the engine's largest "
+                f"bucket {servable.max_batch}"
+            )
+        self.max_wait_s = max_wait_ms / 1e3
+        self._base_key = rng_key if rng_key is not None else jax.random.PRNGKey(0)
+        self._batch_counter = 0
+        self.stats = ServeStats(window=stats_window)
+        self._q: queue.Queue = queue.Queue()
+        self._carry: Optional[_Request] = None
+        self._closed = False
+        # guards the closed-check + enqueue pair: without it, a submit that
+        # passes the check while close() runs could land its request after
+        # the shutdown drain, leaving the future forever unresolved
+        self._submit_lock = threading.Lock()
+        self._worker = threading.Thread(target=self._loop, daemon=True)
+        self._worker.start()
+
+    # -- client API ----------------------------------------------------------
+    def submit(self, batch: Any) -> Future:
+        """Enqueue a request pytree (leading dim = rows); returns a Future
+        resolving to the per-request output slice."""
+        n = batch_count(batch)
+        if n > self.max_batch:
+            raise ValueError(
+                f"request of {n} rows exceeds max_batch={self.max_batch}; "
+                f"split it client-side"
+            )
+        req = _Request(batch, n, Future(), time.perf_counter())
+        with self._submit_lock:
+            if self._closed:
+                raise RuntimeError("MicroBatcher is closed")
+            self._q.put(req)
+        return req.future
+
+    def predict(self, batch: Any, timeout: Optional[float] = None) -> Any:
+        """Blocking convenience: submit + wait."""
+        return self.submit(batch).result(timeout)
+
+    def close(self, timeout: Optional[float] = 10.0) -> None:
+        """Drain the queue and stop the worker (idempotent)."""
+        with self._submit_lock:
+            if not self._closed:
+                self._closed = True
+                self._q.put(_STOP)
+        self._worker.join(timeout)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+    # -- worker --------------------------------------------------------------
+    def _next_group(self):
+        """Block for the first request, then coalesce until max_batch rows
+        or the deadline. Returns (group, stopping)."""
+        first = self._carry
+        self._carry = None
+        if first is None:
+            first = self._q.get()
+            if first is _STOP:
+                return [], True
+        group, total = [first], first.n
+        deadline = time.perf_counter() + self.max_wait_s
+        stopping = False
+        while total < self.max_batch:
+            remaining = deadline - time.perf_counter()
+            if remaining <= 0:
+                break
+            try:
+                nxt = self._q.get(timeout=remaining)
+            except queue.Empty:
+                break
+            if nxt is _STOP:
+                stopping = True
+                break
+            if total + nxt.n > self.max_batch:
+                self._carry = nxt  # head-of-line for the next batch
+                break
+            group.append(nxt)
+            total += nxt.n
+        return group, stopping
+
+    def _run_group(self, group: List[_Request]) -> None:
+        depth = self._q.qsize() + (1 if self._carry is not None else 0)
+        key = jax.random.fold_in(self._base_key, self._batch_counter)
+        self._batch_counter += 1
+        total = sum(r.n for r in group)
+        try:
+            coalesced = jax.tree.map(
+                lambda *xs: jax.numpy.concatenate(xs, axis=0), *[r.batch for r in group]
+            )
+            out = self.servable(key, coalesced)
+            out = jax.block_until_ready(out)
+            t_done = time.perf_counter()
+            offset = 0
+            latencies = []
+            for r in group:
+                r.future.set_result(
+                    self.servable.slice_output(out, offset, offset + r.n)
+                )
+                offset += r.n
+                latencies.append((t_done - r.t_submit) * 1e3)
+        except Exception as e:  # noqa: BLE001 — scattered to callers
+            for r in group:
+                if not r.future.done():
+                    r.future.set_exception(e)
+            return
+        from .engine import bucket_for
+
+        self.stats.record_batch(
+            n_requests=len(group),
+            n_rows=total,
+            bucket=bucket_for(total, self.servable.buckets),
+            queue_depth=depth,
+            latencies_ms=latencies,
+        )
+
+    def _loop(self) -> None:
+        while True:
+            group, stopping = self._next_group()
+            if group:
+                self._run_group(group)
+            if stopping:
+                # drain anything still queued so no future is left dangling
+                while True:
+                    try:
+                        nxt = self._q.get_nowait()
+                    except queue.Empty:
+                        break
+                    if nxt is not _STOP:
+                        self._run_group([nxt])
+                if self._carry is not None:
+                    self._run_group([self._carry])
+                    self._carry = None
+                return

@@ -1,0 +1,241 @@
+"""Compile-once, shape-bucketed execution for posterior serving.
+
+The training side of the repo already guarantees "one executable, every
+step" (`SVI.update_jit`, the MCMC single-call engine). This module gives
+the *read* path the same contract under production traffic, where request
+batch sizes vary per call: incoming batches are padded up to a small set
+of **shape buckets** (powers of two by default), so the number of XLA
+compiles is bounded by the number of buckets — never by the number of
+distinct request sizes. `num_traces` reports exactly how many executables
+exist; a steady-state server must satisfy ``num_traces ==
+len(buckets_touched)``, and `benchmarks/serve_bench.py` gates on it.
+
+Key properties:
+
+* **pad-to-bucket batching** — leading (batch) dims are edge-padded to the
+  bucket size inside the engine; outputs are sliced back, so callers never
+  see padding. Edge padding (repeat the last row) keeps padded rows inside
+  the model's support (zeros may not be, e.g. for simplex-valued inputs).
+* **batch-axis discovery** — which output axes carry the request batch is
+  discovered structurally with two `jax.eval_shape` probes (no compile, no
+  FLOPs): an axis that grows with the probe batch size is a batch axis.
+  Global leaves (posterior draws of latents shared across the batch) are
+  returned whole.
+* **mesh sharding** — with ``mesh=``, the batch is constrained onto the
+  mesh's data axes via the same `distributed.sharding` policy SVI and MCMC
+  use; a 1-device mesh is bit-identical to no mesh.
+* **donation** — the padded input buffer is engine-owned (callers keep
+  their arrays), so it is donated to XLA on backends that support buffer
+  donation (auto-disabled on CPU, where XLA ignores donation).
+
+Example::
+
+    >>> import jax, jax.numpy as jnp
+    >>> from repro.serve.engine import CompiledServable
+    >>> def double(key, batch):
+    ...     return {"y": 2.0 * batch["x"], "global": jnp.zeros(3)}
+    >>> eng = CompiledServable(double, max_batch=8)
+    >>> out = eng(jax.random.PRNGKey(0), {"x": jnp.arange(3.0)})
+    >>> out["y"].shape, out["global"].shape
+    ((3,), (3,))
+    >>> _ = eng(jax.random.PRNGKey(0), {"x": jnp.arange(4.0)})  # same bucket
+    >>> eng.num_traces, sorted(eng.buckets_touched)
+    (1, [4])
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def default_buckets(max_batch: int) -> Tuple[int, ...]:
+    """Powers of two up to ``max_batch`` (plus ``max_batch`` itself when it
+    is not a power of two): 64 -> (1, 2, 4, 8, 16, 32, 64)."""
+    if max_batch < 1:
+        raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+    out = []
+    b = 1
+    while b < max_batch:
+        out.append(b)
+        b *= 2
+    out.append(max_batch)
+    return tuple(out)
+
+
+def bucket_for(n: int, buckets: Sequence[int]) -> int:
+    """Smallest bucket >= n (buckets must be sorted ascending)."""
+    for b in buckets:
+        if n <= b:
+            return b
+    raise ValueError(
+        f"batch of {n} exceeds the largest bucket {buckets[-1]}; raise "
+        f"max_batch or split the request client-side"
+    )
+
+
+def batch_count(batch: Any) -> int:
+    """Leading-dim size of a request pytree; every leaf must agree."""
+    leaves = jax.tree_util.tree_leaves(batch)
+    if not leaves:
+        raise ValueError("empty request batch")
+    sizes = {leaf.shape[0] if getattr(leaf, "ndim", 0) else None for leaf in leaves}
+    if None in sizes or len(sizes) != 1:
+        raise ValueError(
+            f"request leaves disagree on the leading batch dim: {sizes}"
+        )
+    n = sizes.pop()
+    if n < 1:
+        raise ValueError("request batch has 0 rows")
+    return n
+
+
+def pad_leading(batch: Any, total: int, *, force_copy: bool = False) -> Any:
+    """Edge-pad every leaf's leading dim to ``total`` rows. With
+    ``force_copy`` the result never aliases the input (so the engine can
+    donate it even when no padding was needed)."""
+
+    def leaf(x):
+        pad = total - x.shape[0]
+        if pad < 0:
+            raise ValueError(f"batch of {x.shape[0]} larger than bucket {total}")
+        if pad == 0:
+            return jnp.array(x, copy=True) if force_copy else x
+        return jnp.pad(x, [(0, pad)] + [(0, 0)] * (x.ndim - 1), mode="edge")
+
+    return jax.tree.map(leaf, batch)
+
+
+class CompiledServable:
+    """Wrap ``fn(rng_key, batch) -> pytree`` with pad-to-bucket batching and
+    a single shared jit cache (compiles == buckets touched).
+
+    fn must be jit-traceable and treat ``batch``'s leading dim as the
+    request batch. Outputs may mix batch-axis leaves (per-request rows) and
+    global leaves (shared across the batch) — the split is discovered
+    automatically, or passed explicitly via ``out_batch_axes`` (a dict
+    keyed like a flat dict output, values int axis or None).
+    """
+
+    def __init__(
+        self,
+        fn: Callable,
+        *,
+        max_batch: int = 64,
+        buckets: Optional[Sequence[int]] = None,
+        mesh=None,
+        donate: Optional[bool] = None,
+        out_batch_axes: Optional[Dict[str, Optional[int]]] = None,
+        state: Any = None,
+    ):
+        self.fn = fn
+        # Artifact state (params / posterior samples / conditioning data)
+        # threaded through the jit signature as a TRACED pytree: with N
+        # buckets the state is passed at call time instead of being baked
+        # into N executables as XLA constants, and a same-shaped update
+        # (checkpoint refresh) serves immediately with no recompile. When
+        # given, fn is called as fn(key, batch, state); decide at
+        # construction — flipping later would change the traced signature.
+        self.state = state
+        self._has_state = state is not None
+        self.buckets = tuple(sorted(set(buckets))) if buckets else default_buckets(max_batch)
+        self.max_batch = self.buckets[-1]
+        self.mesh = mesh
+        if donate is None:
+            donate = jax.default_backend() != "cpu"
+        self.donate = bool(donate)
+        self._explicit_axes = out_batch_axes
+        self._axes: Optional[list] = None  # flattened Optional[int] per out leaf
+        self.buckets_touched: set = set()
+        self._jit = jax.jit(
+            self._forward, donate_argnums=(1,) if self.donate else ()
+        )
+
+    # -- compiled forward ---------------------------------------------------
+    def _call_fn(self, rng_key, batch, state):
+        if self._has_state:
+            return self.fn(rng_key, batch, state)
+        return self.fn(rng_key, batch)
+
+    def _forward(self, rng_key, batch, state):
+        if self.mesh is not None:
+            from ..distributed.sharding import shard_batch
+
+            batch = shard_batch(batch, self.mesh)
+        return self._call_fn(rng_key, batch, state)
+
+    @property
+    def num_traces(self) -> int:
+        """Compiled executables in the shared jit cache. The serving
+        contract: equal to ``len(self.buckets_touched)``, regardless of how
+        many distinct request sizes were seen."""
+        return self._jit._cache_size()
+
+    # -- output batch-axis discovery ----------------------------------------
+    def _discover_axes(self, batch) -> None:
+        n1, n2 = 2, 5  # delta of 3: a coincidental non-batch match is ~impossible
+        key = jax.random.PRNGKey(0)
+        small = jax.tree.map(lambda x: x[:1], batch)
+        # Boot call: run fn once EAGERLY on concrete arrays before any trace.
+        # Lazily-initialized artifacts (e.g. an AutoGuide warm-started from a
+        # checkpoint that has never been called) set up their prototype here
+        # with concrete values; doing it under eval_shape/jit would leak
+        # tracers into that cached state.
+        probe = lambda k, b: self._call_fn(k, b, self.state)
+        probe(key, pad_leading(small, n1))
+        o1 = jax.eval_shape(probe, key, pad_leading(small, n1))
+        if self._explicit_axes is not None:
+            # explicit axes skip discovery entirely (the escape hatch for
+            # outputs where discovery is ambiguous)
+            if not isinstance(o1, dict):
+                raise ValueError("out_batch_axes requires a flat dict output")
+            self._axes = [self._explicit_axes.get(k) for k in sorted(o1)]
+            return
+        o2 = jax.eval_shape(probe, key, pad_leading(small, n2))
+        f1 = jax.tree_util.tree_leaves(o1)
+        f2 = jax.tree_util.tree_leaves(o2)
+        axes = []
+        for path_leaf, (s1, s2) in zip(
+            jax.tree_util.tree_flatten_with_path(o1)[0], zip(f1, f2)
+        ):
+            diffs = [
+                i for i, (a, b) in enumerate(zip(s1.shape, s2.shape)) if a != b
+            ]
+            if not diffs:
+                axes.append(None)
+            elif len(diffs) == 1 and s2.shape[diffs[0]] - s1.shape[diffs[0]] == n2 - n1:
+                axes.append(diffs[0])
+            else:
+                name = "/".join(str(p) for p in path_leaf[0])
+                raise ValueError(
+                    f"cannot infer the batch axis of output leaf '{name}' "
+                    f"({s1.shape} at batch {n1} vs {s2.shape} at batch {n2}); "
+                    f"pass out_batch_axes explicitly"
+                )
+        self._axes = axes
+
+    def slice_output(self, out: Any, start: int, stop: int) -> Any:
+        """Slice ``[start, stop)`` of the request-batch axis out of every
+        batch-bearing leaf; global leaves pass through whole. Used by the
+        engine to strip padding and by the micro-batcher to scatter one
+        coalesced forward back to its requests."""
+        flat, treedef = jax.tree_util.tree_flatten(out)
+        if self._axes is None or len(self._axes) != len(flat):
+            raise RuntimeError("slice_output before the first __call__")
+        sliced = [
+            leaf if ax is None else jax.lax.slice_in_dim(leaf, start, stop, axis=ax)
+            for leaf, ax in zip(flat, self._axes)
+        ]
+        return jax.tree_util.tree_unflatten(treedef, sliced)
+
+    # -- serving entry point -------------------------------------------------
+    def __call__(self, rng_key, batch):
+        n = batch_count(batch)
+        b = bucket_for(n, self.buckets)
+        if self._axes is None:
+            self._discover_axes(batch)
+        padded = pad_leading(batch, b, force_copy=self.donate)
+        out = self._jit(rng_key, padded, self.state if self._has_state else ())
+        self.buckets_touched.add(b)
+        return self.slice_output(out, 0, n)

@@ -1,0 +1,257 @@
+"""`ServableModel`: trained inference artifacts as named, servable
+endpoints.
+
+The paper's framing is that inference produces first-class objects — a
+guide with fitted params, a store of posterior samples, an enumerated
+decoder. This module turns each of those artifact kinds into the same
+serving surface: a `CompiledServable` endpoint (pad-to-bucket batching,
+compile-once per bucket, optional mesh sharding) plus a process-wide
+registry so `launch/serve.py` and the micro-batcher can look endpoints up
+by name.
+
+Artifact constructors:
+
+* `ServableModel.from_svi(name, model, guide, params)` — amortized /
+  variational posterior predictive. ``params`` are the *unconstrained*
+  optimizer params (``svi.optim.get_params(state.optim_state)``), the same
+  tree `checkpoint.store` persists.
+* `ServableModel.from_mcmc(name, model, posterior_samples)` — replays a
+  posterior sample store through the model (chain-grouped samples via
+  ``batch_ndims=2``).
+* `ServableModel.from_discrete(name, model, data=...)` — an
+  `infer_discrete`-style enumerated decoder: serves exact MAP
+  (``temperature=0``) or exact joint posterior samples (``temperature=1``)
+  of annotated discrete sites.
+* `ServableModel.from_checkpoint(name, model, directory, guide=...)` —
+  warm start: restore the latest committed step from a
+  `checkpoint.store` directory (optionally resharded onto a serving mesh)
+  and serve it via `from_svi`; the restored step is kept on
+  ``servable.restored_step``.
+
+The serving contract for the wrapped model: it takes ONE positional
+argument, the request batch pytree, whose leading dim is the batch.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+
+from ..core import handlers
+from ..infer.predictive import Predictive
+from .engine import CompiledServable
+
+
+class ServableModel:
+    """A named, compiled posterior-serving endpoint.
+
+    Thin composition: `kind`/`meta` describe the artifact, `engine` is the
+    bucketed compiled executor. Engine kwargs (``max_batch``, ``buckets``,
+    ``mesh``, ``donate``, ``out_batch_axes``) pass through.
+    """
+
+    def __init__(self, name: str, fn: Callable, *, kind: str = "custom",
+                 meta: Optional[Dict[str, Any]] = None, **engine_kwargs):
+        self.name = name
+        self.kind = kind
+        self.meta = meta or {}
+        self.restored_step: Optional[int] = None
+        self.engine = CompiledServable(fn, **engine_kwargs)
+
+    def predict(self, rng_key, batch: Any) -> Any:
+        """One compiled, bucketed forward for `batch` (leading dim = rows)."""
+        return self.engine(rng_key, batch)
+
+    __call__ = predict
+
+    def refresh(self, **updates) -> None:
+        """Hot-swap artifact state in place (``params=`` for svi/checkpoint
+        servables, ``samples=`` for mcmc, ``data=`` for discrete). The new
+        values ride the engine's traced signature, so a same-shaped refresh
+        — e.g. the next committed checkpoint step — serves immediately with
+        NO recompile and the compiles == buckets contract intact."""
+        if self.engine.state is None:
+            raise ValueError(f"servable '{self.name}' carries no artifact state")
+        for key, value in updates.items():
+            if key not in self.engine.state:
+                raise KeyError(
+                    f"unknown state key '{key}' "
+                    f"(has: {sorted(self.engine.state)})"
+                )
+            self.engine.state[key] = value
+
+    @property
+    def num_traces(self) -> int:
+        return self.engine.num_traces
+
+    @property
+    def buckets_touched(self):
+        return self.engine.buckets_touched
+
+    def __repr__(self) -> str:
+        return (
+            f"ServableModel({self.name!r}, kind={self.kind!r}, "
+            f"buckets={self.engine.buckets}, compiles={self.num_traces})"
+        )
+
+    # -- artifact constructors ----------------------------------------------
+    @classmethod
+    def from_svi(cls, name: str, model: Callable, guide: Callable, params: Dict,
+                 *, num_samples: int = 1, return_sites: Optional[list] = None,
+                 **engine_kwargs) -> "ServableModel":
+        """Serve the (guide, params) artifact of a trained SVI run: each
+        request draws `num_samples` guide samples and replays them through
+        the model. ``params`` = unconstrained optimizer params."""
+        pred = Predictive(
+            model, guide=guide, num_samples=num_samples,
+            return_sites=return_sites, jit_compile=False,  # engine owns the jit
+        )
+        # params ride the engine's traced signature (not baked per bucket);
+        # servable.refresh(params=...) hot-swaps them with no recompile
+        fn = lambda key, batch, state: pred.call_with(key, state["params"], None, batch)
+        return cls(name, fn, kind="svi", state={"params": dict(params or {})},
+                   meta={"num_samples": num_samples}, **engine_kwargs)
+
+    @classmethod
+    def from_mcmc(cls, name: str, model: Callable, posterior_samples: Dict,
+                  *, batch_ndims: int = 1, return_sites: Optional[list] = None,
+                  **engine_kwargs) -> "ServableModel":
+        """Serve an MCMC sample store: every request fans the full store
+        through the model (use `MCMC.get_samples(group_by_chain=True)` +
+        ``batch_ndims=2`` for chain-shaped output)."""
+        pred = Predictive(
+            model, posterior_samples=posterior_samples, batch_ndims=batch_ndims,
+            return_sites=return_sites, jit_compile=False,
+        )
+        # the sample store rides the engine's traced signature — one copy
+        # shared by all bucket executables; refresh(samples=...) hot-swaps
+        fn = lambda key, batch, state: pred.call_with(key, {}, state["samples"], batch)
+        n_draws = len(jax.tree_util.tree_leaves(posterior_samples)[0])
+        return cls(name, fn, kind="mcmc",
+                   state={"samples": dict(posterior_samples)},
+                   meta={"num_draws": n_draws}, **engine_kwargs)
+
+    @classmethod
+    def from_discrete(cls, name: str, model: Callable, *,
+                      data: Optional[Dict] = None, temperature: int = 0,
+                      return_sites: Optional[list] = None,
+                      **engine_kwargs) -> "ServableModel":
+        """Serve an enumerated decoder: exact MAP (``temperature=0``) or an
+        exact joint posterior sample (``temperature=1``) of the annotated
+        discrete sites, with continuous posteriors fixed via ``data``
+        (e.g. SVI posterior means)."""
+        from ..infer.traceenum_elbo import infer_discrete
+
+        has_data = bool(data)
+
+        def fn(key, batch, state):
+            # conditioning values (e.g. SVI posterior means) ride the traced
+            # signature; refresh(data=...) hot-swaps them
+            base = (
+                handlers.substitute(model, data=state["data"]) if has_data else model
+            )
+            key_dec, key_trace = jax.random.split(key)
+            decoded = infer_discrete(base, temperature=temperature, rng_key=key_dec)
+            tr = handlers.trace(handlers.seed(decoded, key_trace)).get_trace(batch)
+            sites = return_sites or [
+                n for n, s in tr.nodes.items()
+                if s["type"] == "sample" and not s.get("is_observed")
+                and (s.get("infer") or {}).get("enumerate")
+            ]
+            return {n: tr[n]["value"] for n in sites if n in tr.nodes}
+
+        return cls(name, fn, kind="discrete",
+                   state={"data": dict(data or {})},
+                   meta={"temperature": temperature}, **engine_kwargs)
+
+    @classmethod
+    def from_checkpoint(cls, name: str, model: Callable, directory: str, *,
+                        guide: Callable, step: Optional[int] = None,
+                        template: Any = None, shardings: Any = None,
+                        num_samples: int = 1,
+                        return_sites: Optional[list] = None,
+                        guide_args: tuple = (),
+                        guide_kwargs: Optional[Dict[str, Any]] = None,
+                        **engine_kwargs) -> "ServableModel":
+        """Warm start from a `checkpoint.store` directory: restore the
+        latest committed step (or ``step``), treat the tree as the
+        unconstrained SVI params (a ``"params"`` sub-tree is used when
+        present, so full-state checkpoints work too), and serve it.
+
+        A freshly constructed autoguide must see the model in *training*
+        configuration once, or it will treat serving-time-unobserved sites
+        (``obs=None``) as latents the checkpoint has no params for. Pass
+        ``guide_args``/``guide_kwargs`` shaped like the training call
+        (dummy values are fine — only observedness and event shapes
+        matter) and the guide's prototype is set up here before serving."""
+        from ..checkpoint.store import restore, restore_latest
+
+        if step is None:
+            restored_step, tree = restore_latest(
+                directory, template=template, shardings=shardings
+            )
+        else:
+            restored_step, tree = restore(
+                directory, step, template=template, shardings=shardings
+            )
+        params = tree["params"] if isinstance(tree, dict) and "params" in tree else tree
+        if guide_args or guide_kwargs:
+            # one seeded eager call sets up the guide prototype in training
+            # configuration (lazy autoguides trace the model here)
+            handlers.trace(handlers.seed(guide, jax.random.PRNGKey(0))).get_trace(
+                *guide_args, **(guide_kwargs or {})
+            )
+        servable = cls.from_svi(
+            name, model, guide, params, num_samples=num_samples,
+            return_sites=return_sites, **engine_kwargs
+        )
+        servable.kind = "checkpoint"
+        servable.restored_step = restored_step
+        servable.meta["directory"] = directory
+        return servable
+
+
+# ---------------------------------------------------------------------------
+# process-wide registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, ServableModel] = {}
+_LOCK = threading.Lock()
+
+
+def register(servable: ServableModel, *, replace: bool = False) -> ServableModel:
+    """Register under ``servable.name``; re-registering an existing name
+    requires ``replace=True`` (hot swap after a checkpoint refresh)."""
+    with _LOCK:
+        if servable.name in _REGISTRY and not replace:
+            raise ValueError(
+                f"servable '{servable.name}' already registered "
+                f"(pass replace=True to hot-swap)"
+            )
+        _REGISTRY[servable.name] = servable
+    return servable
+
+
+def get_servable(name: str) -> ServableModel:
+    with _LOCK:
+        if name not in _REGISTRY:
+            raise KeyError(
+                f"no servable '{name}' (registered: {sorted(_REGISTRY) or 'none'})"
+            )
+        return _REGISTRY[name]
+
+
+def unregister(name: str) -> None:
+    with _LOCK:
+        _REGISTRY.pop(name, None)
+
+
+def list_servables() -> List[str]:
+    with _LOCK:
+        return sorted(_REGISTRY)
+
+
+def clear_registry() -> None:
+    with _LOCK:
+        _REGISTRY.clear()

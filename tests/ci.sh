@@ -1,21 +1,37 @@
 #!/usr/bin/env bash
 # Local mirror of .github/workflows/ci.yml: pinned deps + the tier-1 verify
 # command on CPU. The suite must never again fail at collection — missing
-# optional deps (hypothesis, scipy) skip their modules instead of erroring.
+# optional deps (hypothesis, scipy, ruff, pytest-cov) skip their stage/module
+# with a warning instead of erroring.
 #
-# Usage: tests/ci.sh [all|lint|engine|conformance|docs|bench] [extra pytest args...]
-#   lint        - ruff check over src/tests/benchmarks + ruff format --check on
-#                 the ratchet list below (skips with a warning if ruff is not
+# Usage: tests/ci.sh [all|lint|engine|coverage|conformance|docs|examples|bench|bench-gate] [extra pytest args...]
+#   lint        - ruff check over src/tests/benchmarks/examples + ratcheted
+#                 ruff format --check (skips with a warning if ruff is not
 #                 installed; CI installs it from requirements.txt)
-#   engine      - core/inference/kernel suites (-p no:randomly for determinism,
-#                 --durations=10 to keep slow tests visible)
+#   engine      - core/inference/kernel/serve suites (-p no:randomly for
+#                 determinism, --durations=10 to keep slow tests visible);
+#                 runs under pytest-cov when available, writing .coverage
+#                 for the coverage stage
+#   coverage    - coverage floor: per-package report over the engine run's
+#                 .coverage data, failing under REPRO_COV_FLOOR percent
+#                 (the ratchet; recalibrate with tools/coverage_floor.py
+#                 and raise it as suites grow — never lower it to land code)
 #   conformance - the distribution conformance + goodness-of-fit suite, run as
 #                 its own step so distribution regressions are attributed
 #                 distinctly from engine failures
-#   docs        - doctested infer/ modules + executable docs/ pages
-#   bench       - smoke-mode benchmarks; writes BENCH_enum.json (uploaded as a
-#                 workflow artifact) and FAILS on any retrace-counter
-#                 regression (the counters must stay == 1)
+#   docs        - doctested infer/serve modules + executable docs/ pages
+#   examples    - paper-reproduction examples at tiny step counts (each
+#                 example's own convergence assertions still apply), run
+#                 exactly the way users run them (installed package path,
+#                 no sys.path hacks)
+#   bench       - smoke-mode benchmarks; writes BENCH_enum.json and
+#                 BENCH_serve.json (uploaded as workflow artifacts) and FAILS
+#                 on any retrace-counter regression or if the bucketed serve
+#                 path drops under its 5x-vs-naive floor
+#   bench-gate  - bench-regression gate: diffs the freshly written
+#                 BENCH_*.json steady-state numbers against the committed
+#                 (HEAD) baselines; >25% regression fails (tune with
+#                 REPRO_BENCH_TOLERANCE for noisy runners)
 # Extra args after the step name are forwarded to pytest, e.g.
 #   tests/ci.sh engine -k enum -x
 set -euo pipefail
@@ -28,6 +44,12 @@ fi
 export JAX_PLATFORMS=cpu
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 
+# Coverage floor (percent). Calibrated with tools/coverage_floor.py on the
+# engine suite (73.0% measured at the serving PR), minus ~5 points of margin
+# for coverage.py-vs-estimator methodology and the 3.10/3.12 matrix.
+# Ratchet UP as coverage grows; never lower it to land code.
+REPRO_COV_FLOOR="${REPRO_COV_FLOOR:-68}"
+
 STEP="${1:-all}"
 if [[ $# -gt 0 ]]; then shift; fi
 
@@ -36,7 +58,7 @@ run_lint() {
         echo "WARNING: ruff not installed; skipping lint (pip install -r requirements.txt)" >&2
         return 0
     fi
-    ruff check src tests benchmarks
+    ruff check src tests benchmarks examples
     # format is ratcheted: files (re)written since the lint stage landed must
     # stay formatter-clean; pre-existing modules join as they get touched
     ruff format --check \
@@ -45,9 +67,44 @@ run_lint() {
         tests/test_enum_dispatch.py
 }
 
+have_pytest_cov() {
+    python -c "import pytest_cov" >/dev/null 2>&1
+}
+
 run_engine() {
-    python -m pytest -p no:randomly -q --durations=10 \
+    local cov_args=()
+    if [[ "${REPRO_COV:-1}" == "0" ]]; then
+        echo "note: coverage disabled via REPRO_COV=0" >&2
+    elif have_pytest_cov; then
+        # write .coverage for the coverage stage; the floor is enforced
+        # there so failures attribute to the right CI step
+        cov_args=(--cov=repro --cov-report= --cov-fail-under=0)
+    else
+        echo "WARNING: pytest-cov not installed; engine runs without coverage" >&2
+    fi
+    python -m pytest -p no:randomly -q --durations=10 ${cov_args[@]+"${cov_args[@]}"} \
         --ignore=tests/test_distributions_conformance.py "$@"
+}
+
+run_coverage() {
+    if [[ "${REPRO_COV:-1}" == "0" ]]; then
+        echo "note: coverage disabled via REPRO_COV=0; skipping coverage floor" >&2
+        return 0
+    fi
+    if ! have_pytest_cov; then
+        echo "WARNING: pytest-cov not installed; skipping coverage floor" >&2
+        return 0
+    fi
+    if [[ ! -f .coverage ]]; then
+        echo "ERROR: no .coverage data — run 'tests/ci.sh engine' first" >&2
+        return 1
+    fi
+    # NB: enforces against whatever .coverage holds — run the full engine
+    # stage immediately before (as `all` and the workflow do); a stale or
+    # partial-run file (engine -k ...) makes the floor meaningless
+    # per-package/file report + the ratcheted floor (equivalent to running
+    # the engine step with --cov-fail-under=$REPRO_COV_FLOOR)
+    python -m coverage report --fail-under="$REPRO_COV_FLOOR"
 }
 
 run_conformance() {
@@ -60,25 +117,46 @@ run_docs() {
     # the docs/ pages are doctests, and broken example code fails CI
     python -m pytest -q --doctest-modules \
         src/repro/infer/mcmc.py src/repro/infer/diagnostics.py \
-        src/repro/infer/predictive.py src/repro/infer/autoguide.py
+        src/repro/infer/predictive.py src/repro/infer/autoguide.py \
+        src/repro/serve/engine.py
     python -m doctest docs/inference.md docs/backends.md docs/enumeration.md \
-        docs/kernels.md
+        docs/kernels.md docs/serving.md
+}
+
+run_examples() {
+    # tiny step counts, but every example's own assertions (ELBO improvement,
+    # r_hat, MAP accuracy) still gate — the reproductions can't silently rot
+    python examples/quickstart.py --steps 60 --batch 64
+    python examples/gmm.py --steps 30 --num-points 80
+    python examples/eight_schools.py --chains 2 --warmup 300 --samples 300
+    python examples/dmm.py --steps 2
+    python -m repro.launch.serve posterior --smoke --requests 12
 }
 
 run_bench() {
     # smoke-mode benchmarks double as regression gates: each asserts its
-    # retrace counter stays at 1 and exits nonzero otherwise
+    # retrace counter and (for serve) the 5x-vs-naive floor, exiting nonzero
+    # otherwise
     python benchmarks/svi_sharded.py --smoke
     python benchmarks/mcmc_chains.py --smoke
     python benchmarks/enum_ve.py --smoke --json BENCH_enum.json
+    python benchmarks/serve_bench.py --smoke --json BENCH_serve.json
+}
+
+run_bench_gate() {
+    python benchmarks/check_regression.py BENCH_enum.json BENCH_serve.json
 }
 
 case "$STEP" in
     lint)        run_lint ;;
     engine)      run_engine "$@" ;;
+    coverage)    run_coverage ;;
     conformance) run_conformance "$@" ;;
     docs)        run_docs ;;
+    examples)    run_examples ;;
     bench)       run_bench ;;
-    all)         run_lint; run_engine "$@"; run_conformance "$@"; run_docs; run_bench ;;
-    *) echo "unknown step '$STEP' (use all|lint|engine|conformance|docs|bench)" >&2; exit 2 ;;
+    bench-gate)  run_bench_gate ;;
+    all)         run_lint; run_engine "$@"; run_coverage; run_conformance "$@";
+                 run_docs; run_examples; run_bench; run_bench_gate ;;
+    *) echo "unknown step '$STEP' (use all|lint|engine|coverage|conformance|docs|examples|bench|bench-gate)" >&2; exit 2 ;;
 esac

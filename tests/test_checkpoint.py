@@ -1,0 +1,205 @@
+"""checkpoint/store.py: atomic manifests, roundtrips (template/shardings),
+max_keep GC, latest-step resolution, and AsyncCheckpointer ordering —
+load-bearing for serve warm-start."""
+import os
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import store
+
+
+def tree_example():
+    return {
+        "params": {"w": jnp.arange(6.0).reshape(2, 3), "b": jnp.zeros(3)},
+        "step": jnp.asarray(5, jnp.int32),
+    }
+
+
+def assert_tree_equal(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# save / restore
+# ---------------------------------------------------------------------------
+
+
+def test_roundtrip_without_template(tmp_path):
+    tree = tree_example()
+    step_dir = store.save(str(tmp_path), 3, tree)
+    assert os.path.isdir(step_dir)
+    step, out = store.restore(str(tmp_path))
+    assert step == 3
+    assert_tree_equal(out, tree)
+
+
+def test_roundtrip_with_template_validates(tmp_path):
+    tree = tree_example()
+    store.save(str(tmp_path), 1, tree)
+    step, out = store.restore(str(tmp_path), template=tree)
+    assert step == 1
+    assert_tree_equal(out, tree)
+    # template with a mismatched shape fails loudly
+    bad = {
+        "params": {"w": jnp.zeros((4, 4)), "b": jnp.zeros(3)},
+        "step": jnp.asarray(0, jnp.int32),
+    }
+    with pytest.raises(ValueError, match="shape mismatch"):
+        store.restore(str(tmp_path), template=bad)
+    # template with an extra leaf the checkpoint lacks fails loudly
+    extra = dict(tree, extra=jnp.zeros(2))
+    with pytest.raises(KeyError, match="missing leaf"):
+        store.restore(str(tmp_path), template=extra)
+
+
+def test_restore_with_shardings_places_leaves(tmp_path):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.distributed.sharding import default_mesh
+
+    tree = tree_example()
+    store.save(str(tmp_path), 2, tree)
+    mesh = default_mesh()
+    shardings = jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+    step, out = store.restore(str(tmp_path), template=tree, shardings=shardings)
+    assert step == 2
+    assert_tree_equal(out, tree)
+    for leaf in jax.tree_util.tree_leaves(out):
+        assert leaf.sharding.mesh.shape == mesh.shape
+
+
+def test_restore_latest_and_explicit_step(tmp_path):
+    t1, t2 = tree_example(), {"x": jnp.ones(2)}
+    store.save(str(tmp_path), 1, t1, max_keep=None)
+    store.save(str(tmp_path), 9, t2, max_keep=None)
+    assert store.latest_step(str(tmp_path)) == 9
+    step, out = store.restore_latest(str(tmp_path))
+    assert step == 9
+    assert_tree_equal(out, t2)
+    step, out = store.restore(str(tmp_path), 1)
+    assert step == 1
+    assert_tree_equal(out, t1)
+
+
+def test_restore_empty_directory_raises(tmp_path):
+    assert store.latest_step(str(tmp_path)) is None
+    assert store.latest_step(str(tmp_path / "missing")) is None
+    with pytest.raises(FileNotFoundError, match="no committed checkpoint"):
+        store.restore(str(tmp_path))
+
+
+def test_uncommitted_step_is_garbage(tmp_path):
+    """A step dir without manifest.json (crashed writer) must be invisible."""
+    store.save(str(tmp_path), 1, {"x": jnp.ones(1)})
+    fake = tmp_path / "step_000000005"
+    fake.mkdir()  # no manifest: not committed
+    assert store.latest_step(str(tmp_path)) == 1
+    step, _ = store.restore_latest(str(tmp_path))
+    assert step == 1
+
+
+def test_save_overwrites_existing_step(tmp_path):
+    store.save(str(tmp_path), 4, {"x": jnp.zeros(2)})
+    store.save(str(tmp_path), 4, {"x": jnp.ones(2)})
+    _, out = store.restore(str(tmp_path), 4)
+    np.testing.assert_array_equal(np.asarray(out["x"]), np.ones(2))
+
+
+# ---------------------------------------------------------------------------
+# GC
+# ---------------------------------------------------------------------------
+
+
+def test_max_keep_gc_keeps_newest(tmp_path):
+    for s in range(6):
+        store.save(str(tmp_path), s, {"x": jnp.full(1, float(s))}, max_keep=3)
+    kept = sorted(
+        int(n.split("_")[1]) for n in os.listdir(tmp_path) if n.startswith("step_")
+    )
+    assert kept == [3, 4, 5]
+    _, out = store.restore_latest(str(tmp_path))
+    np.testing.assert_array_equal(np.asarray(out["x"]), [5.0])
+
+
+def test_max_keep_none_keeps_everything(tmp_path):
+    for s in range(5):
+        store.save(str(tmp_path), s, {"x": jnp.zeros(1)}, max_keep=None)
+    kept = [n for n in os.listdir(tmp_path) if n.startswith("step_")]
+    assert len(kept) == 5
+
+
+# ---------------------------------------------------------------------------
+# AsyncCheckpointer
+# ---------------------------------------------------------------------------
+
+
+def test_async_checkpointer_ordering(tmp_path):
+    """save_async admits one outstanding save; a burst of saves lands them
+    all, in order, with GC applied."""
+    ck = store.AsyncCheckpointer(str(tmp_path), max_keep=2)
+    for s in range(5):
+        ck.save_async(s, {"x": jnp.full(2, float(s))})
+    ck.wait()
+    assert store.latest_step(str(tmp_path)) == 4
+    kept = sorted(
+        int(n.split("_")[1]) for n in os.listdir(tmp_path) if n.startswith("step_")
+    )
+    assert kept == [3, 4]
+    _, out = store.restore_latest(str(tmp_path))
+    np.testing.assert_array_equal(np.asarray(out["x"]), [4.0, 4.0])
+
+
+def test_async_checkpointer_snapshot_isolated_from_donation(tmp_path):
+    """The host snapshot happens on the caller thread: mutating (or deleting)
+    the source tree after save_async must not corrupt the checkpoint."""
+    ck = store.AsyncCheckpointer(str(tmp_path))
+    x = np.ones(3, np.float32)
+    ck.save_async(0, {"x": x})
+    x *= 100.0  # simulates a donated/reused buffer
+    ck.wait()
+    _, out = store.restore_latest(str(tmp_path))
+    np.testing.assert_array_equal(np.asarray(out["x"]), np.ones(3))
+
+
+def test_async_checkpointer_error_propagates_on_wait(tmp_path):
+    blocker = tmp_path / "ckpt"
+    blocker.write_text("not a directory")  # save must fail
+    ck = store.AsyncCheckpointer(str(blocker))
+    ck.save_async(0, {"x": jnp.zeros(1)})
+    with pytest.raises(BaseException):
+        ck.wait()
+    # the error is cleared after being raised once
+    ck.wait()
+
+
+def test_async_checkpointer_concurrent_saves_and_waits(tmp_path):
+    """Hammer save_async/wait from several threads: the one-outstanding-save
+    contract plus join() must leave a committed, readable latest step."""
+    ck = store.AsyncCheckpointer(str(tmp_path), max_keep=None)
+    errors = []
+
+    def worker(tid):
+        try:
+            for i in range(3):
+                ck.save_async(tid * 10 + i, {"x": jnp.full(1, float(tid))})
+                ck.wait()
+        except BaseException as e:  # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(t,)) for t in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    ck.wait()
+    assert not errors
+    assert store.latest_step(str(tmp_path)) == 32
+    step, out = store.restore_latest(str(tmp_path))
+    assert out["x"].shape == (1,)

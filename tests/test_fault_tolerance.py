@@ -1,0 +1,123 @@
+"""distributed/fault_tolerance.py: watchdog thresholding, heartbeat
+dead-host detection, and remesh planning — the serve/train restart seams."""
+import pytest
+
+from repro.distributed.fault_tolerance import (
+    HeartbeatRegistry,
+    StepWatchdog,
+    plan_remesh,
+)
+
+# ---------------------------------------------------------------------------
+# StepWatchdog
+# ---------------------------------------------------------------------------
+
+
+def test_watchdog_quiet_during_warmup():
+    wd = StepWatchdog(threshold=2.0, warmup=5)
+    # a huge spike inside the warmup window is not flagged
+    flags = [wd.observe(dt) for dt in (1.0, 1.0, 50.0, 1.0, 1.0)]
+    assert flags == [False] * 5
+    assert wd.stragglers == []
+
+
+def test_watchdog_flags_threshold_crossing():
+    wd = StepWatchdog(threshold=2.0, alpha=0.5, warmup=2)
+    for _ in range(4):
+        wd.observe(1.0)  # ewma settles at 1.0
+    assert wd.observe(1.9) is False  # below 2x
+    assert wd.observe(10.0) is True  # way above 2x
+    assert len(wd.stragglers) == 1
+    assert wd.stragglers[0][1] == 10.0
+
+
+def test_watchdog_straggler_not_folded_into_baseline():
+    wd = StepWatchdog(threshold=2.0, alpha=0.5, warmup=1)
+    wd.observe(1.0)
+    wd.observe(1.0)
+    ewma_before = wd.ewma
+    assert wd.observe(100.0) is True
+    assert wd.ewma == ewma_before  # spike excluded from the EWMA
+    # normal steps keep adapting
+    wd.observe(1.2)
+    assert wd.ewma != ewma_before
+
+
+def test_watchdog_callback_invoked_with_context():
+    calls = []
+    wd = StepWatchdog(threshold=2.0, alpha=0.5, warmup=1,
+                      on_straggler=lambda i, dt, ewma: calls.append((i, dt, ewma)))
+    wd.observe(1.0)
+    wd.observe(1.0)
+    wd.observe(9.0)
+    assert len(calls) == 1
+    step, dt, ewma = calls[0]
+    assert step == 3 and dt == 9.0 and ewma == pytest.approx(1.0)
+
+
+def test_watchdog_first_observation_seeds_ewma():
+    wd = StepWatchdog(warmup=0)
+    assert wd.observe(3.0) is False
+    assert wd.ewma == 3.0
+
+
+# ---------------------------------------------------------------------------
+# HeartbeatRegistry
+# ---------------------------------------------------------------------------
+
+
+def test_heartbeat_alive_dead_partition():
+    reg = HeartbeatRegistry(timeout=60.0)
+    reg.beat(0, now=100.0)
+    reg.beat(1, now=130.0)
+    reg.beat(2, now=159.9)
+    assert reg.alive(now=160.0) == [1, 2]
+    assert reg.dead(now=160.0) == [0]
+    # a fresh beat resurrects the host
+    reg.beat(0, now=161.0)
+    assert reg.alive(now=165.0) == [0, 1, 2]
+    assert reg.dead(now=165.0) == []
+
+
+def test_heartbeat_boundary_is_dead():
+    reg = HeartbeatRegistry(timeout=10.0)
+    reg.beat(7, now=0.0)
+    assert reg.alive(now=9.999) == [7]
+    assert reg.dead(now=10.0) == [7]  # exactly timeout: dead
+
+
+def test_heartbeat_wall_clock_default():
+    reg = HeartbeatRegistry(timeout=60.0)
+    reg.beat(3)
+    assert reg.alive() == [3]
+
+
+# ---------------------------------------------------------------------------
+# plan_remesh
+# ---------------------------------------------------------------------------
+
+
+def test_plan_remesh_shrinks_data_axis():
+    plan = plan_remesh(n_hosts_alive=6, chips_per_host=4, model_parallelism=16)
+    # 24 chips, model=16 -> data=1 (data=2 would need 32)
+    assert plan["mesh_shape"] == (1, 16)
+    assert plan["chips_used"] == 16
+    assert plan["chips_idle"] == 8
+    assert plan["axes"] == ("data", "model")
+
+
+def test_plan_remesh_power_of_two_data():
+    plan = plan_remesh(n_hosts_alive=40, chips_per_host=4, model_parallelism=16)
+    # 160 chips / 16 = 10 replicas -> largest pow2 is 8
+    assert plan["mesh_shape"] == (8, 16)
+    assert plan["chips_idle"] == 160 - 8 * 16
+
+
+def test_plan_remesh_infeasible_returns_none():
+    assert plan_remesh(n_hosts_alive=3, chips_per_host=4, model_parallelism=16) is None
+    assert plan_remesh(n_hosts_alive=0) is None
+
+
+def test_plan_remesh_mentions_checkpoint_restore_path():
+    plan = plan_remesh(n_hosts_alive=8)
+    assert "restore" in plan["action"]

@@ -1,0 +1,414 @@
+"""Posterior-serving engine: bucketing, compile-once-per-bucket, padding
+neutrality, batch-axis discovery, Predictive's jit cache, the ServableModel
+registry, and mesh parity."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import distributions as dist, optim
+from repro.core import primitives as P
+from repro.infer import SVI, AutoNormal, Trace_ELBO, Predictive
+from repro.serve import (
+    CompiledServable,
+    ServableModel,
+    bucket_for,
+    clear_registry,
+    default_buckets,
+    get_servable,
+    list_servables,
+    register,
+    unregister,
+)
+
+DIM = 3
+
+
+def regression_model(x, y=None):
+    w = P.sample("w", dist.Normal(jnp.zeros(DIM), 1.0).to_event(1))
+    b = P.sample("b", dist.Normal(0.0, 1.0))
+    with P.plate("B", x.shape[0]):
+        mu = P.deterministic("mu", x @ w + b)
+        P.sample("y", dist.Normal(mu, 0.1), obs=y)
+
+
+@pytest.fixture(scope="module")
+def artifact():
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, DIM))
+    y = x @ jnp.arange(1.0, DIM + 1.0) + 0.5
+    guide = AutoNormal(regression_model)
+    svi = SVI(regression_model, guide, optim.Adam(0.05), Trace_ELBO())
+    state, _ = svi.run(jax.random.PRNGKey(1), 30, x, y=y)
+    params = svi.optim.get_params(state.optim_state)
+    return guide, params
+
+
+# ---------------------------------------------------------------------------
+# bucketing
+# ---------------------------------------------------------------------------
+
+
+def test_default_buckets_powers_of_two():
+    assert default_buckets(64) == (1, 2, 4, 8, 16, 32, 64)
+    assert default_buckets(1) == (1,)
+    assert default_buckets(24) == (1, 2, 4, 8, 16, 24)  # non-pow2 max kept
+
+
+def test_bucket_for_picks_smallest_fit():
+    buckets = (1, 2, 4, 8)
+    assert bucket_for(1, buckets) == 1
+    assert bucket_for(3, buckets) == 4
+    assert bucket_for(8, buckets) == 8
+    with pytest.raises(ValueError, match="exceeds the largest bucket"):
+        bucket_for(9, buckets)
+
+
+def test_default_buckets_rejects_nonpositive():
+    with pytest.raises(ValueError):
+        default_buckets(0)
+
+
+# ---------------------------------------------------------------------------
+# CompiledServable
+# ---------------------------------------------------------------------------
+
+
+def test_compiles_bounded_by_buckets_not_request_sizes():
+    def fn(key, batch):
+        return {"y": batch["x"] * 2.0}
+
+    eng = CompiledServable(fn, max_batch=16)
+    for n in (1, 3, 4, 5, 6, 7, 2, 8, 3, 5):  # 8 distinct sizes, 4 buckets
+        eng(jax.random.PRNGKey(n), {"x": jnp.arange(float(n))})
+    assert sorted(eng.buckets_touched) == [1, 2, 4, 8]
+    assert eng.num_traces == len(eng.buckets_touched) == 4
+
+
+def test_padding_is_invisible_to_callers():
+    """Result rows of a padded batch == result of the exact-size batch."""
+
+    def fn(key, batch):
+        return {"y": jnp.cumsum(batch["x"]) * 0 + batch["x"] * 3.0}
+
+    eng = CompiledServable(fn, buckets=[8])
+    x = jnp.arange(5.0)
+    out = eng(jax.random.PRNGKey(0), {"x": x})
+    np.testing.assert_allclose(np.asarray(out["y"]), np.asarray(x * 3.0))
+    assert out["y"].shape == (5,)
+
+
+def test_global_output_leaves_returned_whole():
+    def fn(key, batch):
+        return {"rows": batch["x"] + 1.0, "global": jnp.full(7, 2.0)}
+
+    eng = CompiledServable(fn, max_batch=8)
+    out = eng(jax.random.PRNGKey(0), {"x": jnp.zeros((3, 2))})
+    assert out["rows"].shape == (3, 2)
+    assert out["global"].shape == (7,)  # not sliced
+
+
+def test_non_leading_batch_axis_discovered():
+    """Outputs whose batch axis is not axis 0 (e.g. (draws, batch)) slice on
+    the right axis."""
+
+    def fn(key, batch):
+        return {"draws": jnp.zeros((5,))[:, None] + batch["x"][None, :]}
+
+    eng = CompiledServable(fn, max_batch=8)
+    out = eng(jax.random.PRNGKey(0), {"x": jnp.arange(3.0)})
+    assert out["draws"].shape == (5, 3)
+
+
+def test_explicit_out_batch_axes_override():
+    def fn(key, batch):
+        return {"y": batch["x"]}
+
+    eng = CompiledServable(fn, max_batch=4, out_batch_axes={"y": 0})
+    out = eng(jax.random.PRNGKey(0), {"x": jnp.arange(3.0)})
+    assert out["y"].shape == (3,)
+
+
+def test_mismatched_leading_dims_rejected():
+    eng = CompiledServable(lambda k, b: b, max_batch=4)
+    with pytest.raises(ValueError, match="disagree"):
+        eng(jax.random.PRNGKey(0), {"a": jnp.zeros(2), "b": jnp.zeros(3)})
+
+
+def test_oversized_batch_rejected():
+    eng = CompiledServable(lambda k, b: b, max_batch=4)
+    with pytest.raises(ValueError, match="exceeds the largest bucket"):
+        eng(jax.random.PRNGKey(0), {"x": jnp.zeros(5)})
+
+
+def test_same_bucket_same_key_rows_bit_identical():
+    """Within one bucket, a request's rows don't depend on the co-padded
+    row count: bucket shape fixes the randomness layout."""
+
+    def fn(key, batch):
+        noise = jax.random.normal(key, batch["x"].shape)
+        return {"y": batch["x"] + noise}
+
+    eng = CompiledServable(fn, buckets=[4])
+    key = jax.random.PRNGKey(3)
+    a = eng(key, {"x": jnp.ones(2)})["y"]
+    b = eng(key, {"x": jnp.ones(3)})["y"]
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b[:2]))
+
+
+# ---------------------------------------------------------------------------
+# Predictive compile-once
+# ---------------------------------------------------------------------------
+
+
+def test_predictive_jit_cache_stable(artifact):
+    guide, params = artifact
+    pred = Predictive(regression_model, guide=guide, params=params, num_samples=5)
+    x = jnp.ones((4, DIM))
+    assert pred.num_traces == 0
+    out1 = pred(jax.random.PRNGKey(0), x)
+    for i in range(5):  # fresh same-shape data: no retrace
+        pred(jax.random.PRNGKey(i), x + i)
+    assert pred.num_traces == 1
+    pred(jax.random.PRNGKey(9), jnp.ones((6, DIM)))  # new shape: one more
+    assert pred.num_traces == 2
+    assert out1["mu"].shape == (5, 4)
+
+
+def test_predictive_jit_matches_eager(artifact):
+    guide, params = artifact
+    x = jnp.ones((4, DIM))
+    key = jax.random.PRNGKey(42)
+    jitted = Predictive(regression_model, guide=guide, params=params, num_samples=3)
+    eager = Predictive(regression_model, guide=guide, params=params, num_samples=3,
+                       jit_compile=False)
+    o1, o2 = jitted(key, x), eager(key, x)
+    assert eager.num_traces == 0
+    for k in o1:
+        np.testing.assert_allclose(
+            np.asarray(o1[k]), np.asarray(o2[k]), rtol=1e-6, atol=1e-6
+        )
+
+
+def test_predictive_static_scalar_args_stay_concrete():
+    """Non-array args (plate-size ints) must stay static under the jit —
+    the pre-review regression was a TracerBoolConversionError here."""
+
+    def model_n(n):
+        with P.plate("N", n):
+            P.sample("obs", dist.Normal(0.0, 1.0))
+
+    pred = Predictive(model_n, num_samples=2)
+    out = pred(jax.random.PRNGKey(0), 4)
+    assert out["obs"].shape == (2, 4)
+    pred(jax.random.PRNGKey(1), 4)
+    assert pred.num_traces == 1
+    pred(jax.random.PRNGKey(2), 5)  # changed static value: one fresh trace
+    assert pred.num_traces == 2
+
+
+def test_predictive_params_refresh_no_retrace():
+    """Updating pred.params (a checkpoint refresh) must take effect on the
+    next call WITHOUT retracing — params ride the traced signature."""
+
+    def model(x=None):
+        w = P.param("w", jnp.asarray(0.0))
+        P.sample("y", dist.Normal(w, 0.01))
+
+    pred = Predictive(model, guide=lambda x=None: None,
+                      params={"w": jnp.asarray(1.0)}, num_samples=3)
+    o1 = pred(jax.random.PRNGKey(0))
+    pred.params = {"w": jnp.asarray(100.0)}
+    o2 = pred(jax.random.PRNGKey(0))
+    assert abs(float(o1["y"][0]) - 1.0) < 0.5
+    assert abs(float(o2["y"][0]) - 100.0) < 0.5
+    assert pred.num_traces == 1
+
+
+def test_predictive_varying_float_arg_no_cache_growth():
+    """Python floats are DATA: a per-request temperature must ride the
+    traced signature, not mint one executable per value."""
+
+    def model(scale):
+        P.sample("y", dist.Normal(0.0, scale))
+
+    pred = Predictive(model, num_samples=2)
+    for s in (0.5, 1.0, 2.0, 3.5):
+        pred(jax.random.PRNGKey(0), s)
+    assert pred.num_traces == 1
+
+
+def test_zero_row_request_rejected_cleanly():
+    eng = CompiledServable(lambda k, b: b, max_batch=4)
+    with pytest.raises(ValueError, match="0 rows"):
+        eng(jax.random.PRNGKey(0), {"x": jnp.zeros((0, 3))})
+
+
+def test_predictive_posterior_samples_jitted():
+    def model(data=None):
+        loc = P.sample("loc", dist.Normal(0.0, 1.0))
+        with P.plate("N", 3):
+            P.sample("obs", dist.Normal(loc, 1.0), obs=data)
+
+    post = {"loc": jnp.linspace(-1, 1, 5)}
+    pred = Predictive(model, posterior_samples=post)
+    out = pred(jax.random.PRNGKey(0))
+    assert out["obs"].shape == (5, 3)
+    pred(jax.random.PRNGKey(1))
+    assert pred.num_traces == 1
+
+
+# ---------------------------------------------------------------------------
+# ServableModel + registry
+# ---------------------------------------------------------------------------
+
+
+def test_from_svi_matches_direct_predictive(artifact):
+    guide, params = artifact
+    sm = ServableModel.from_svi("m", regression_model, guide, params,
+                                num_samples=4, buckets=[4])
+    x = jax.random.normal(jax.random.PRNGKey(5), (4, DIM))
+    key = jax.random.PRNGKey(6)
+    served = sm.predict(key, x)
+    direct = Predictive(regression_model, guide=guide, params=params,
+                        num_samples=4)(key, x)
+    for k in direct:
+        np.testing.assert_allclose(
+            np.asarray(served[k]), np.asarray(direct[k]), rtol=1e-6, atol=1e-6
+        )
+
+
+def test_from_mcmc_chain_shaped():
+    """Chain-grouped MCMC samples fan out per request row; the sample store
+    itself is a global (unsliced) output leaf."""
+
+    def reg(x):
+        loc = P.sample("loc", dist.Normal(0.0, 1.0))
+        with P.plate("B", x.shape[0]):
+            P.sample("obs", dist.Normal(loc + x, 1.0))
+
+    sm = ServableModel.from_mcmc("mc", reg, {"loc": jnp.zeros((2, 5))},
+                                 batch_ndims=2, max_batch=4)
+    out = sm.predict(jax.random.PRNGKey(1), jnp.arange(3.0))
+    assert out["obs"].shape == (2, 5, 3)
+    assert out["loc"].shape == (2, 5)  # global leaf: not sliced
+    sm.predict(jax.random.PRNGKey(2), jnp.arange(4.0))  # same bucket
+    assert sm.num_traces == 1
+
+
+def test_from_discrete_decoder_gmm():
+    locs = jnp.asarray([-2.0, 3.0])
+
+    def gmm(data):
+        with P.plate("N", data.shape[0]):
+            z = P.sample("z", dist.Categorical(jnp.asarray([0.5, 0.5])),
+                         infer={"enumerate": "parallel"})
+            P.sample("obs", dist.Normal(locs[z], 0.5), obs=data)
+
+    sm = ServableModel.from_discrete("dec", gmm, temperature=0, max_batch=8)
+    data = jnp.asarray([-2.1, -1.9, 3.2, 2.8, -2.0])
+    out = sm.predict(jax.random.PRNGKey(0), data)
+    np.testing.assert_array_equal(np.asarray(out["z"]), [0, 0, 1, 1, 0])
+    # compile-once: one more size in the same bucket
+    sm.predict(jax.random.PRNGKey(1), data[:4])
+    assert sm.num_traces == len(sm.buckets_touched)
+
+
+def test_from_checkpoint_warm_start(artifact, tmp_path):
+    from repro.checkpoint import store
+
+    guide, params = artifact
+    store.save(str(tmp_path), 7, {"params": params})
+    sm = ServableModel.from_checkpoint(
+        "warm", regression_model, str(tmp_path),
+        guide=AutoNormal(regression_model), num_samples=4, buckets=[4],
+        # fresh autoguide: show it the model in TRAINING configuration (y
+        # observed) via dummy args, or it would treat y as a latent
+        guide_args=(jnp.zeros((1, DIM)),),
+        guide_kwargs={"y": jnp.zeros(1)},
+    )
+    assert sm.restored_step == 7
+    assert sm.kind == "checkpoint"
+    x = jax.random.normal(jax.random.PRNGKey(5), (4, DIM))
+    key = jax.random.PRNGKey(6)
+    served = sm.predict(key, x)
+    direct = ServableModel.from_svi("direct", regression_model, guide, params,
+                                    num_samples=4, buckets=[4]).predict(key, x)
+    for k in direct:
+        np.testing.assert_allclose(
+            np.asarray(served[k]), np.asarray(direct[k]), rtol=1e-5, atol=1e-5
+        )
+
+
+def test_refresh_hot_swaps_artifact_without_recompile(artifact):
+    """A same-shaped params refresh must change served outputs immediately
+    while keeping compiles == buckets (state rides the jit signature, it is
+    not baked into the bucket executables)."""
+    guide, params = artifact
+    sm = ServableModel.from_svi("hot", regression_model, guide, params,
+                                num_samples=4, buckets=[4])
+    x = jnp.ones((3, DIM))
+    key = jax.random.PRNGKey(0)
+    before = sm.predict(key, x)
+    shifted = jax.tree.map(lambda p: p + 1.0, params)
+    sm.refresh(params=shifted)
+    after = sm.predict(key, x)
+    assert sm.num_traces == 1  # refresh did not recompile
+    assert not np.allclose(np.asarray(before["mu"]), np.asarray(after["mu"]))
+    with pytest.raises(KeyError, match="unknown state key"):
+        sm.refresh(samples={})
+    stateless = ServableModel("raw", lambda k, b: {"y": b}, buckets=[4])
+    with pytest.raises(ValueError, match="no artifact state"):
+        stateless.refresh(params={})
+
+
+def test_registry_roundtrip(artifact):
+    guide, params = artifact
+    clear_registry()
+    sm = ServableModel.from_svi("reg-a", regression_model, guide, params)
+    register(sm)
+    assert get_servable("reg-a") is sm
+    assert list_servables() == ["reg-a"]
+    with pytest.raises(ValueError, match="already registered"):
+        register(ServableModel.from_svi("reg-a", regression_model, guide, params))
+    register(ServableModel.from_svi("reg-a", regression_model, guide, params),
+             replace=True)
+    with pytest.raises(KeyError, match="no servable"):
+        get_servable("nope")
+    unregister("reg-a")
+    assert list_servables() == []
+
+
+# ---------------------------------------------------------------------------
+# mesh parity
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_serving_bit_identical_on_one_device(artifact):
+    from repro.distributed.sharding import default_mesh
+
+    guide, params = artifact
+    x = jax.random.normal(jax.random.PRNGKey(7), (6, DIM))
+    key = jax.random.PRNGKey(8)
+    plain = ServableModel.from_svi("p", regression_model, guide, params,
+                                   num_samples=4, max_batch=8)
+    sharded = ServableModel.from_svi("s", regression_model, guide, params,
+                                     num_samples=4, max_batch=8,
+                                     mesh=default_mesh())
+    o1, o2 = plain.predict(key, x), sharded.predict(key, x)
+    for a, b in zip(jax.tree_util.tree_leaves(o1), jax.tree_util.tree_leaves(o2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_donate_false_on_cpu_by_default():
+    eng = CompiledServable(lambda k, b: b, max_batch=4)
+    assert eng.donate == (jax.default_backend() != "cpu")
+    if os.environ.get("JAX_PLATFORMS", "cpu") == "cpu":
+        assert not eng.donate
+    # forced donation still returns correct results (pad copy is engine-owned)
+    eng2 = CompiledServable(lambda k, b: {"y": b["x"] + 1}, buckets=[4], donate=True)
+    x = jnp.arange(4.0)  # exact bucket size: pad copy must still protect x
+    out = eng2(jax.random.PRNGKey(0), {"x": x})
+    np.testing.assert_array_equal(np.asarray(x), np.arange(4.0))
+    assert out["y"].shape == (4,)
