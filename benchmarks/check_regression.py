@@ -1,32 +1,42 @@
-"""Bench-regression gate: diff freshly written BENCH_*.json steady-state
-numbers against the committed baselines (HEAD) and fail on regression.
+"""Bench-regression gate: diff freshly written BENCH_*.json numbers against
+the committed baselines (HEAD) and fail on regression.
 
 Usage: python benchmarks/check_regression.py BENCH_enum.json BENCH_serve.json
 
 For each file, the committed baseline is read from ``git show HEAD:<file>``
 (a file with no committed baseline is skipped with a note — its first run
 commits the baseline). The two JSON trees are walked in parallel; numeric
-leaves whose key names a steady-state metric are compared:
+leaves whose key names a gated metric are compared:
 
-* lower-is-better  (``steady_ms``, ``step_ms``, ``p50_ms``, ``p99_ms``,
-  ``bucketed_ms_per_req``): fail when
+* lower-is-better steady-state (``steady_ms``, ``step_ms``, ``p50_ms``,
+  ``p99_ms``, ``bucketed_ms_per_req``): fail when
   ``fresh > base * (1 + tol) + abs_slack``
 * higher-is-better (``requests_per_sec``, ``rows_per_sec``,
   ``speedup_steady``): fail when ``fresh < base / (1 + tol)``
+* lower-is-better cold-compile (``cold_s``, ``cold_compile_s``,
+  ``viterbi_s``): fail when ``fresh > base * (1 + cold_tol) + cold_abs_s`` —
+  a separate, looser tolerance, because compile time is noisier than
+  steady-state but a silent 2x compile regression is exactly what the
+  contraction planner exists to prevent.
 
-Cold/compile times and the naive-baseline numbers are deliberately NOT
-gated (they measure the machine and the rejected path, not the engine).
-List entries are matched positionally, but only when their identifying
-fields (``T``/``K``/``dispatch``) agree — a reordered or resized benchmark
-matrix skips the mismatched entries instead of comparing apples to pears.
+The naive-baseline numbers are deliberately NOT gated (they measure the
+rejected path, not the engine). List entries are matched positionally, but
+only when their identifying fields (``T``/``K``/``dispatch``) agree — a
+reordered or resized benchmark matrix skips the mismatched entries instead
+of comparing apples to pears.
 
 Knobs (env):
-  REPRO_BENCH_TOLERANCE  relative tolerance, default 0.25 (= fail >25%
-                         regression). Hosted CI runners with noisy/slower
-                         hardware than the baseline machine should raise it.
-  REPRO_BENCH_ABS_MS     absolute slack added to lower-is-better *_ms
-                         gates, default 0.5 — keeps sub-millisecond
-                         metrics from failing on scheduler noise.
+  REPRO_BENCH_TOLERANCE       relative tolerance on steady-state metrics,
+                              default 0.25 (= fail >25% regression). Hosted
+                              CI runners with noisy/slower hardware than the
+                              baseline machine should raise it.
+  REPRO_BENCH_ABS_MS          absolute slack added to lower-is-better *_ms
+                              gates, default 0.5 — keeps sub-millisecond
+                              metrics from failing on scheduler noise.
+  REPRO_BENCH_COLD_TOLERANCE  relative tolerance on cold-compile metrics,
+                              default 1.0 (= fail >2x regression).
+  REPRO_BENCH_COLD_ABS_S      absolute slack (seconds) on cold-compile
+                              gates, default 2.0.
 """
 
 import json
@@ -39,6 +49,7 @@ REPO = Path(__file__).resolve().parent.parent
 
 LOWER_BETTER = {"steady_ms", "step_ms", "p50_ms", "p99_ms", "bucketed_ms_per_req"}
 HIGHER_BETTER = {"requests_per_sec", "rows_per_sec", "speedup_steady"}
+COLD_LOWER_BETTER = {"cold_s", "cold_compile_s", "viterbi_s"}
 IDENTITY_KEYS = ("T", "K", "dispatch", "bench")
 
 
@@ -66,11 +77,11 @@ def walk(base, fresh, path, rows):
             walk(b, f, f"{path}[{i}]", rows)
     elif isinstance(base, (int, float)) and isinstance(fresh, (int, float)):
         key = path.rsplit(".", 1)[-1].split("[")[0]
-        if key in LOWER_BETTER or key in HIGHER_BETTER:
+        if key in LOWER_BETTER or key in HIGHER_BETTER or key in COLD_LOWER_BETTER:
             rows.append((path, key, float(base), float(fresh)))
 
 
-def gate(name: str, tol: float, abs_ms: float) -> int:
+def gate(name: str, tol: float, abs_ms: float, cold_tol: float, cold_abs_s: float) -> int:
     fresh_path = REPO / name
     if not fresh_path.exists():
         print(f"FAIL {name}: fresh file missing (did the bench stage run?)")
@@ -83,22 +94,25 @@ def gate(name: str, tol: float, abs_ms: float) -> int:
     rows = []
     walk(base, fresh, "", rows)
     failures = 0
-    print(f"\n== {name} (tolerance {tol:.0%}, abs slack {abs_ms}ms)")
+    print(f"\n== {name} (steady tol {tol:.0%} +{abs_ms}ms, "
+          f"cold tol {cold_tol:.0%} +{cold_abs_s}s)")
     print(f"{'metric':<44} {'base':>10} {'fresh':>10} {'delta':>8}")
     for path, key, b, f in rows:
         if key in LOWER_BETTER:
             limit = b * (1 + tol) + abs_ms
             bad = f > limit
-            delta = (f - b) / b if b else 0.0
+        elif key in COLD_LOWER_BETTER:
+            limit = b * (1 + cold_tol) + cold_abs_s
+            bad = f > limit
         else:
             limit = b / (1 + tol)
             bad = f < limit
-            delta = (f - b) / b if b else 0.0
+        delta = (f - b) / b if b else 0.0
         verdict = "FAIL" if bad else "ok"
         print(f"{path:<44} {b:>10.3f} {f:>10.3f} {delta:>+7.1%} {verdict}")
         failures += bad
     if not rows:
-        print("  (no comparable steady-state metrics found)")
+        print("  (no comparable gated metrics found)")
     return failures
 
 
@@ -108,12 +122,15 @@ def main(argv=None) -> int:
     ]
     tol = float(os.environ.get("REPRO_BENCH_TOLERANCE", "0.25"))
     abs_ms = float(os.environ.get("REPRO_BENCH_ABS_MS", "0.5"))
-    failures = sum(gate(n, tol, abs_ms) for n in names)
+    cold_tol = float(os.environ.get("REPRO_BENCH_COLD_TOLERANCE", "1.0"))
+    cold_abs_s = float(os.environ.get("REPRO_BENCH_COLD_ABS_S", "2.0"))
+    failures = sum(gate(n, tol, abs_ms, cold_tol, cold_abs_s) for n in names)
     if failures:
-        print(f"\n{failures} steady-state metric(s) regressed beyond "
-              f"{tol:.0%} (+{abs_ms}ms slack). If the regression is "
-              f"intended, commit the fresh BENCH_*.json as the new baseline; "
-              f"for noisy runners set REPRO_BENCH_TOLERANCE.")
+        print(f"\n{failures} gated metric(s) regressed beyond tolerance "
+              f"(steady {tol:.0%} +{abs_ms}ms; cold {cold_tol:.0%} "
+              f"+{cold_abs_s}s). If the regression is intended, commit the "
+              f"fresh BENCH_*.json as the new baseline; for noisy runners "
+              f"raise REPRO_BENCH_TOLERANCE / REPRO_BENCH_COLD_TOLERANCE.")
         return 1
     print("\nbench-regression gate: OK")
     return 0

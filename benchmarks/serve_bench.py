@@ -213,6 +213,15 @@ def main(argv=None):
     ap.add_argument("--json", default=str(REPO / "BENCH_serve.json"))
     args = ap.parse_args(argv)
 
+    from repro.launch.compile_cache import (
+        compilation_cache_stats,
+        enable_compilation_cache,
+    )
+
+    cache_dir = enable_compilation_cache()
+    if cache_dir is not None:
+        print(f"# persistent compilation cache: {cache_dir}")
+
     if args.smoke:
         train_steps, n_requests, max_batch, num_samples, n_clients = 20, 40, 16, 8, 4
     else:
@@ -240,6 +249,9 @@ def main(argv=None):
     results["sharding"] = bench_sharding_parity(
         model, guide, params, num_samples=num_samples,
     )
+
+    results["compilation_cache"] = compilation_cache_stats()
+    print(f"# compilation cache: {results['compilation_cache']}")
 
     Path(args.json).write_text(json.dumps(results, indent=2) + "\n")
     print(f"\nwrote {args.json}")

@@ -7,6 +7,7 @@ from .autoguide import (
 )
 from ..core.handlers import config_enumerate
 from .elbo import ELBO, RenyiELBO, Trace_ELBO, TraceMeanField_ELBO, vectorize_particles
+from .contract import clear_plan_cache, plan_cache_stats
 from .traceenum_elbo import TraceEnum_ELBO, discrete_marginals, infer_discrete
 from .tracegraph_elbo import TraceGraph_ELBO
 from .importance import Importance
@@ -28,8 +29,10 @@ __all__ = [
     "TraceEnum_ELBO",
     "TraceGraph_ELBO",
     "TraceMeanField_ELBO",
+    "clear_plan_cache",
     "config_enumerate",
     "discrete_marginals",
+    "plan_cache_stats",
     "infer_discrete",
     "Importance",
     "HMC",

@@ -1,0 +1,65 @@
+"""Planner/executor contraction engine for tensor variable elimination.
+
+Split out of `repro.infer.traceenum_elbo` so the contraction *plan* is an
+explicit compiler artifact: `planner.plan_elimination` turns the structural
+view of a factor graph into an inspectable `ContractionPlan`, `cache` keys
+plans on a structural fingerprint (shapes + incidence, never values), and
+`executor` lowers plan segments to the fused semiring kernels or a
+plan-level `lax.scan`. `executor.contract_log_factors` is the ordinal-level
+entry point every enumeration engine calls.
+"""
+from .cache import PLAN_CACHE, clear_plan_cache, plan_cache_stats
+from .executor import (
+    _ve_eliminate,
+    contract_log_factors,
+    execute_plan,
+    greedy_eliminate,
+    planned_contraction,
+)
+from .planner import (
+    ChainStep,
+    ContractionPlan,
+    ElimStep,
+    chain_threshold,
+    plan_elimination,
+    plan_knobs,
+)
+from .structure import (
+    FactorStruct,
+    _dispatch_mode,
+    _from_matrix,
+    _from_vector,
+    _logsumexp_op,
+    _max_op,
+    _to_matrix,
+    factor_structs,
+    fingerprint,
+    semiring_of,
+)
+
+__all__ = [
+    "PLAN_CACHE",
+    "ChainStep",
+    "ContractionPlan",
+    "ElimStep",
+    "FactorStruct",
+    "chain_threshold",
+    "clear_plan_cache",
+    "contract_log_factors",
+    "execute_plan",
+    "factor_structs",
+    "fingerprint",
+    "greedy_eliminate",
+    "plan_cache_stats",
+    "plan_elimination",
+    "plan_knobs",
+    "planned_contraction",
+    "semiring_of",
+    "_dispatch_mode",
+    "_from_matrix",
+    "_from_vector",
+    "_logsumexp_op",
+    "_max_op",
+    "_to_matrix",
+    "_ve_eliminate",
+]

@@ -1,0 +1,89 @@
+"""Plan cache: contraction plans are compiler artifacts keyed on the
+*structural* fingerprint of the factor graph (dim sizes + factor incidence +
+scale grouping — never array values), so repeated shapes — every SVI step's
+retrace, every serve bucket, every same-structure model instantiation —
+skip planning entirely.
+
+Hit/miss/time stats are surfaced via `plan_cache_stats()` (printed by the
+bench stage and asserted by the plan-cache tests). ``REPRO_ENUM_PLAN_CACHE=0``
+disables caching (every elimination replans); ``REPRO_ENUM_PLAN_CACHE_SIZE``
+bounds the cache (default 256 plans, FIFO eviction).
+"""
+from __future__ import annotations
+
+import os
+import threading
+import time
+from collections import OrderedDict
+from typing import Callable, Dict, Tuple
+
+from .planner import ContractionPlan
+
+
+class PlanCache:
+    """Thread-safe structural-fingerprint -> `ContractionPlan` cache."""
+
+    def __init__(self) -> None:
+        self._plans: "OrderedDict[Tuple, ContractionPlan]" = OrderedDict()
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+        self.plan_time_s = 0.0
+
+    @staticmethod
+    def _enabled() -> bool:
+        return os.environ.get("REPRO_ENUM_PLAN_CACHE", "1").lower() not in (
+            "0", "false", "off",
+        )
+
+    @staticmethod
+    def _maxsize() -> int:
+        return max(1, int(os.environ.get("REPRO_ENUM_PLAN_CACHE_SIZE", "256")))
+
+    def get_or_plan(self, key: Tuple, build: Callable[[], ContractionPlan]) -> ContractionPlan:
+        if self._enabled():
+            with self._lock:
+                plan = self._plans.get(key)
+                if plan is not None:
+                    self.hits += 1
+                    return plan
+        t0 = time.perf_counter()
+        plan = build()
+        dt = time.perf_counter() - t0
+        with self._lock:
+            self.misses += 1
+            self.plan_time_s += dt
+            if self._enabled():
+                self._plans[key] = plan
+                while len(self._plans) > self._maxsize():
+                    self._plans.popitem(last=False)
+        return plan
+
+    def stats(self) -> Dict:
+        with self._lock:
+            return {
+                "hits": self.hits,
+                "misses": self.misses,
+                "size": len(self._plans),
+                "plan_time_s": round(self.plan_time_s, 6),
+            }
+
+    def clear(self) -> None:
+        with self._lock:
+            self._plans.clear()
+            self.hits = 0
+            self.misses = 0
+            self.plan_time_s = 0.0
+
+
+PLAN_CACHE = PlanCache()
+
+
+def plan_cache_stats() -> Dict:
+    """Hit/miss/size/planning-time counters of the global plan cache."""
+    return PLAN_CACHE.stats()
+
+
+def clear_plan_cache() -> None:
+    """Drop all cached plans and reset the counters (tests, benchmarks)."""
+    PLAN_CACHE.clear()

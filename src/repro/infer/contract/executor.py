@@ -1,0 +1,318 @@
+"""Plan executor + the ordinal-level contraction driver.
+
+`_ve_eliminate` is the planner/executor seam: in ``auto`` dispatch it
+fingerprints the factor graph, fetches (or builds) a `ContractionPlan` from
+the plan cache, and executes it; ``dispatch="pairwise"`` bypasses planning
+entirely and runs the legacy greedy loop — kept verbatim so the pre-planner
+path stays reachable and bit-identical.
+
+Chain segments lower three ways (chosen by the planner's cost model):
+
+* ``scan``  — a plan-level `jax.lax.scan` over the stacked edge matrices.
+  The traced graph is O(1) in chain length (one stack + one scan op), and
+  with an absorbed terminal the carry is a K-vector, so the steady-state
+  work is the same O(T K^2) matvec stream as the greedy backward pass —
+  without its superlinear compile-time pathology.
+* ``tree``  — `ops.hmm_scan`, the O(log T)-depth associative semiring tree
+  (parallel hardware / cumulative marginals).
+* ``folds`` — sequential `ops.semiring_matmul` folds (ragged cardinalities
+  or 2-edge chains).
+
+`ElimStep`s execute exactly one greedy elimination each, so a plan with no
+chain steps performs the same ops as the greedy loop in the same order.
+"""
+from __future__ import annotations
+
+from typing import Dict, FrozenSet, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.scipy import special as jsp
+
+from ...kernels import ops as kernel_ops
+from .cache import PLAN_CACHE
+from .planner import ChainStep, ContractionPlan, plan_elimination, plan_knobs
+from .structure import (
+    _add_all,
+    _dispatch_mode,
+    _enum_dims,
+    _from_matrix,
+    _from_vector,
+    _logsumexp_op,
+    _reduce_dims,
+    _scaled,
+    _to_matrix,
+    _to_vector,
+    _uniform_scale,
+    factor_structs,
+    fingerprint,
+    semiring_of,
+)
+
+# ---------------------------------------------------------------------------
+# legacy greedy path (dispatch="pairwise") — bit-identical to the pre-planner
+# eliminator
+# ---------------------------------------------------------------------------
+
+
+def greedy_eliminate(ts, dims, pool: FrozenSet[int], sum_op):
+    """Variable elimination over (tensor, pending_scale) pairs: drop each
+    enum dim by combining only the factors that carry it, most-negative
+    (= last-allocated) dim first. For a sequentially-sampled chain
+    z_1 -> ... -> z_T this is the backward algorithm — O(T K^2) work but
+    O(T) sequential XLA ops and O(T^2) trace-time Python. A group's pending
+    scale resolves (multiplies) as soon as its result carries no more enum
+    dims."""
+    for d in sorted(dims):
+        group = [(t, s) for t, s in ts if d in _enum_dims(t, pool)]
+        rest = [(t, s) for t, s in ts if d not in _enum_dims(t, pool)]
+        if not group:
+            continue
+        scale = _uniform_scale([s for _, s in group])
+        t = _reduce_dims(_add_all([t for t, _ in group]), (d,), sum_op)
+        if scale is not None and not _enum_dims(t, pool):
+            t, scale = t * scale, None
+        ts = rest + [(t, scale)]
+    return ts
+
+
+# ---------------------------------------------------------------------------
+# chain-segment lowerings
+# ---------------------------------------------------------------------------
+
+
+def _stack_bcast(xs: List[jax.Array], event_rank: int, axis: int) -> jax.Array:
+    batch = jnp.broadcast_shapes(*[x.shape[: x.ndim - event_rank] for x in xs])
+    return jnp.stack(
+        [jnp.broadcast_to(x, batch + x.shape[x.ndim - event_rank:]) for x in xs],
+        axis=axis,
+    )
+
+
+def _run_scan(step: ChainStep, factors, semiring: str) -> jax.Array:
+    """Roll the ordered semiring product of a chain's edge matrices through
+    one forward `lax.scan`, so the traced graph stays O(1) in chain length.
+
+    The sweep reproduces the greedy loop's float-op association exactly:
+    edge t's matrix is pre-folded with the unaries of its ROW dim D_t (the
+    same `(edge + unary) + carry` add order the greedy group uses), and each
+    step reduces over D_t — greedy's most-negative-first elimination. With
+    `absorb`, edge 0 also folds D_0's unaries and is reduced OUTSIDE the
+    scan (no `+ zeros-carry` in the first step), so a scan-lowered uniform
+    chain is bit-identical to ``dispatch="pairwise"``, with a vector carry —
+    the O(T K^2) backward pass. Without `absorb` a matrix carry keeps D_0
+    alive. Assembly is vectorized — edge matrices are stacked once and the
+    unary folds become ONE stacked row-vector add — because at steady state
+    a chain of T small matvecs is dominated by op dispatch, not flops."""
+    red = jnp.max if semiring == "max" else jsp.logsumexp
+    mats = [
+        _to_matrix(_add_all([factors[i][0] for i in ids]), step.path[t], step.path[t + 1])
+        for t, ids in enumerate(step.edges)
+    ]
+    stacked = _stack_bcast(mats, 2, axis=0)  # (m, batch..., K, K)
+    # fold each dim's unaries into the edge leaving it, on the row side:
+    # M_t[i, j] + u_t[i], as one stacked broadcast add
+    rows = []
+    any_unary = False
+    for t in range(len(step.edges)):
+        ids = list(step.absorbed) if t == 0 else list(step.folded[t])
+        if ids:
+            any_unary = True
+            rows.append(
+                _to_vector(_add_all([factors[i][0] for i in ids]), step.path[t])
+            )
+        else:
+            rows.append(jnp.zeros(stacked.shape[-2:-1], stacked.dtype))
+    if any_unary:
+        stacked = stacked + _stack_bcast(rows, 1, axis=0)[..., :, None]
+    unroll = 8 if len(mats) >= 9 else 1
+    if step.absorb:
+        # c_{t+1}[j] = ⊕_i M_t[i, j] + c_t[i]; the first reduction runs
+        # outside the scan so no zero-carry add perturbs bit-identity
+        init = red(stacked[0], axis=-2)
+
+        def body(c, m):
+            return red(m + c[..., :, None], axis=-2), None
+
+        c, _ = jax.lax.scan(body, init, stacked[1:], unroll=unroll)
+        return c  # (batch..., K_m)
+    # matrix carry: C_{t+1} = C_t ⊗ M_t (semiring matmul in the scan body)
+    init = stacked[0]
+
+    def body(c, m):
+        return red(c[..., :, :, None] + m[..., None, :, :], axis=-2), None
+
+    c, _ = jax.lax.scan(body, init, stacked[1:], unroll=unroll)
+    return c  # (batch..., K_0, K_m)
+
+
+def _run_chain(step: ChainStep, factors, sum_op, semiring: str):
+    """Execute one chain segment: assemble edge matrices (merging parallel
+    factors and folding interior unaries exactly as the greedy path would
+    add them), lower, and re-embed the result into right-aligned form."""
+    consumed = [i for ids in step.edges for i in ids]
+    consumed += [i for ids in step.folded for i in ids]
+    consumed += list(step.absorbed)
+    scale = _uniform_scale([factors[i][1] for i in consumed])
+
+    if step.lower == "scan":
+        res = _run_scan(step, factors, semiring)
+        if step.absorb:
+            return _from_vector(res, step.path[-1]), scale
+        return _from_matrix(res, step.path[0], step.path[-1]), scale
+
+    # tree/folds lowerings keep the legacy per-edge column-side folds
+    # (bit-compatible with the pre-planner kernel dispatch); the planner
+    # never emits absorb for them
+    assert not step.absorb, "terminal absorption is a scan-only lowering"
+    mats = []
+    for t, ids in enumerate(step.edges):
+        tensor = _add_all([factors[i][0] for i in ids])
+        for u in step.folded[t + 1]:  # interior unaries fold into the entering edge
+            tensor = tensor + factors[u][0]
+        mats.append(_to_matrix(tensor, step.path[t], step.path[t + 1]))
+    if step.lower == "tree" and len(mats) >= 3:
+        res = kernel_ops.hmm_scan(_stack_bcast(mats, 2, axis=-3), semiring=semiring)
+    else:  # matmul-shaped (one interior dim) or ragged cardinalities
+        res = mats[0]
+        for m in mats[1:]:
+            res = kernel_ops.semiring_matmul(res, m, semiring=semiring)
+    return _from_matrix(res, step.path[0], step.path[-1]), scale
+
+
+def execute_plan(
+    plan: ContractionPlan, ts, pool: FrozenSet[int], sum_op, semiring: str
+):
+    """Run a `ContractionPlan` against concrete (tensor, pending_scale)
+    factors. Factor ids index the growing list: inputs first, then one
+    appended result per step. Returns the surviving factors in id order —
+    the same order the greedy loop leaves them in."""
+    factors: List[Optional[Tuple]] = list(ts)
+    for step in plan.steps:
+        if isinstance(step, ChainStep):
+            t, scale = _run_chain(step, factors, sum_op, semiring)
+        else:
+            group = [factors[i] for i in step.group]
+            scale = _uniform_scale([s for _, s in group])
+            t = _reduce_dims(_add_all([t for t, _ in group]), (step.dim,), sum_op)
+            if scale is not None and not _enum_dims(t, pool):
+                t, scale = t * scale, None
+        assert step.out == len(factors), "plan ids out of sync with executor"
+        factors.append((t, scale))
+    return [factors[i] for i in plan.outputs]
+
+
+# ---------------------------------------------------------------------------
+# the planner/executor seam
+# ---------------------------------------------------------------------------
+
+
+def _ve_eliminate(ts, dims, pool: FrozenSet[int], sum_op, dispatch: Optional[str] = None):
+    """Eliminate `dims` from (tensor, pending_scale) factors. ``auto``
+    dispatch plans (or fetches a cached plan for) the contraction and
+    executes it; ``pairwise`` — or a custom `sum_op` with no semiring
+    lowering — runs the legacy greedy loop."""
+    if not dims:
+        return ts
+    mode = _dispatch_mode(dispatch)
+    semiring = semiring_of(sum_op)
+    if mode == "pairwise" or semiring is None:
+        return greedy_eliminate(ts, dims, pool, sum_op)
+    structs = factor_structs(ts, pool)
+    knobs = plan_knobs()
+    key = fingerprint(structs, frozenset(dims), semiring, knobs)
+    plan = PLAN_CACHE.get_or_plan(
+        key,
+        lambda: plan_elimination(
+            structs, frozenset(dims), semiring=semiring, knobs=knobs
+        ),
+    )
+    return execute_plan(plan, ts, pool, sum_op, semiring)
+
+
+def planned_contraction(
+    ts, dims, pool: FrozenSet[int], semiring: str = "logsumexp"
+) -> ContractionPlan:
+    """Plan (without executing) the elimination of `dims` — the inspection
+    entry point: `planned_contraction(...).describe()` shows the schedule
+    the auto dispatch would run."""
+    structs = factor_structs(ts, pool)
+    return plan_elimination(
+        structs, frozenset(dims), semiring=semiring, knobs=plan_knobs()
+    )
+
+
+# ---------------------------------------------------------------------------
+# ordinal-level driver (plate-aware tensor variable elimination)
+# ---------------------------------------------------------------------------
+
+
+def contract_log_factors(
+    factors: List[Tuple[FrozenSet, jax.Array, object]],
+    depth: Dict,
+    pool: FrozenSet[int],
+    keep_dims: FrozenSet[int] = frozenset(),
+    keep_frames: FrozenSet = frozenset(),
+    sum_op=_logsumexp_op,
+    dispatch: Optional[str] = None,
+) -> jax.Array:
+    """Plate-aware tensor variable elimination in log space.
+
+    Eliminates every enum dim not in `keep_dims` (via `sum_op`, keepdims) and
+    sums out every plate frame not in `keep_frames`, processing ordinals
+    innermost-first so that each enum dim is eliminated at the shallowest
+    ordinal where it still appears — i.e. inside its own plate context but
+    outside any plate it is shared across. Pending site scales resolve after
+    their factor's local eliminations (see `_collect_factors`); a factor
+    still pending at its plate sum carries only dims shared with enclosing
+    ordinals, where scale-inside is the correct minibatch estimator of the
+    full-data inner sum. Returns a single right-aligned log-factor (all
+    reduced axes kept at size 1).
+
+    `dispatch` controls how eliminations are lowered: ``"auto"`` (default;
+    also via the ``REPRO_ENUM_DISPATCH`` env var) runs each elimination
+    through the cost-based contraction planner (plan-cached on the factor
+    graph's structural fingerprint; chain/tree segments lower to the fused
+    semiring kernels or a `lax.scan` roll), ``"pairwise"`` forces the legacy
+    greedy path everywhere.
+    """
+    groups: Dict[FrozenSet, List[Tuple[jax.Array, object]]] = {}
+    for ordinal, t, s in factors:
+        groups.setdefault(ordinal, []).append((t, s))
+
+    while True:
+        pending = [o for o, ts in groups.items() if ts and (o - keep_frames)]
+        if not pending:
+            break
+        # innermost first: the ordinal whose deepest pending frame nests deepest
+        o = max(pending, key=lambda o: max(depth[f] for f in (o - keep_frames)))
+        ts = groups.pop(o)
+        other_dims: set = set()
+        for ts2 in groups.values():
+            for t2, _ in ts2:
+                other_dims |= _enum_dims(t2, pool)
+        local = set()
+        for t, _ in ts:
+            local |= _enum_dims(t, pool)
+        local -= other_dims
+        local -= keep_dims
+        if local:
+            ts = _ve_eliminate(ts, local, pool, sum_op, dispatch)
+        # the plate is a product over slices: sum the slice log-factor over
+        # the innermost pending frame's axis, then hand the result to the
+        # enclosing ordinal
+        f = max(o - keep_frames, key=lambda fr: depth[fr])
+        t = _add_all([_scaled(t, s) for t, s in ts])
+        if jnp.ndim(t) >= -f.dim:
+            t = jnp.sum(t, axis=jnp.ndim(t) + f.dim, keepdims=True)
+        groups.setdefault(o - {f}, []).append((t, None))
+
+    ts = [p for tl in groups.values() for p in tl]
+    if not ts:
+        return jnp.zeros(())
+    ts = [(_scaled(t, s), None) for t, s in ts]
+    leftover = set()
+    for t, _ in ts:
+        leftover |= _enum_dims(t, pool)
+    ts = _ve_eliminate(ts, leftover - keep_dims, pool, sum_op, dispatch)
+    return _add_all([t for t, _ in ts])

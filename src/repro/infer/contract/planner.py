@@ -1,0 +1,477 @@
+"""Cost-based contraction planner: turn one elimination problem (factor
+hypergraph + dims to eliminate) into an explicit, inspectable
+`ContractionPlan` — a compiler artifact that is computed once per factor-
+graph *structure* and cached (see `cache.py`), instead of being rediscovered
+greedily at every trace.
+
+The plan is a sequence of steps over factor ids (inputs ``0..n-1``, each
+step appends its result as the next id):
+
+* `ChainStep` — a maximal path of binary log-factors through the factor
+  graph, lowered as one fused segment: a plan-level `lax.scan` roll (O(1)
+  trace size in chain length, O(T K^2) work when a terminal is absorbed),
+  the O(log T)-depth `ops.hmm_scan` tree (parallel hardware), or sequential
+  `ops.semiring_matmul` folds (ragged cardinalities). Chains are extracted
+  repeatedly until a fixpoint, so trees and polytrees of chains collapse
+  branch by branch — each contracted branch becomes a new unary/binary
+  factor that can seed the next round.
+* `ElimStep` — eliminate a single dim by combining the factors that carry
+  it (the greedy backward-pass step). The *order* of these steps comes from
+  a branch-and-bound search over elimination orders (optimal for small dim
+  counts, opt-einsum style) with a greedy min-cost fallback above
+  ``REPRO_ENUM_PLAN_BB`` dims or past the node budget.
+
+The cost model also owns the chain-lowering crossover that used to be the
+fixed ``REPRO_ENUM_CHAIN_MIN`` edge count: short chains stay on the unrolled
+greedy path (bit-identical to ``dispatch="pairwise"``, cheapest steady-state,
+trivial compile), long chains roll into a scan/tree whose compile cost is
+O(1)/O(log T) where the unrolled graph's grows superlinearly. Setting
+``REPRO_ENUM_CHAIN_MIN`` still overrides the crossover (tests use ``2`` to
+force kernel lowering on small fixtures), and ``REPRO_ENUM_CHAIN_LOWER``
+pins the lowering strategy (``scan`` / ``tree`` / ``folds``).
+"""
+from __future__ import annotations
+
+import math
+import os
+from dataclasses import dataclass, field
+from typing import Dict, FrozenSet, List, Optional, Sequence, Set, Tuple
+
+import jax
+
+from .structure import FactorStruct
+
+# ---------------------------------------------------------------------------
+# plan representation
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ChainStep:
+    """Contract a path of binary factors D_0 - D_1 - ... - D_m in one fused
+    segment, eliminating every interior dim (and D_0 too when `absorb`).
+
+    The path is oriented ascending (D_0 = most negative dim), matching the
+    greedy loop's most-negative-first elimination order: the scan lowering
+    sweeps the segment front-to-back with the same per-step float-add
+    association as the greedy backward pass, which is what keeps it
+    bit-identical to ``dispatch="pairwise"`` on uniform chains. `folded` is
+    aligned with `path` — folded[p] are the unary factor ids on interior dim
+    D_p; the scan lowering folds them into the edge *leaving* D_p (row side,
+    greedy association), the tree/folds lowerings into the edge *entering*
+    D_p (column side, legacy kernel-dispatch association)."""
+
+    path: Tuple[int, ...]                # dim sequence D_0..D_m
+    edges: Tuple[Tuple[int, ...], ...]   # edge t: parallel binary factor ids
+    folded: Tuple[Tuple[int, ...], ...]  # per path dim: unary ids (interior only)
+    absorbed: Tuple[int, ...]            # unary ids on D_0 summed into the segment
+    absorb: bool                         # eliminate D_0 inside the segment
+    lower: str                           # "scan" | "tree" | "folds"
+    out: int                             # id of the result factor
+
+    def eliminates(self) -> Tuple[int, ...]:
+        dims = self.path[1:-1]
+        return (self.path[0],) + dims if self.absorb else dims
+
+
+@dataclass(frozen=True)
+class ElimStep:
+    """Eliminate `dim` by combining the factors that carry it."""
+
+    dim: int
+    group: Tuple[int, ...]               # factor ids carrying dim, in id order
+    out: int
+
+
+@dataclass(frozen=True)
+class ContractionPlan:
+    """An explicit contraction schedule: steps over a growing factor list."""
+
+    n_inputs: int
+    steps: Tuple
+    outputs: Tuple[int, ...]             # surviving factor ids, in id order
+    eliminated: Tuple[int, ...]          # dims removed by this plan
+    cost: float = 0.0                    # estimated element-ops (relative)
+    meta: Dict = field(default_factory=dict, compare=False)
+
+    def describe(self) -> str:
+        """Human-readable schedule (the 'inspectable' part of the contract)."""
+        lines = [
+            f"ContractionPlan: {self.n_inputs} inputs, {len(self.steps)} steps, "
+            f"eliminates {len(self.eliminated)} dims, est cost {self.cost:.3g}"
+        ]
+        for s in self.steps:
+            if isinstance(s, ChainStep):
+                ab = ", absorb front" if s.absorb else ""
+                lines.append(
+                    f"  chain[{s.lower}] dims {s.path[0]}..{s.path[-1]} "
+                    f"({len(s.edges)} edges{ab}) -> f{s.out}"
+                )
+            else:
+                ids = ",".join(f"f{i}" for i in s.group)
+                lines.append(f"  elim {s.dim}: {ids} -> f{s.out}")
+        lines.append("  outputs: " + ",".join(f"f{i}" for i in self.outputs))
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# cost model + env knobs
+# ---------------------------------------------------------------------------
+
+# Unrolled greedy elimination compiles superlinearly in chain length (XLA
+# sees m sequential reduce ops over rank-m tensors plus O(m^2) trace-time
+# Python); empirically ~quadratic on CPU at ~4ms/edge^2. A scan roll pays a
+# roughly constant trace+compile cost instead. The crossover
+# m* = sqrt(scan_cost / unroll_coeff) lands at ~18 edges; below it the
+# unrolled path also wins steady-state (XLA fuses the short backward pass
+# more tightly than a loop), so short chains stay bit-identical to pairwise.
+_UNROLL_COMPILE_S_PER_EDGE2 = 4e-3
+_SCAN_LOWER_COST_S = 1.2
+
+_LOWERINGS = ("auto", "scan", "tree", "folds")
+
+
+def chain_threshold(env_val: Optional[str] = None) -> int:
+    """Minimum chain length (binary-factor edges) worth lowering to a fused
+    segment. ``REPRO_ENUM_CHAIN_MIN`` overrides the cost-model crossover."""
+    if env_val is None:
+        env_val = os.environ.get("REPRO_ENUM_CHAIN_MIN")
+    if env_val is not None:
+        return max(2, int(env_val))
+    return max(2, math.ceil(math.sqrt(_SCAN_LOWER_COST_S / _UNROLL_COMPILE_S_PER_EDGE2)))
+
+
+def plan_knobs() -> Tuple:
+    """Environment/platform knobs that change planning decisions — part of
+    the plan-cache fingerprint so flipping one never serves a stale plan."""
+    lower = os.environ.get("REPRO_ENUM_CHAIN_LOWER", "auto")
+    if lower not in _LOWERINGS:
+        raise ValueError(
+            f"unknown chain lowering {lower!r} (REPRO_ENUM_CHAIN_LOWER); "
+            f"expected one of {_LOWERINGS}"
+        )
+    return (
+        os.environ.get("REPRO_ENUM_CHAIN_MIN"),
+        lower,
+        int(os.environ.get("REPRO_ENUM_PLAN_BB", "10")),
+        jax.default_backend(),
+    )
+
+
+def _chain_lowering(m: int, uniform: bool, knobs: Tuple) -> str:
+    """Pick how a recognized chain executes. Ragged cardinalities can only
+    fold; uniform chains roll into a `lax.scan` off-accelerator (O(1) trace,
+    matvec work) or the `hmm_scan` log-depth tree on TPU. When the legacy
+    ``REPRO_ENUM_CHAIN_MIN`` override is set, keep the tree lowering those
+    callers (and the kernel test fixtures) were written against."""
+    chain_min_env, lower_env, _, backend = knobs
+    if not uniform or m < 3:
+        return "folds"
+    if lower_env != "auto":
+        return lower_env
+    if backend == "tpu" or chain_min_env is not None:
+        return "tree"
+    return "scan"
+
+
+# ---------------------------------------------------------------------------
+# elimination-order search (opt-einsum style)
+# ---------------------------------------------------------------------------
+
+_BB_NODE_BUDGET = 50_000
+
+
+def _elim_cost(d: int, dimsets: Sequence[FrozenSet[int]], sizes: Dict[int, int]) -> Tuple[float, FrozenSet[int]]:
+    """Cost of eliminating `d` now: the element count of the broadcast
+    product of every factor carrying it (enum dims only — plate axes scale
+    every candidate equally). Returns (cost, dims of the result factor)."""
+    union: Set[int] = set()
+    for ds in dimsets:
+        if d in ds:
+            union |= ds
+    if not union:
+        return 0.0, frozenset()
+    cost = 1.0
+    for u in union:
+        cost *= sizes[u]
+    return cost, frozenset(union - {d})
+
+
+def _apply_elim(d: int, dimsets: List[FrozenSet[int]], new_dims: FrozenSet[int]) -> List[FrozenSet[int]]:
+    return [ds for ds in dimsets if d not in ds] + [new_dims]
+
+
+def _greedy_order(dimsets: List[FrozenSet[int]], sizes: Dict[int, int], dims: List[int]) -> List[int]:
+    """Min-cost-first ordering; ties break toward the most negative (last
+    allocated) dim — the legacy greedy order, so plans degrade gracefully."""
+    order: List[int] = []
+    remaining = list(dims)
+    cur = list(dimsets)
+    while remaining:
+        best = min(remaining, key=lambda d: (_elim_cost(d, cur, sizes)[0], d))
+        _, new_dims = _elim_cost(best, cur, sizes)
+        cur = _apply_elim(best, cur, new_dims)
+        order.append(best)
+        remaining.remove(best)
+    return order
+
+
+def elimination_order(
+    dimsets: Sequence[FrozenSet[int]],
+    sizes: Dict[int, int],
+    dims: FrozenSet[int],
+    bb_max: int,
+) -> List[int]:
+    """Order the remaining single-dim eliminations. Small problems get a
+    branch-and-bound search over all orders (total intermediate size, the
+    opt-einsum 'optimal' objective); larger ones fall back to greedy
+    min-cost. Candidate dims are explored most-negative-first and the
+    incumbent is only replaced on *strict* improvement, so when the legacy
+    sorted order is already optimal (chains, single dims) the plan
+    reproduces it exactly — bit-identical to the pairwise path."""
+    todo = sorted(d for d in dims if any(d in ds for ds in dimsets))
+    if not todo:
+        return []
+    start = [ds for ds in dimsets if ds]
+    if len(todo) > bb_max:
+        return _greedy_order(start, sizes, todo)
+
+    best_order: List[int] = []
+    best_cost = [math.inf]
+    nodes = [0]
+
+    def dfs(cur: List[FrozenSet[int]], remaining: List[int], acc: float, prefix: List[int]) -> bool:
+        nodes[0] += 1
+        if nodes[0] > _BB_NODE_BUDGET:
+            return False  # budget blown: keep the incumbent
+        if not remaining:
+            if acc < best_cost[0]:
+                best_cost[0] = acc
+                best_order[:] = prefix
+            return True
+        for d in remaining:
+            cost, new_dims = _elim_cost(d, cur, sizes)
+            if acc + cost >= best_cost[0]:
+                continue
+            ok = dfs(
+                _apply_elim(d, cur, new_dims),
+                [r for r in remaining if r != d],
+                acc + cost,
+                prefix + [d],
+            )
+            if not ok:
+                return False
+        return True
+
+    dfs(start, todo, 0.0, [])
+    if not best_order:  # budget blown before any complete order
+        return _greedy_order(start, sizes, todo)
+    return best_order
+
+
+# ---------------------------------------------------------------------------
+# chain extraction (paths / trees / polytrees of binary factors)
+# ---------------------------------------------------------------------------
+
+
+def _find_chains(edges, eliminable: Set[int], blocked: Set[int], min_edges: int):
+    """Maximal simple paths through the factor graph whose edges are
+    (merged) binary factors. A dim may be chain-*interior* only if it is
+    eliminable, touched by exactly two binary edges, and untouched by any
+    higher-arity factor; every other dim terminates a path. Paths shorter
+    than `min_edges` are discarded. Returns a list of (edge-index sequence,
+    dim sequence) pairs; edge t connects dims t and t+1 of the sequence."""
+    adj: Dict[int, List[int]] = {}
+    for i, (pair, _, _) in enumerate(edges):
+        for d in pair:
+            adj.setdefault(d, []).append(i)
+
+    def interior(d):
+        return d in eliminable and d not in blocked and len(adj.get(d, ())) == 2
+
+    chains = []
+    used: Set[int] = set()
+    for i0 in range(len(edges)):
+        if i0 in used:
+            continue
+        a, b = sorted(edges[i0][0])
+        seq_edges, seq_dims = [i0], [a, b]
+        for front in (True, False):
+            while True:
+                end = seq_dims[0] if front else seq_dims[-1]
+                if not interior(end):
+                    break
+                nxt = next((j for j in adj[end] if j not in seq_edges), None)
+                if nxt is None or nxt in used:
+                    break
+                (far,) = edges[nxt][0] - {end}
+                if front:
+                    seq_edges.insert(0, nxt)
+                    seq_dims.insert(0, far)
+                else:
+                    seq_edges.append(nxt)
+                    seq_dims.append(far)
+        # need >= 1 interior dim to eliminate, no cycle closure, and enough
+        # length that the fused segment's compile-time win outweighs its
+        # bookkeeping
+        if len(seq_edges) >= max(2, min_edges) and seq_dims[0] != seq_dims[-1]:
+            used.update(seq_edges)
+            chains.append((seq_edges, seq_dims))
+    return chains
+
+
+# ---------------------------------------------------------------------------
+# the planner
+# ---------------------------------------------------------------------------
+
+
+def plan_elimination(
+    structs: Sequence[FactorStruct],
+    dims: FrozenSet[int],
+    *,
+    semiring: str = "logsumexp",
+    knobs: Optional[Tuple] = None,
+) -> ContractionPlan:
+    """Build a `ContractionPlan` eliminating `dims` from the factor graph
+    described by `structs`. Purely structural — safe to cache on the
+    `structure.fingerprint` of its inputs."""
+    if knobs is None:
+        knobs = plan_knobs()
+    min_edges = chain_threshold(knobs[0])
+    bb_max = knobs[2]
+
+    alive: Dict[int, FactorStruct] = dict(enumerate(structs))
+    sizes: Dict[int, int] = {}
+    for f in structs:
+        for d, k in zip(f.dims, f.sizes):
+            sizes[d] = max(sizes.get(d, 1), k)
+    steps: List = []
+    remaining: Set[int] = set(dims)
+    next_id = len(structs)
+    total_cost = 0.0
+
+    def new_struct(dims_t: Tuple[int, ...], batch: Tuple[int, ...], scale_id: int) -> FactorStruct:
+        return FactorStruct(
+            dims_t, tuple(sizes[d] for d in dims_t), batch, scale_id
+        )
+
+    # -- phase 1: extract chains to fixpoint (trees collapse branch by branch)
+    progressed = True
+    while progressed and remaining:
+        progressed = False
+        blocked: Set[int] = set()
+        for f in alive.values():
+            if len(f.dims) > 2:
+                blocked |= set(f.dims)
+        by_pair: Dict[FrozenSet[int], List[int]] = {}
+        unary_by_dim: Dict[int, List[int]] = {}
+        for i, f in alive.items():
+            if len(f.dims) == 2:
+                by_pair.setdefault(frozenset(f.dims), []).append(i)
+            elif len(f.dims) == 1:
+                unary_by_dim.setdefault(f.dims[0], []).append(i)
+        edges = []  # (pair, member ids, scale_id)
+        for pair, idxs in sorted(by_pair.items(), key=lambda kv: sorted(kv[0])):
+            sids = {alive[i].scale_id for i in idxs}
+            if len(sids) > 1:
+                # parallel factors with different scales can't merge into one
+                # edge; leave the pair to the greedy steps (which raise the
+                # actionable mixed-scale error at execution)
+                blocked |= set(pair)
+                continue
+            edges.append((pair, tuple(idxs), sids.pop()))
+
+        for seq_edges, seq_dims in _find_chains(edges, remaining, blocked, min_edges):
+            if seq_dims[0] > seq_dims[-1]:
+                # canonical ascending orientation: D_0 is the most negative
+                # (first-eliminated-by-greedy) terminal
+                seq_edges, seq_dims = seq_edges[::-1], seq_dims[::-1]
+            interior = seq_dims[1:-1]
+            edge_ids = tuple(edges[e][1] for e in seq_edges)
+            folded = tuple(
+                tuple(unary_by_dim.get(d, ())) if d in interior else ()
+                for d in seq_dims
+            )
+            member_ids = [i for ids in edge_ids for i in ids]
+            folded_ids = [i for ids in folded for i in ids]
+            ks = {sizes[d] for d in seq_dims}
+            lower = _chain_lowering(len(seq_edges), len(ks) == 1, knobs)
+            # front-terminal absorption: D_0 can be eliminated inside the
+            # segment when it is eliminable and nothing outside the segment
+            # touches it — it is the greedy loop's first elimination, so the
+            # scan sweep reproduces greedy's float-op order exactly.
+            # Scan-only: folding terminal unaries into the first edge would
+            # reorder additions inside a tree/fold product, and those
+            # lowerings are pinned bit-compatible with their legacy forms.
+            d_first = seq_dims[0]
+            absorbed: Tuple[int, ...] = ()
+            absorb = False
+            if lower == "scan" and d_first in remaining:
+                touchers = [
+                    i for i, f in alive.items() if d_first in f.dims
+                ]
+                first_edge = set(edge_ids[0])
+                unaries_first = tuple(unary_by_dim.get(d_first, ()))
+                if set(touchers) <= first_edge | set(unaries_first):
+                    absorbed, absorb = unaries_first, True
+            scale_ids = {alive[i].scale_id for i in member_ids + folded_ids + list(absorbed)}
+            if len(scale_ids) > 1:
+                continue  # mixed scales meet in this chain: greedy raises properly
+            sid = scale_ids.pop()
+            batch = tuple(sorted(
+                {b for i in member_ids + folded_ids + list(absorbed) for b in alive[i].batch}
+            ))
+            out_dims = (
+                (seq_dims[-1],) if absorb else tuple(sorted((d_first, seq_dims[-1])))
+            )
+            step = ChainStep(
+                path=tuple(seq_dims),
+                edges=edge_ids,
+                folded=folded,
+                absorbed=absorbed,
+                absorb=absorb,
+                lower=lower,
+                out=next_id,
+            )
+            steps.append(step)
+            for i in member_ids + folded_ids + list(absorbed):
+                del alive[i]
+            alive[next_id] = new_struct(out_dims, batch, sid)
+            next_id += 1
+            remaining -= set(step.eliminates())
+            k = max(ks)
+            total_cost += len(seq_edges) * (k * k if absorb else k * k * k)
+            progressed = True
+
+    # -- phase 2: order the remaining single-dim eliminations by cost
+    dimsets = [frozenset(alive[i].dims) for i in sorted(alive)]
+    eliminated: Set[int] = set(dims) - remaining
+    for d in elimination_order(dimsets, sizes, frozenset(remaining), bb_max):
+        group = tuple(i for i in sorted(alive) if d in alive[i].dims)
+        if not group:
+            continue
+        eliminated.add(d)
+        cost, new_dims = _elim_cost(
+            d, [frozenset(alive[i].dims) for i in sorted(alive)], sizes
+        )
+        total_cost += cost
+        sids = {alive[i].scale_id for i in group}
+        sid = sids.pop() if len(sids) == 1 else min(sids)  # mixed raises at exec
+        out_dims = tuple(sorted(new_dims))
+        batch = tuple(sorted({b for i in group for b in alive[i].batch}))
+        if not out_dims:
+            sid = -1  # scale resolves as soon as no enum dims remain
+        steps.append(ElimStep(dim=d, group=group, out=next_id))
+        for i in group:
+            del alive[i]
+        alive[next_id] = new_struct(out_dims, batch, sid)
+        next_id += 1
+
+    return ContractionPlan(
+        n_inputs=len(structs),
+        steps=tuple(steps),
+        outputs=tuple(sorted(alive)),
+        eliminated=tuple(sorted(eliminated)),
+        cost=total_cost,
+        meta={"semiring": semiring, "knobs": knobs},
+    )

@@ -1,0 +1,284 @@
+"""Structural view of a log-factor contraction: the metadata the planner
+reasons about, and the shared low-level helpers both the planner's executor
+and the legacy greedy path use.
+
+A *factor* at this layer is a right-aligned log-density tensor plus an
+optional pending scale (see `traceenum_elbo._collect_factors` for where the
+pending-scale discipline comes from). The planner never looks at array
+values — it sees each factor as a `FactorStruct`: which enum dims it
+carries (with their cardinalities), which non-enum axes are non-trivial
+(the plate/batch pattern), and which scale-equivalence class it belongs to.
+That structural view is also what the plan cache keys on, so two traces of
+the same model shape plan exactly once.
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass
+from typing import Any, FrozenSet, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.scipy import special as jsp
+
+# ---------------------------------------------------------------------------
+# semiring reduction ops (shared with traceenum_elbo)
+# ---------------------------------------------------------------------------
+
+
+def _logsumexp_op(t, axes):
+    return jsp.logsumexp(t, axis=axes, keepdims=True)
+
+
+def _max_op(t, axes):
+    return jnp.max(t, axis=axes, keepdims=True)
+
+
+def semiring_of(sum_op) -> Optional[str]:
+    """Kernel-lowerable semiring name for a reduction op (None = custom op,
+    which only the generic greedy path can execute)."""
+    if sum_op is _logsumexp_op:
+        return "logsumexp"
+    if sum_op is _max_op:
+        return "max"
+    return None
+
+
+def _enum_dims(t: jax.Array, pool: FrozenSet[int]) -> FrozenSet[int]:
+    """Allocated enum dims actually present (size > 1) in a right-aligned
+    log-factor. Only dims the enum messenger allocated count — ordinary
+    batch dims are never contracted."""
+    return frozenset(
+        d for d in pool if jnp.ndim(t) >= -d and jnp.shape(t)[jnp.ndim(t) + d] > 1
+    )
+
+
+def _reduce_dims(t: jax.Array, dims, sum_op) -> jax.Array:
+    axes = tuple(jnp.ndim(t) + d for d in dims)
+    return sum_op(t, axes) if axes else t
+
+
+def _add_all(ts: List[jax.Array]) -> jax.Array:
+    total = ts[0]
+    for t in ts[1:]:
+        total = total + t
+    return total
+
+
+def _scaled(t: jax.Array, scale) -> jax.Array:
+    return t if scale is None else t * scale
+
+
+def _uniform_scale(scales):
+    """The single pending scale shared by a contraction group (None == 1)."""
+    distinct = []
+    for s in scales:
+        if not any(s is d or (isinstance(s, (int, float)) and s == d) for d in distinct):
+            distinct.append(s)
+    if len(distinct) > 1:
+        raise NotImplementedError(
+            "factors with different log_prob scales meet inside one enumerated "
+            f"contraction (scales {distinct}); apply the same plate/scale "
+            "context to every site entangled with an enumerated variable"
+        )
+    return distinct[0]
+
+
+# ---------------------------------------------------------------------------
+# dispatch mode
+# ---------------------------------------------------------------------------
+
+_DISPATCH_MODES = ("auto", "pairwise")
+
+
+def _dispatch_mode(override: Optional[str] = None) -> str:
+    """How eliminations are routed: ``auto`` (default) runs the cost-based
+    contraction planner, which recognizes matmul-, chain-, and tree-shaped
+    eliminations and lowers them to the fused semiring kernels or a
+    `lax.scan` roll; ``pairwise`` forces the legacy one-dim-at-a-time greedy
+    path everywhere. Explicit argument > ``REPRO_ENUM_DISPATCH`` env var."""
+    mode = override or os.environ.get("REPRO_ENUM_DISPATCH", "auto")
+    if mode not in _DISPATCH_MODES:
+        raise ValueError(
+            f"unknown enum dispatch mode {mode!r}; expected one of {_DISPATCH_MODES}"
+        )
+    return mode
+
+
+# ---------------------------------------------------------------------------
+# matrix/vector re-embedding between right-aligned and batched-matrix layouts
+# ---------------------------------------------------------------------------
+
+
+def _to_matrix(t: jax.Array, d_row: int, d_col: int) -> jax.Array:
+    """View a right-aligned log-factor carrying enum dims (d_row, d_col) as a
+    batched matrix (batch..., K_row, K_col), where the batch is the factor's
+    (right-aligned) plate shape.
+
+    Enum dims live in deep negative slots, so a long chain's factors have
+    ranks up to T — transposing at that rank is exactly what blows up XLA
+    compile time. Every axis other than the two enum axes and the trailing
+    plate block is size 1, so one order-preserving reshape drops to a small
+    rank first and the transpose happens there."""
+    nd = jnp.ndim(t)
+    shape = jnp.shape(t)
+    ar, ac = nd + d_row, nd + d_col
+    hi = max(ar, ac)
+    plate_rank = 0
+    for i in range(nd - 1, hi, -1):
+        if shape[i] != 1:
+            plate_rank = nd - i  # extend the kept block to this axis
+    if any(
+        shape[i] != 1
+        for i in range(nd - plate_rank)
+        if i not in (ar, ac)
+    ):  # unexpected non-plate batch axis: fall back to the generic transpose
+        m = jnp.moveaxis(t, (ar, ac), (-2, -1))
+        lead = 0
+        while lead < jnp.ndim(m) - 2 and jnp.shape(m)[lead] == 1:
+            lead += 1
+        return jnp.reshape(m, jnp.shape(m)[lead:]) if lead else m
+    plates = shape[nd - plate_rank:] if plate_rank else ()
+    first, second = (ar, ac) if ar < ac else (ac, ar)
+    m = jnp.reshape(t, (shape[first], shape[second]) + tuple(plates))
+    m = jnp.moveaxis(m, (0, 1), (-2, -1))  # (plates..., K_first, K_second)
+    if ar > ac:  # row axis came second in memory order
+        m = jnp.swapaxes(m, -1, -2)
+    return m
+
+
+def _from_matrix(m: jax.Array, d_row: int, d_col: int) -> jax.Array:
+    """Inverse of `_to_matrix` for a contraction result: re-embed a batched
+    matrix into right-aligned form with the row/col axes at enum slots
+    (d_row, d_col) and the batch (plate) axes back at the right edge. The
+    transpose happens at the small rank; the lift to full rank is a single
+    size-1-inserting reshape."""
+    L = jnp.ndim(m) - 2
+    R = max(-d_row, -d_col, L + 2)
+    ar, ac = R + d_row, R + d_col
+    if ac >= R - L or ar >= R - L:  # enum slot would collide with the plate block
+        m = jnp.reshape(m, (1,) * (R - L - 2) + jnp.shape(m))
+        return jnp.moveaxis(m, (R - 2, R - 1), (ar, ac))
+    x = jnp.moveaxis(m, (-2, -1) if ar < ac else (-1, -2), (0, 1))
+    shape = [1] * R
+    first, second = (ar, ac) if ar < ac else (ac, ar)
+    shape[first], shape[second] = x.shape[0], x.shape[1]
+    shape[R - L:] = x.shape[2:]
+    return jnp.reshape(x, tuple(shape))
+
+
+def _to_vector(t: jax.Array, d: int) -> jax.Array:
+    """View a right-aligned log-factor carrying the single enum dim `d` as a
+    batched vector (batch..., K) — the unary analogue of `_to_matrix`, with
+    the same reshape-first trick so no transpose happens at chain rank."""
+    nd = jnp.ndim(t)
+    shape = jnp.shape(t)
+    a = nd + d
+    plate_rank = 0
+    for i in range(nd - 1, a, -1):
+        if shape[i] != 1:
+            plate_rank = nd - i
+    if any(shape[i] != 1 for i in range(nd - plate_rank) if i != a):
+        v = jnp.moveaxis(t, a, -1)  # unexpected batch axis: generic fallback
+        lead = 0
+        while lead < jnp.ndim(v) - 1 and jnp.shape(v)[lead] == 1:
+            lead += 1
+        return jnp.reshape(v, jnp.shape(v)[lead:]) if lead else v
+    plates = shape[nd - plate_rank:] if plate_rank else ()
+    v = jnp.reshape(t, (shape[a],) + tuple(plates))
+    return jnp.moveaxis(v, 0, -1)  # (plates..., K)
+
+
+def _from_vector(v: jax.Array, d: int) -> jax.Array:
+    """Re-embed a batched vector (batch..., K) into right-aligned form with
+    the K axis at enum slot `d` and the batch axes back at the right edge
+    (the vector analogue of `_from_matrix`, used by scan-rolled chains that
+    absorb a terminal)."""
+    L = jnp.ndim(v) - 1
+    R = max(-d, L + 1)
+    a = R + d
+    if a >= R - L:  # enum slot collides with the plate block
+        v = jnp.reshape(v, (1,) * (R - L - 1) + jnp.shape(v))
+        return jnp.moveaxis(v, R - 1, a)
+    x = jnp.moveaxis(v, -1, 0)
+    shape = [1] * R
+    shape[a] = x.shape[0]
+    shape[R - L:] = x.shape[1:]
+    return jnp.reshape(x, tuple(shape))
+
+
+# ---------------------------------------------------------------------------
+# structural factor view + fingerprint
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class FactorStruct:
+    """Shape-level view of one log-factor: everything the planner (and the
+    plan-cache key) needs, nothing value-dependent."""
+
+    dims: Tuple[int, ...]        # enum dims present (sorted ascending)
+    sizes: Tuple[int, ...]       # cardinality of each dim, aligned with `dims`
+    batch: Tuple[int, ...]       # non-enum right-aligned axes with size > 1
+    scale_id: int                # scale-equivalence class (-1 = no scale)
+
+    def size_of(self, d: int) -> int:
+        return self.sizes[self.dims.index(d)]
+
+
+def _scale_ids(scales: Sequence[Any]) -> List[int]:
+    """Map each pending scale to a small equivalence-class id using the same
+    distinctness rule as `_uniform_scale` (identity, or numeric equality for
+    plain Python numbers). None maps to -1. Array/tracer scales compare by
+    identity only — exactly the grouping the executor's scale checks see."""
+    ids: List[int] = []
+    reps: List[Any] = []
+    for s in scales:
+        if s is None:
+            ids.append(-1)
+            continue
+        for j, r in enumerate(reps):
+            if s is r or (isinstance(s, (int, float)) and s == r):
+                ids.append(j)
+                break
+        else:
+            reps.append(s)
+            ids.append(len(reps) - 1)
+    return ids
+
+
+def factor_structs(ts, pool: FrozenSet[int]) -> List[FactorStruct]:
+    """Build the structural view of a (tensor, pending_scale) factor list."""
+    scale_ids = _scale_ids([s for _, s in ts])
+    structs = []
+    for (t, _), sid in zip(ts, scale_ids):
+        nd = jnp.ndim(t)
+        shape = jnp.shape(t)
+        dims = tuple(sorted(d for d in pool if nd >= -d and shape[nd + d] > 1))
+        sizes = tuple(shape[nd + d] for d in dims)
+        batch = tuple(
+            i - nd
+            for i in range(nd)
+            if shape[i] > 1 and (i - nd) not in dims
+        )
+        structs.append(FactorStruct(dims, sizes, batch, sid))
+    return structs
+
+
+def fingerprint(
+    structs: Sequence[FactorStruct],
+    dims: FrozenSet[int],
+    semiring: str,
+    knobs: Tuple,
+) -> Tuple:
+    """Hashable structural fingerprint of one elimination problem: factor
+    incidence + dim cardinalities + plate patterns + scale grouping + the
+    dims to eliminate + the semiring + any env knobs that change planning.
+    Array *values* never enter the key — every SVI step and every serve
+    bucket with the same shapes shares one plan."""
+    return (
+        tuple((f.dims, f.sizes, f.batch, f.scale_id) for f in structs),
+        tuple(sorted(dims)),
+        semiring,
+        knobs,
+    )

@@ -23,19 +23,57 @@ does).
 from __future__ import annotations
 
 import functools
-import os
 from typing import Any, Callable, Dict, FrozenSet, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
-from jax.scipy import special as jsp
 from jax.sharding import Mesh
 
 from ..core.handlers import block, enum, replay, seed, substitute, trace
 from ..core.primitives import prng_key
-from ..kernels import ops as kernel_ops
+from .contract import (
+    _dispatch_mode,
+    _from_matrix,
+    _logsumexp_op,
+    _max_op,
+    _to_matrix,
+    _ve_eliminate,
+    clear_plan_cache,
+    contract_log_factors,
+    plan_cache_stats,
+)
+from .contract.structure import (
+    _add_all,
+    _enum_dims,
+    _reduce_dims,
+    _scaled,
+    _uniform_scale,
+)
 from .elbo import ELBO, _apply_scale_mask
 from .util import substitute_params
+
+# The contraction engine (planner, plan cache, executor) lives in
+# `repro.infer.contract`; the helpers above are re-exported here because this
+# module is the historical home of the contraction API.
+__all__ = [
+    "TraceEnum_ELBO",
+    "contract_log_factors",
+    "discrete_marginals",
+    "infer_discrete",
+    "plan_cache_stats",
+    "clear_plan_cache",
+    "_add_all",
+    "_dispatch_mode",
+    "_enum_dims",
+    "_from_matrix",
+    "_logsumexp_op",
+    "_max_op",
+    "_reduce_dims",
+    "_scaled",
+    "_to_matrix",
+    "_uniform_scale",
+    "_ve_eliminate",
+]
 
 # ---------------------------------------------------------------------------
 # log-factor collection
@@ -109,372 +147,6 @@ def _collect_factors(model_tr):
         for o, lp, s in factors
     ]
     return factors, depth, pool
-
-
-def _enum_dims(t: jax.Array, pool: FrozenSet[int]) -> FrozenSet[int]:
-    """Allocated enum dims actually present (size > 1) in a right-aligned
-    log-factor. Only dims the enum messenger allocated count — ordinary
-    batch dims are never contracted."""
-    return frozenset(
-        d for d in pool if jnp.ndim(t) >= -d and jnp.shape(t)[jnp.ndim(t) + d] > 1
-    )
-
-
-def _reduce_dims(t: jax.Array, dims, sum_op) -> jax.Array:
-    axes = tuple(jnp.ndim(t) + d for d in dims)
-    return sum_op(t, axes) if axes else t
-
-
-def _logsumexp_op(t, axes):
-    return jsp.logsumexp(t, axis=axes, keepdims=True)
-
-
-def _max_op(t, axes):
-    return jnp.max(t, axis=axes, keepdims=True)
-
-
-def _add_all(ts: List[jax.Array]) -> jax.Array:
-    total = ts[0]
-    for t in ts[1:]:
-        total = total + t
-    return total
-
-
-def _scaled(t: jax.Array, scale) -> jax.Array:
-    return t if scale is None else t * scale
-
-
-def _uniform_scale(scales):
-    """The single pending scale shared by a contraction group (None == 1)."""
-    distinct = []
-    for s in scales:
-        if not any(s is d or (isinstance(s, (int, float)) and s == d) for d in distinct):
-            distinct.append(s)
-    if len(distinct) > 1:
-        raise NotImplementedError(
-            "factors with different log_prob scales meet inside one enumerated "
-            f"contraction (scales {distinct}); apply the same plate/scale "
-            "context to every site entangled with an enumerated variable"
-        )
-    return distinct[0]
-
-
-_DISPATCH_MODES = ("auto", "pairwise")
-_DEFAULT_CHAIN_MIN = 16
-
-
-def _dispatch_mode(override: Optional[str] = None) -> str:
-    """How `_ve_eliminate` routes contractions: ``auto`` (default) recognizes
-    matmul- and chain-shaped eliminations and hands them to the fused semiring
-    kernels in `kernels/ops.py`; ``pairwise`` forces the legacy one-dim-at-a-
-    time greedy path. Explicit argument > ``REPRO_ENUM_DISPATCH`` env var."""
-    mode = override or os.environ.get("REPRO_ENUM_DISPATCH", "auto")
-    if mode not in _DISPATCH_MODES:
-        raise ValueError(
-            f"unknown enum dispatch mode {mode!r}; expected one of {_DISPATCH_MODES}"
-        )
-    return mode
-
-
-def _chain_min_edges() -> int:
-    """Minimum chain length (in binary factors) the auto dispatch lowers to
-    the semiring kernels; shorter chains keep the greedy backward pass.
-
-    The kernel path's win is trace/compile time — the greedy path's unrolled
-    graph compiles superlinearly in T (seconds by T~32, minutes by T~512) —
-    while its per-step cost is higher: the O(log T)-depth tree does
-    O(T K^3) matrix-matrix work where the greedy backward pass does O(T K^2)
-    matrix-vector work. Below the threshold, greedy compiles in well under a
-    second and every SVI step is cheaper, so greedy wins outright.
-    ``REPRO_ENUM_CHAIN_MIN`` overrides (2 = always lower; tests use this to
-    exercise the kernel path on small fixtures)."""
-    return max(2, int(os.environ.get("REPRO_ENUM_CHAIN_MIN", _DEFAULT_CHAIN_MIN)))
-
-
-def _to_matrix(t: jax.Array, d_row: int, d_col: int) -> jax.Array:
-    """View a right-aligned log-factor carrying enum dims (d_row, d_col) as a
-    batched matrix (batch..., K_row, K_col), where the batch is the factor's
-    (right-aligned) plate shape.
-
-    Enum dims live in deep negative slots, so a long chain's factors have
-    ranks up to T — transposing at that rank is exactly what blows up XLA
-    compile time. Every axis other than the two enum axes and the trailing
-    plate block is size 1, so one order-preserving reshape drops to a small
-    rank first and the transpose happens there."""
-    nd = jnp.ndim(t)
-    shape = jnp.shape(t)
-    ar, ac = nd + d_row, nd + d_col
-    hi = max(ar, ac)
-    plate_rank = 0
-    for i in range(nd - 1, hi, -1):
-        if shape[i] != 1:
-            plate_rank = nd - i  # extend the kept block to this axis
-    if any(
-        shape[i] != 1
-        for i in range(nd - plate_rank)
-        if i not in (ar, ac)
-    ):  # unexpected non-plate batch axis: fall back to the generic transpose
-        m = jnp.moveaxis(t, (ar, ac), (-2, -1))
-        lead = 0
-        while lead < jnp.ndim(m) - 2 and jnp.shape(m)[lead] == 1:
-            lead += 1
-        return jnp.reshape(m, jnp.shape(m)[lead:]) if lead else m
-    plates = shape[nd - plate_rank:] if plate_rank else ()
-    first, second = (ar, ac) if ar < ac else (ac, ar)
-    m = jnp.reshape(t, (shape[first], shape[second]) + tuple(plates))
-    m = jnp.moveaxis(m, (0, 1), (-2, -1))  # (plates..., K_first, K_second)
-    if ar > ac:  # row axis came second in memory order
-        m = jnp.swapaxes(m, -1, -2)
-    return m
-
-
-def _from_matrix(m: jax.Array, d_row: int, d_col: int) -> jax.Array:
-    """Inverse of `_to_matrix` for a contraction result: re-embed a batched
-    matrix into right-aligned form with the row/col axes at enum slots
-    (d_row, d_col) and the batch (plate) axes back at the right edge. The
-    transpose happens at the small rank; the lift to full rank is a single
-    size-1-inserting reshape."""
-    L = jnp.ndim(m) - 2
-    R = max(-d_row, -d_col, L + 2)
-    ar, ac = R + d_row, R + d_col
-    if ac >= R - L or ar >= R - L:  # enum slot would collide with the plate block
-        m = jnp.reshape(m, (1,) * (R - L - 2) + jnp.shape(m))
-        return jnp.moveaxis(m, (R - 2, R - 1), (ar, ac))
-    x = jnp.moveaxis(m, (-2, -1) if ar < ac else (-1, -2), (0, 1))
-    shape = [1] * R
-    first, second = (ar, ac) if ar < ac else (ac, ar)
-    shape[first], shape[second] = x.shape[0], x.shape[1]
-    shape[R - L:] = x.shape[2:]
-    return jnp.reshape(x, tuple(shape))
-
-
-def _find_chains(edges, dims, blocked, min_edges):
-    """Maximal simple paths through the factor graph whose edges are binary
-    (two-enum-dim) factors. A dim may be chain-*interior* only if it is
-    eliminable, touched by exactly two binary factors, and untouched by any
-    higher-arity factor; every other dim terminates a path. Paths shorter
-    than `min_edges` are discarded (see `_chain_min_edges`). Returns a list
-    of dim sequences [D_0, ..., D_m] (edge t connects D_t, D_{t+1})."""
-    adj: Dict[int, List[int]] = {}
-    for i, (pair, _, _) in enumerate(edges):
-        for d in pair:
-            adj.setdefault(d, []).append(i)
-
-    def interior(d):
-        return d in dims and d not in blocked and len(adj.get(d, ())) == 2
-
-    chains = []
-    used = set()
-    for i0 in range(len(edges)):
-        if i0 in used:
-            continue
-        a, b = sorted(edges[i0][0])
-        seq_edges, seq_dims = [i0], [a, b]
-        for front in (True, False):
-            while True:
-                end = seq_dims[0] if front else seq_dims[-1]
-                if not interior(end):
-                    break
-                nxt = next((j for j in adj[end] if j not in seq_edges), None)
-                if nxt is None or nxt in used:
-                    break
-                (far,) = edges[nxt][0] - {end}
-                if front:
-                    seq_edges.insert(0, nxt)
-                    seq_dims.insert(0, far)
-                else:
-                    seq_edges.append(nxt)
-                    seq_dims.append(far)
-        # need >= 1 interior dim to eliminate, no cycle closure, and enough
-        # length that the kernel path's compile-time win outweighs its extra
-        # per-step arithmetic
-        if len(seq_edges) >= max(2, min_edges) and seq_dims[0] != seq_dims[-1]:
-            used.update(seq_edges)
-            chains.append((seq_edges, seq_dims))
-    return chains
-
-
-def _dispatch_chains(ts, dims, pool: FrozenSet[int], sum_op, mode: str):
-    """Recognize matmul-/chain-shaped contractions and hand them to the fused
-    semiring kernels (`ops.semiring_matmul` / `ops.hmm_scan`) before the
-    greedy loop runs. A chain z_{t-1} -> z_t of binary log-factors becomes a
-    stack of K x K matrices whose ordered semiring product eliminates every
-    interior dim in O(log T) depth — replacing T sequential pairwise
-    logsumexp eliminations AND the O(T^2) trace-time bookkeeping the greedy
-    loop spends rediscovering the chain one dim at a time. Returns the
-    (possibly rewritten) factor list and the dims still left to eliminate;
-    semantics (pending scales, masked-site fills) are exactly the greedy
-    path's — anything irregular simply falls through untouched."""
-    if mode == "pairwise" or not dims:
-        return ts, dims
-    if sum_op is _logsumexp_op:
-        semiring = "logsumexp"
-    elif sum_op is _max_op:
-        semiring = "max"
-    else:  # custom sum_op: no kernel equivalent, keep the generic path
-        return ts, dims
-
-    entries = [(t, s, _enum_dims(t, pool)) for t, s in ts]
-    blocked = set()
-    for _, _, ds in entries:
-        if len(ds) > 2:
-            blocked |= ds
-    # binary factors are the graph edges; merge parallel ones (same dim pair,
-    # same pending scale — a log-space product is a sum) so the graph is simple
-    by_pair: Dict[FrozenSet[int], List[int]] = {}
-    for i, (_, _, ds) in enumerate(entries):
-        if len(ds) == 2:
-            by_pair.setdefault(frozenset(ds), []).append(i)
-    edges = []  # (pair, tensor, scale); originals tracked for clean fallback
-    edge_sources = []
-    for pair, idxs in by_pair.items():
-        try:
-            sc = _uniform_scale([entries[i][1] for i in idxs])
-        except NotImplementedError:
-            blocked |= pair  # let the greedy path raise its usual error
-            continue
-        edges.append((pair, _add_all([entries[i][0] for i in idxs]), sc))
-        edge_sources.append(idxs)
-    unary_by_dim: Dict[int, List[int]] = {}
-    for i, (_, _, ds) in enumerate(entries):
-        if len(ds) == 1:
-            (d,) = ds
-            unary_by_dim.setdefault(d, []).append(i)
-
-    consumed: set = set()
-    new_factors = []
-    remaining = set(dims)
-    for seq_edges, seq_dims in _find_chains(edges, remaining, blocked, _chain_min_edges()):
-        interior = seq_dims[1:-1]
-        folded = [i for d in interior for i in unary_by_dim.get(d, ())]
-        scales = [edges[e][2] for e in seq_edges] + [entries[i][1] for i in folded]
-        try:
-            chain_scale = _uniform_scale(scales)
-        except NotImplementedError:
-            continue  # mixed scales meet in this chain: greedy raises properly
-        mats = []
-        for t_idx, e in enumerate(seq_edges):
-            tensor = edges[e][1]
-            col = seq_dims[t_idx + 1]
-            if col in interior:  # interior unaries fold into the edge entering them
-                for i in unary_by_dim.get(col, ()):
-                    tensor = tensor + entries[i][0]
-            mats.append(_to_matrix(tensor, seq_dims[t_idx], col))
-        sizes = {m.shape[-2:] for m in mats}
-        if len(sizes) == 1 and len(mats) >= 3:
-            batch = jnp.broadcast_shapes(*[m.shape[:-2] for m in mats])
-            stacked = jnp.stack(
-                [jnp.broadcast_to(m, batch + m.shape[-2:]) for m in mats], axis=-3
-            )
-            res = kernel_ops.hmm_scan(stacked, semiring=semiring)
-        else:  # matmul-shaped (one interior dim) or ragged cardinalities
-            res = mats[0]
-            for m in mats[1:]:
-                res = kernel_ops.semiring_matmul(res, m, semiring=semiring)
-        new_factors.append((_from_matrix(res, seq_dims[0], seq_dims[-1]), chain_scale))
-        remaining -= set(interior)
-        consumed.update(folded)
-        for e in seq_edges:
-            consumed.update(edge_sources[e])
-
-    if not new_factors:
-        return ts, dims
-    ts = [p for i, p in enumerate(ts) if i not in consumed] + new_factors
-    return ts, remaining
-
-
-def _ve_eliminate(ts, dims, pool: FrozenSet[int], sum_op, dispatch: Optional[str] = None):
-    """Variable elimination over (tensor, pending_scale) pairs. Chain- and
-    matmul-shaped sub-contractions are first handed to the fused semiring
-    kernels (see `_dispatch_chains`); whatever remains falls to the greedy
-    loop: drop each enum dim by combining only the factors that carry it,
-    most-negative (= last-allocated) dim first. For a sequentially-sampled
-    chain z_1 -> ... -> z_T the greedy loop alone is the backward algorithm —
-    O(T K^2) work but O(T) sequential XLA ops and O(T^2) trace-time Python;
-    the chain dispatch collapses that to one `hmm_scan` op. A group's pending
-    scale resolves (multiplies) as soon as its result carries no more enum
-    dims."""
-    ts, dims = _dispatch_chains(ts, dims, pool, sum_op, _dispatch_mode(dispatch))
-    for d in sorted(dims):
-        group = [(t, s) for t, s in ts if d in _enum_dims(t, pool)]
-        rest = [(t, s) for t, s in ts if d not in _enum_dims(t, pool)]
-        if not group:
-            continue
-        scale = _uniform_scale([s for _, s in group])
-        t = _reduce_dims(_add_all([t for t, _ in group]), (d,), sum_op)
-        if scale is not None and not _enum_dims(t, pool):
-            t, scale = t * scale, None
-        ts = rest + [(t, scale)]
-    return ts
-
-
-def contract_log_factors(
-    factors: List[Tuple[FrozenSet, jax.Array, Any]],
-    depth: Dict,
-    pool: FrozenSet[int],
-    keep_dims: FrozenSet[int] = frozenset(),
-    keep_frames: FrozenSet = frozenset(),
-    sum_op=_logsumexp_op,
-    dispatch: Optional[str] = None,
-) -> jax.Array:
-    """Plate-aware tensor variable elimination in log space.
-
-    Eliminates every enum dim not in `keep_dims` (via `sum_op`, keepdims) and
-    sums out every plate frame not in `keep_frames`, processing ordinals
-    innermost-first so that each enum dim is eliminated at the shallowest
-    ordinal where it still appears — i.e. inside its own plate context but
-    outside any plate it is shared across. Pending site scales resolve after
-    their factor's local eliminations (see `_collect_factors`); a factor
-    still pending at its plate sum carries only dims shared with enclosing
-    ordinals, where scale-inside is the correct minibatch estimator of the
-    full-data inner sum. Returns a single right-aligned log-factor (all
-    reduced axes kept at size 1).
-
-    `dispatch` controls how eliminations are lowered: ``"auto"`` (default;
-    also via the ``REPRO_ENUM_DISPATCH`` env var) routes matmul-/chain-shaped
-    sub-contractions through the fused semiring kernels in `kernels/ops.py`,
-    ``"pairwise"`` forces the legacy greedy path everywhere.
-    """
-    groups: Dict[FrozenSet, List[Tuple[jax.Array, Any]]] = {}
-    for ordinal, t, s in factors:
-        groups.setdefault(ordinal, []).append((t, s))
-
-    while True:
-        pending = [o for o, ts in groups.items() if ts and (o - keep_frames)]
-        if not pending:
-            break
-        # innermost first: the ordinal whose deepest pending frame nests deepest
-        o = max(pending, key=lambda o: max(depth[f] for f in (o - keep_frames)))
-        ts = groups.pop(o)
-        other_dims: set = set()
-        for ts2 in groups.values():
-            for t2, _ in ts2:
-                other_dims |= _enum_dims(t2, pool)
-        local = set()
-        for t, _ in ts:
-            local |= _enum_dims(t, pool)
-        local -= other_dims
-        local -= keep_dims
-        if local:
-            ts = _ve_eliminate(ts, local, pool, sum_op, dispatch)
-        # the plate is a product over slices: sum the slice log-factor over
-        # the innermost pending frame's axis, then hand the result to the
-        # enclosing ordinal
-        f = max(o - keep_frames, key=lambda fr: depth[fr])
-        t = _add_all([_scaled(t, s) for t, s in ts])
-        if jnp.ndim(t) >= -f.dim:
-            t = jnp.sum(t, axis=jnp.ndim(t) + f.dim, keepdims=True)
-        groups.setdefault(o - {f}, []).append((t, None))
-
-    ts = [p for tl in groups.values() for p in tl]
-    if not ts:
-        return jnp.zeros(())
-    ts = [(_scaled(t, s), None) for t, s in ts]
-    leftover = set()
-    for t, _ in ts:
-        leftover |= _enum_dims(t, pool)
-    ts = _ve_eliminate(ts, leftover - keep_dims, pool, sum_op, dispatch)
-    return _add_all([t for t, _ in ts])
 
 
 # ---------------------------------------------------------------------------

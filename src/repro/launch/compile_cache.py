@@ -1,0 +1,79 @@
+"""Persistent XLA compilation cache: amortize cold starts across runs.
+
+The contraction planner cuts what a cold trace *builds*; this module makes
+the XLA compile of what remains a one-time cost per (program, jaxlib,
+backend) by pointing ``jax_compilation_cache_dir`` at a directory that
+survives the process — locally under the user's cache dir, in CI via
+``actions/cache``. The second run of the same launch/serve/bench program
+then deserializes executables instead of recompiling them.
+
+Knobs (all optional):
+
+* ``REPRO_COMPILATION_CACHE_DIR`` — cache directory. ``0``/``off`` disables
+  persistence entirely; unset falls back to
+  ``$XDG_CACHE_HOME/repro/xla-cache`` (or ``~/.cache/repro/xla-cache``).
+* ``REPRO_COMPILATION_CACHE_MIN_COMPILE_S`` — only persist programs whose
+  compile took at least this long (default ``0.5``; tiny programs aren't
+  worth the disk round-trip).
+"""
+from __future__ import annotations
+
+import os
+from pathlib import Path
+from typing import Dict, Optional
+
+import jax
+
+_OFF = ("0", "false", "off", "none")
+
+
+def cache_dir() -> Optional[Path]:
+    """Resolved compilation-cache directory, or None when disabled."""
+    env = os.environ.get("REPRO_COMPILATION_CACHE_DIR")
+    if env is not None:
+        if env.strip().lower() in _OFF:
+            return None
+        return Path(env).expanduser()
+    base = os.environ.get("XDG_CACHE_HOME")
+    root = Path(base).expanduser() if base else Path.home() / ".cache"
+    return root / "repro" / "xla-cache"
+
+
+def enable_compilation_cache() -> Optional[Path]:
+    """Point JAX's persistent compilation cache at `cache_dir()`.
+
+    Idempotent and safe to call before any JAX computation (launch mains call
+    it right after argument parsing). Returns the directory in use, or None
+    when persistence is disabled. Never raises: an unwritable directory just
+    means cold compiles stay cold."""
+    path = cache_dir()
+    if path is None:
+        return None
+    try:
+        path.mkdir(parents=True, exist_ok=True)
+        jax.config.update("jax_compilation_cache_dir", str(path))
+        # persist anything that took real compile time; leave trivial
+        # executables out so the cache stays small and the hit path hot
+        jax.config.update(
+            "jax_persistent_cache_min_compile_time_secs",
+            float(os.environ.get("REPRO_COMPILATION_CACHE_MIN_COMPILE_S", "0.5")),
+        )
+        jax.config.update("jax_persistent_cache_min_entry_size_bytes", 0)
+    except Exception as exc:  # pragma: no cover - depends on fs/jax build
+        print(f"warning: persistent compilation cache disabled ({exc})")
+        return None
+    return path
+
+
+def compilation_cache_stats() -> Dict:
+    """Entry count + on-disk bytes of the persistent cache directory (the
+    bench stage prints this so the warm path is visibly exercised)."""
+    path = cache_dir()
+    if path is None or not path.is_dir():
+        return {"dir": str(path) if path else None, "entries": 0, "bytes": 0}
+    files = [p for p in path.rglob("*") if p.is_file()]
+    return {
+        "dir": str(path),
+        "entries": len(files),
+        "bytes": sum(p.stat().st_size for p in files),
+    }

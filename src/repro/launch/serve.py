@@ -27,6 +27,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from .compile_cache import enable_compilation_cache
 
 # ---------------------------------------------------------------------------
 # posterior serving
@@ -225,6 +226,9 @@ def main(argv=None) -> int:
     lp.add_argument("--temperature", type=float, default=1.0)
     args = ap.parse_args(argv)
 
+    cache = enable_compilation_cache()
+    if cache is not None:
+        print(f"compilation cache: {cache}")
     if args.cmd == "posterior":
         if args.smoke:
             args.train_steps = min(args.train_steps, 30)

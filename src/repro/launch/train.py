@@ -23,6 +23,7 @@ from ..models import init_params, make_train_step
 from ..models.frontends import frontend_embed
 from ..optim import AdamW
 from ..optim.schedules import warmup_cosine
+from .compile_cache import enable_compilation_cache
 from .mesh import make_host_mesh
 
 
@@ -51,6 +52,9 @@ def main(argv=None) -> int:
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args(argv)
 
+    cache = enable_compilation_cache()
+    if cache is not None:
+        print(f"compilation cache: {cache}")
     tier = args.config or ("smoke" if args.smoke else "full")
     if tier == "smoke":
         cfg = configs.get_smoke_config(args.arch)

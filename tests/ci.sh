@@ -61,6 +61,8 @@ run_lint() {
     ruff check src tests benchmarks examples
     # format is ratcheted: files (re)written since the lint stage landed must
     # stay formatter-clean; pre-existing modules join as they get touched
+    # (the contract/ package + planner tests join once formatted on a
+    # machine with ruff available)
     ruff format --check \
         src/repro/kernels/semiring.py \
         benchmarks/enum_ve.py \
@@ -136,11 +138,21 @@ run_examples() {
 run_bench() {
     # smoke-mode benchmarks double as regression gates: each asserts its
     # retrace counter and (for serve) the 5x-vs-naive floor, exiting nonzero
-    # otherwise
+    # otherwise. The persistent XLA compilation cache is pinned to a repo-
+    # local dir (restored across CI runs via actions/cache) so cold-compile
+    # numbers measure *our* trace+lowering cost, not XLA re-optimizing
+    # unchanged programs.
+    export REPRO_COMPILATION_CACHE_DIR="${REPRO_COMPILATION_CACHE_DIR:-$PWD/.xla-cache}"
     python benchmarks/svi_sharded.py --smoke
     python benchmarks/mcmc_chains.py --smoke
     python benchmarks/enum_ve.py --smoke --json BENCH_enum.json
     python benchmarks/serve_bench.py --smoke --json BENCH_serve.json
+    python - <<'PY'
+from repro.launch.compile_cache import compilation_cache_stats
+from repro.infer import plan_cache_stats
+print("plan cache (this process):", plan_cache_stats())
+print("compilation cache:", compilation_cache_stats())
+PY
 }
 
 run_bench_gate() {

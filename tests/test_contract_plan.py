@@ -1,0 +1,319 @@
+"""Contraction planner + plan cache: the planner/executor split must be a
+pure lowering change over the legacy greedy eliminator.
+
+* Tree- and grid-structured factor graphs: the planned contraction agrees
+  with ``dispatch="pairwise"`` (bit-identical when the plan degenerates to
+  greedy ElimSteps, tight-tolerance when branch-and-bound reorders).
+* Scan-rolled chains (length past the cost-model crossover) are
+  BIT-IDENTICAL to the unrolled pairwise path — the forward sweep reproduces
+  greedy's float-op association exactly.
+* The plan cache keys on structure, not values: a second same-shape
+  contraction plans zero times; a different shape misses.
+* Planner internals: `describe()` inspectability, fingerprint
+  stability/knob-sensitivity, the chain-length crossover.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import distributions as dist
+from repro.core import handlers
+from repro.core import primitives as P
+from repro.infer import (
+    clear_plan_cache,
+    config_enumerate,
+    infer_discrete,
+    plan_cache_stats,
+)
+from repro.infer.contract import (
+    ChainStep,
+    chain_threshold,
+    contract_log_factors,
+    factor_structs,
+    fingerprint,
+    plan_elimination,
+    plan_knobs,
+    planned_contraction,
+)
+from repro.infer.traceenum_elbo import _max_op
+
+KEEP = ("REPRO_ENUM_DISPATCH", "REPRO_ENUM_CHAIN_MIN", "REPRO_ENUM_CHAIN_LOWER")
+
+
+@pytest.fixture(autouse=True)
+def _clean_env_and_cache(monkeypatch):
+    for var in KEEP:
+        monkeypatch.delenv(var, raising=False)
+    clear_plan_cache()
+    yield
+    clear_plan_cache()
+
+
+# ---------------------------------------------------------------------------
+# synthetic factor graphs (the `_collect_factors` layout: right-aligned
+# log-tensors, z_i on enum dim -(i+1))
+# ---------------------------------------------------------------------------
+
+
+def embed(t, dims, n_dims):
+    """Right-align a small dense tensor onto enum dims `dims` (ascending)."""
+    shape = [1] * n_dims
+    for d, k in zip(dims, t.shape):
+        shape[n_dims + d] = k
+    order = np.argsort(dims)  # ascending dims = memory order of axes
+    return jnp.reshape(jnp.transpose(t, tuple(order)), shape)
+
+
+def chain_factors(T, K, seed=0):
+    """z_0 -> z_1 -> ... -> z_T with a unary on every node."""
+    rng = np.random.default_rng(seed)
+    n = T + 1
+    factors = [(frozenset(), embed(jnp.asarray(rng.normal(size=K), jnp.float32), (-1,), 1), None)]
+    for t in range(1, n):
+        pair = jnp.asarray(rng.normal(size=(K, K)), jnp.float32)
+        factors.append((frozenset(), embed(pair, (-(t + 1), -t), t + 1), None))
+        un = jnp.asarray(rng.normal(size=K), jnp.float32)
+        factors.append((frozenset(), embed(un, (-(t + 1),), t + 1), None))
+    return factors, frozenset(-(t + 1) for t in range(n))
+
+
+def tree_factors(K, seed=1):
+    """A binary tree of 7 latents (root 0, children 1/2, leaves 3..6)."""
+    rng = np.random.default_rng(seed)
+    edges = [(0, 1), (0, 2), (1, 3), (1, 4), (2, 5), (2, 6)]
+    n = 7
+    factors = []
+    for a, b in edges:
+        pair = jnp.asarray(rng.normal(size=(K, K)), jnp.float32)
+        da, db = -(a + 1), -(b + 1)
+        lo, hi = min(da, db), max(da, db)
+        t = pair if da < db else pair.T
+        factors.append((frozenset(), embed(t, (lo, hi), -lo), None))
+    for v in range(n):
+        un = jnp.asarray(rng.normal(size=K), jnp.float32)
+        factors.append((frozenset(), embed(un, (-(v + 1),), v + 1), None))
+    return factors, frozenset(-(v + 1) for v in range(n))
+
+
+def grid_factors(rows, cols, K, seed=2):
+    """A rows x cols MRF grid — loops, so no chain shortcut applies."""
+    rng = np.random.default_rng(seed)
+    n = rows * cols
+    idx = lambda r, c: r * cols + c  # noqa: E731
+    factors = []
+    for r in range(rows):
+        for c in range(cols):
+            for r2, c2 in ((r, c + 1), (r + 1, c)):
+                if r2 < rows and c2 < cols:
+                    pair = jnp.asarray(rng.normal(size=(K, K)), jnp.float32)
+                    da, db = -(idx(r, c) + 1), -(idx(r2, c2) + 1)
+                    lo, hi = min(da, db), max(da, db)
+                    t = pair if da < db else pair.T
+                    factors.append((frozenset(), embed(t, (lo, hi), -lo), None))
+    return factors, frozenset(-(v + 1) for v in range(n))
+
+
+def contract(factors, pool, dispatch, **kw):
+    return jnp.ravel(contract_log_factors(factors, {}, pool, dispatch=dispatch, **kw))
+
+
+# ---------------------------------------------------------------------------
+# planner-vs-greedy parity on trees and grids
+# ---------------------------------------------------------------------------
+
+
+def test_tree_parity_bit_identical():
+    # every branch is shorter than the scan crossover, so the plan is pure
+    # ElimSteps — the exact greedy schedule, bit for bit
+    factors, pool = tree_factors(K=4)
+    a = contract(factors, pool, "auto")
+    p = contract(factors, pool, "pairwise")
+    assert jnp.array_equal(a, p)
+
+
+def test_grid_parity():
+    # loops: branch-and-bound may beat the sorted-dim greedy order, so
+    # demand tight agreement rather than bit-identity
+    factors, pool = grid_factors(3, 3, K=3)
+    a = contract(factors, pool, "auto")
+    p = contract(factors, pool, "pairwise")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(p), rtol=2e-6)
+
+
+def test_grid_max_semiring_parity():
+    factors, pool = grid_factors(3, 3, K=3)
+    a = contract(factors, pool, "auto", sum_op=_max_op)
+    p = contract(factors, pool, "pairwise", sum_op=_max_op)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(p), rtol=2e-6)
+
+
+# ---------------------------------------------------------------------------
+# scan-rolled chains: bit-identical to the unrolled pairwise path
+# ---------------------------------------------------------------------------
+
+
+def test_long_chain_scan_bit_identical():
+    T = chain_threshold() + 6  # comfortably past the crossover: scan lowering
+    factors, pool = chain_factors(T, K=5)
+    plan = planned_contraction([(t, s) for _, t, s in factors], pool, pool)
+    chains = [s for s in plan.steps if isinstance(s, ChainStep)]
+    assert len(chains) == 1 and chains[0].lower == "scan" and chains[0].absorb
+    a = contract(factors, pool, "auto")
+    p = contract(factors, pool, "pairwise")
+    assert jnp.array_equal(a, p), "scan-rolled chain must match greedy bit-for-bit"
+
+
+def test_long_chain_scan_bit_identical_max_semiring():
+    T = chain_threshold() + 6
+    factors, pool = chain_factors(T, K=5)
+    a = contract(factors, pool, "auto", sum_op=_max_op)
+    p = contract(factors, pool, "pairwise", sum_op=_max_op)
+    assert jnp.array_equal(a, p)
+
+
+def test_long_chain_viterbi_assignments_match():
+    T, K = chain_threshold() + 4, 3
+    rng = np.random.default_rng(3)
+    trans = jnp.asarray(rng.dirichlet(np.ones(K), size=K), jnp.float32)
+    init_p = jnp.asarray(rng.dirichlet(np.ones(K)), jnp.float32)
+    locs = jnp.linspace(-2.0, 2.0, K)
+    obs = jnp.asarray(rng.normal(size=T), jnp.float32)
+
+    @config_enumerate
+    def hmm():
+        z = P.sample("z_0", dist.Categorical(init_p))
+        P.sample("x_0", dist.Normal(locs[z], 1.0), obs=obs[0])
+        for t in range(1, T):
+            z = P.sample(f"z_{t}", dist.Categorical(trans[z]))
+            P.sample(f"x_{t}", dist.Normal(locs[z], 1.0), obs=obs[t])
+
+    def decode(mode):
+        os.environ["REPRO_ENUM_DISPATCH"] = mode
+        try:
+            dec = infer_discrete(hmm, temperature=0, rng_key=jax.random.PRNGKey(2))
+            tr = handlers.trace(handlers.seed(dec, jax.random.PRNGKey(3))).get_trace()
+            return [int(tr[f"z_{t}"]["value"]) for t in range(T)]
+        finally:
+            os.environ.pop("REPRO_ENUM_DISPATCH", None)
+
+    assert decode("auto") == decode("pairwise")
+
+
+# ---------------------------------------------------------------------------
+# plan cache: structural keying, hits, and stats
+# ---------------------------------------------------------------------------
+
+
+def test_plan_cache_hit_on_same_structure():
+    factors, pool = chain_factors(chain_threshold() + 2, K=4, seed=7)
+    contract(factors, pool, "auto")
+    s0 = plan_cache_stats()
+    assert s0["misses"] >= 1 and s0["size"] >= 1
+
+    # same structure, different values: the plan must be reused, not rebuilt
+    factors2, pool2 = chain_factors(chain_threshold() + 2, K=4, seed=8)
+    contract(factors2, pool2, "auto")
+    s1 = plan_cache_stats()
+    assert s1["misses"] == s0["misses"], "same-structure contraction replanned"
+    assert s1["hits"] > s0["hits"]
+
+
+def test_plan_cache_miss_on_different_structure():
+    factors, pool = chain_factors(chain_threshold() + 2, K=4)
+    contract(factors, pool, "auto")
+    misses = plan_cache_stats()["misses"]
+    factors2, pool2 = chain_factors(chain_threshold() + 2, K=5)  # different K
+    contract(factors2, pool2, "auto")
+    assert plan_cache_stats()["misses"] == misses + 1
+
+
+def test_plan_cache_disabled(monkeypatch):
+    monkeypatch.setenv("REPRO_ENUM_PLAN_CACHE", "0")
+    factors, pool = chain_factors(4, K=3)
+    before = plan_cache_stats()
+    a = contract(factors, pool, "auto")
+    p = contract(factors, pool, "pairwise")
+    assert jnp.array_equal(a, p)
+    assert plan_cache_stats()["size"] == before["size"]
+
+
+# ---------------------------------------------------------------------------
+# planner internals
+# ---------------------------------------------------------------------------
+
+
+def test_plan_describe_inspectable():
+    factors, pool = chain_factors(chain_threshold() + 2, K=4)
+    plan = planned_contraction([(t, s) for _, t, s in factors], pool, pool)
+    text = plan.describe()
+    assert "ContractionPlan" in text and "chain[scan]" in text
+    assert "absorb front" in text and "outputs:" in text
+    assert plan.cost > 0
+
+
+def test_chain_step_eliminates():
+    step = ChainStep(
+        path=(-4, -3, -2, -1), edges=((0,), (1,), (2,)),
+        folded=((), (3,), (4,), ()), absorbed=(5,), absorb=True,
+        lower="scan", out=6,
+    )
+    assert step.eliminates() == (-4, -3, -2)
+    step2 = ChainStep(
+        path=(-4, -3, -2, -1), edges=((0,), (1,), (2,)),
+        folded=((), (3,), (4,), ()), absorbed=(), absorb=False,
+        lower="tree", out=6,
+    )
+    assert step2.eliminates() == (-3, -2)
+
+
+def test_chain_threshold_default_and_override(monkeypatch):
+    default = chain_threshold()
+    assert 10 <= default <= 32  # the cost-model crossover, not a magic constant
+    monkeypatch.setenv("REPRO_ENUM_CHAIN_MIN", "2")
+    assert chain_threshold() == 2
+    monkeypatch.setenv("REPRO_ENUM_CHAIN_MIN", "1")
+    assert chain_threshold() == 2  # floor: a 1-edge "chain" is a plain matmul
+
+
+def test_fingerprint_ignores_values_tracks_structure():
+    factors, pool = chain_factors(6, K=3, seed=0)
+    factors2, _ = chain_factors(6, K=3, seed=9)
+    ts = [(t, s) for _, t, s in factors]
+    ts2 = [(t, s) for _, t, s in factors2]
+    knobs = plan_knobs()
+    f1 = fingerprint(factor_structs(ts, pool), frozenset(pool), "logsumexp", knobs)
+    f2 = fingerprint(factor_structs(ts2, pool), frozenset(pool), "logsumexp", knobs)
+    assert f1 == f2  # values never enter the key
+    f3 = fingerprint(factor_structs(ts, pool), frozenset(pool), "max", knobs)
+    assert f3 != f1  # semiring does
+    f4 = fingerprint(
+        factor_structs(ts, pool), frozenset(pool), "logsumexp",
+        ("2",) + tuple(knobs[1:]),
+    )
+    assert f4 != f1  # and so do the planning knobs
+
+
+def test_forced_lowering_parity(monkeypatch):
+    factors, pool = chain_factors(chain_threshold() + 2, K=4)
+    p = contract(factors, pool, "pairwise")
+    for lower, rtol in (("scan", 0.0), ("tree", 2e-6), ("folds", 2e-6)):
+        monkeypatch.setenv("REPRO_ENUM_CHAIN_LOWER", lower)
+        clear_plan_cache()
+        a = contract(factors, pool, "auto")
+        if rtol == 0.0:
+            assert jnp.array_equal(a, p), f"{lower} lowering not bit-identical"
+        else:
+            np.testing.assert_allclose(np.asarray(a), np.asarray(p), rtol=rtol)
+
+
+def test_plan_elimination_pure_structural():
+    factors, pool = tree_factors(K=3)
+    ts = [(t, s) for _, t, s in factors]
+    structs = factor_structs(ts, pool)
+    plan1 = plan_elimination(structs, frozenset(pool))
+    plan2 = plan_elimination(structs, frozenset(pool))
+    assert plan1.steps == plan2.steps and plan1.outputs == plan2.outputs
+    assert set(plan1.eliminated) == set(pool)

@@ -240,9 +240,10 @@ def test_to_from_matrix_roundtrip():
 
 
 def test_short_chains_stay_on_greedy_by_default(monkeypatch):
-    """Below REPRO_ENUM_CHAIN_MIN (default 16 edges) the greedy backward pass
-    is both cheaper per step and near-instant to compile, so the dispatch
-    must leave short chains alone: auto == pairwise bit-for-bit there."""
+    """Below the planner's chain crossover (~18 edges; REPRO_ENUM_CHAIN_MIN
+    overrides) the greedy backward pass is both cheaper per step and
+    near-instant to compile, so the dispatch must leave short chains alone:
+    auto == pairwise bit-for-bit there."""
     monkeypatch.delenv("REPRO_ENUM_CHAIN_MIN", raising=False)
     hmm, obs = make_hmm(6, 3)
     elbo = TraceEnum_ELBO()
