@@ -1,7 +1,8 @@
 """Bench-regression gate: diff freshly written BENCH_*.json numbers against
 the committed baselines (HEAD) and fail on regression.
 
-Usage: python benchmarks/check_regression.py BENCH_enum.json BENCH_serve.json
+Usage: python benchmarks/check_regression.py BENCH_enum.json BENCH_serve.json \
+           BENCH_mcmc.json
 
 For each file, the committed baseline is read from ``git show HEAD:<file>``
 (a file with no committed baseline is skipped with a note — its first run
@@ -12,7 +13,8 @@ leaves whose key names a gated metric are compared:
   ``p99_ms``, ``bucketed_ms_per_req``): fail when
   ``fresh > base * (1 + tol) + abs_slack``
 * higher-is-better (``requests_per_sec``, ``rows_per_sec``,
-  ``speedup_steady``): fail when ``fresh < base / (1 + tol)``
+  ``speedup_steady``, ``draws_per_sec``, ``ess_per_sec``): fail when
+  ``fresh < base / (1 + tol)``
 * lower-is-better cold-compile (``cold_s``, ``cold_compile_s``,
   ``viterbi_s``): fail when ``fresh > base * (1 + cold_tol) + cold_abs_s`` —
   a separate, looser tolerance, because compile time is noisier than
@@ -48,9 +50,10 @@ from pathlib import Path
 REPO = Path(__file__).resolve().parent.parent
 
 LOWER_BETTER = {"steady_ms", "step_ms", "p50_ms", "p99_ms", "bucketed_ms_per_req"}
-HIGHER_BETTER = {"requests_per_sec", "rows_per_sec", "speedup_steady"}
+HIGHER_BETTER = {"requests_per_sec", "rows_per_sec", "speedup_steady",
+                 "draws_per_sec", "ess_per_sec"}
 COLD_LOWER_BETTER = {"cold_s", "cold_compile_s", "viterbi_s"}
-IDENTITY_KEYS = ("T", "K", "dispatch", "bench")
+IDENTITY_KEYS = ("T", "K", "dispatch", "bench", "chains", "mode")
 
 
 def committed_baseline(name: str):
@@ -118,7 +121,7 @@ def gate(name: str, tol: float, abs_ms: float, cold_tol: float, cold_abs_s: floa
 
 def main(argv=None) -> int:
     names = (argv if argv is not None else sys.argv[1:]) or [
-        "BENCH_enum.json", "BENCH_serve.json"
+        "BENCH_enum.json", "BENCH_serve.json", "BENCH_mcmc.json"
     ]
     tol = float(os.environ.get("REPRO_BENCH_TOLERANCE", "0.25"))
     abs_ms = float(os.environ.get("REPRO_BENCH_ABS_MS", "0.5"))

@@ -1,0 +1,115 @@
+"""ChEES-style cross-chain trajectory-length adaptation (Hoffman, Radul &
+Sountsov 2021, "An Adaptive MCMC Scheme for Setting Trajectory Lengths in
+Hamiltonian Monte Carlo").
+
+NUTS picks a trajectory length per chain per draw by building a tree — robust
+but control-flow heavy. ChEES instead tunes ONE shared trajectory length from
+statistics pooled *across* chains, which is exactly the information the fused
+batched driver (`infer/mcmc.py`) has on hand: every transition sees all C
+proposals at once. The criterion is the Change in the Estimator of the
+Expected Square of the centered second moment,
+
+    ChEES = (1/4) E[ (||z' - E z'||^2 - ||z - E z||^2)^2 ],
+
+whose gradient with respect to the trajectory *time* t has the per-chain
+single-sample estimator
+
+    g_c = (||z'_c - z̄'||^2 - ||z_c - z̄||^2) · ⟨z'_c - z̄', v'_c⟩,
+
+with v' = M⁻¹ r' the end-point velocity. Chains are weighted by their
+Metropolis accept probability (a proposal that will be rejected carries no
+information about where the chain is going), trajectories are jittered by a
+Halton sequence (u_i · tau with u_i the radical-inverse of the step index —
+low-discrepancy, so no RNG pressure and no resonance with periodic targets),
+and log(tau) follows the gradient through Adam. Everything here is shared
+across chains — per the compile-once contract the state is a handful of
+scalars, and with a single chain the centered moments vanish so adaptation
+degrades gracefully to a no-op (use NUTS or a fixed `trajectory_length`
+there).
+
+The driver freezes the state after warmup exactly like dual averaging and
+the Welford mass-matrix accumulator (`mcmc.HMC._fused_adapt`).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+# Adam hyperparameters from the reference implementation (tensorflow
+# probability's ChEES criterion uses the same learning rate).
+_ADAM_LR = 0.025
+_ADAM_B1 = 0.9
+_ADAM_B2 = 0.999
+_ADAM_EPS = 1e-8
+
+# Static safety band on log(tau). Realizability (at least one, at most
+# `max_num_steps` leapfrog steps) is enforced by the DRIVER when it converts
+# tau to a step count — clipping the *state* against the still-adapting step
+# size would let one early tiny-eps iteration collapse tau to eps, and Adam
+# at lr 0.025 cannot climb back within a normal warmup.
+_LOG_TAU_MIN = jnp.log(1e-3)
+_LOG_TAU_MAX = jnp.log(1e3)
+
+
+class ChEESState(NamedTuple):
+    log_tau: jax.Array  # () log trajectory length (time units, not steps)
+    m: jax.Array        # () Adam first moment
+    v: jax.Array        # () Adam second moment
+    t: jax.Array        # () Adam step count
+
+
+def chees_init(trajectory_length: float) -> ChEESState:
+    return ChEESState(
+        jnp.log(jnp.asarray(trajectory_length, jnp.float32)),
+        jnp.zeros(()),
+        jnp.zeros(()),
+        jnp.zeros(()),
+    )
+
+
+def halton_jitter(i, nbits: int = 16):
+    """u_i ∈ (0, 1): the base-2 radical inverse (van der Corput / 1-D Halton
+    sequence) of step index i — deterministic low-discrepancy jitter for the
+    trajectory length. Static 16-bit unroll, jit-friendly."""
+    n = (jnp.asarray(i, jnp.uint32) + 1) & jnp.uint32((1 << nbits) - 1)
+    u = jnp.zeros((), jnp.float32)
+    f = 0.5
+    for _ in range(nbits):
+        u = u + f * (n & 1)
+        n = n >> 1
+        f = f * 0.5
+    return jnp.maximum(u, 2.0 ** -nbits)
+
+
+def chees_update(
+    state: ChEESState,
+    z0: jax.Array,           # (C, D) positions before the transition
+    z1: jax.Array,           # (C, D) PROPOSED end points (not post-accept)
+    r1: jax.Array,           # (C, D) proposed end-point momenta
+    accept_prob: jax.Array,  # (C,) Metropolis accept probabilities
+    inv_mass: jax.Array,     # (C, D) or (D,) diagonal inverse mass
+    jitter: jax.Array,       # () the u_i this transition's length was scaled by
+) -> ChEESState:
+    """One cross-chain Adam ascent step on log(tau). Pure; the caller gates
+    it on `i < warmup_len` and freezes the state afterwards."""
+    d0 = z0 - jnp.mean(z0, axis=0)
+    d1 = z1 - jnp.mean(z1, axis=0)
+    change = jnp.sum(d1 * d1, axis=-1) - jnp.sum(d0 * d0, axis=-1)  # (C,)
+    v1 = inv_mass * r1
+    per_chain = change * jnp.sum(d1 * v1, axis=-1)                  # (C,)
+    w = jnp.maximum(accept_prob, 0.0)
+    # d/dt of the criterion, estimated across chains; t = u·tau so the
+    # chain rule to log tau multiplies by u·tau
+    grad_t = jnp.sum(w * per_chain) / jnp.maximum(jnp.sum(w), 1e-10)
+    grad = grad_t * jitter * jnp.exp(state.log_tau)
+
+    t = state.t + 1.0
+    m = _ADAM_B1 * state.m + (1.0 - _ADAM_B1) * grad
+    v = _ADAM_B2 * state.v + (1.0 - _ADAM_B2) * grad * grad
+    m_hat = m / (1.0 - _ADAM_B1 ** t)
+    v_hat = v / (1.0 - _ADAM_B2 ** t)
+    log_tau = state.log_tau + _ADAM_LR * m_hat / (jnp.sqrt(v_hat) + _ADAM_EPS)
+    log_tau = jnp.clip(log_tau, _LOG_TAU_MIN, _LOG_TAU_MAX)
+    return ChEESState(log_tau, m, v, t)

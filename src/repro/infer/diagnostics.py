@@ -86,7 +86,15 @@ def _rhat_batched(x: jnp.ndarray) -> jnp.ndarray:
     w = chain_var.mean(-1)
     b = n * chain_mean.var(-1, ddof=1)
     var_plus = (n - 1) / n * w + b / n
-    return jnp.sqrt(var_plus / w)
+    # w == 0 means every chain is constant: R̂ is +inf when the chains sit at
+    # different values (maximally unconverged) and NaN when ALL draws are one
+    # value (no variance to compare — documented NaN, not a crash). NaN draws
+    # make w NaN, which falls through both branches to NaN.
+    return jnp.where(
+        w > 0,
+        jnp.sqrt(var_plus / jnp.where(w > 0, w, 1.0)),
+        jnp.where(b > 0, jnp.inf, jnp.nan),
+    )
 
 
 def _autocov(x: jnp.ndarray) -> jnp.ndarray:
@@ -154,8 +162,16 @@ def _rank_normalize(x: jnp.ndarray) -> jnp.ndarray:
 
 def split_rhat(x: jnp.ndarray) -> jnp.ndarray:
     """Split-chain R̂ of draws shaped (num_chains, num_draws, *event);
-    returns an array shaped like the event (scalar for scalar sites)."""
+    returns an array shaped like the event (scalar for scalar sites).
+
+    Degenerate inputs give documented values instead of raising or emitting
+    garbage: fewer than 4 draws per chain → NaN (the split halves can't both
+    carry a variance); all-constant draws → NaN; constant chains at distinct
+    values → +inf; any NaN draw → NaN.
+    """
     batched = _as_batched(x)
+    if jnp.shape(x)[1] < 4:
+        return jnp.full(jnp.shape(x)[2:], jnp.nan)
     out = _rhat_batched(batched)
     return out.reshape(jnp.shape(x)[2:])
 
@@ -169,19 +185,37 @@ def effective_sample_size(x: jnp.ndarray, kind: str = "bulk") -> jnp.ndarray:
     rank-normalization (classic autocorrelation ESS). All kinds operate on
     *split* chains (as Stan/ArviZ do), so within-chain drift deflates the
     estimate instead of hiding in the within-chain variance.
+
+    Degenerate inputs: fewer than 4 draws per chain → NaN; constant draws →
+    the total draw count m·n (zero autocorrelation information, documented in
+    `_ess_batched`); any NaN draw → NaN. The NaN guard is explicit because
+    both rank-normalization (argsort) and the tail indicators (comparisons)
+    would otherwise silently convert NaN draws into *finite* — and therefore
+    trustworthy-looking — ESS values.
     """
-    batched = _split_chains(_as_batched(x))  # (K, 2m, n//2)
+    if kind not in ("bulk", "raw", "tail"):
+        raise ValueError(f"kind must be 'bulk', 'tail' or 'raw', got {kind!r}")
+    batched = _as_batched(x)
+    if jnp.shape(x)[1] < 4:
+        return jnp.full(jnp.shape(x)[2:], jnp.nan)
+    batched = _split_chains(batched)  # (K, 2m, n//2)
     if kind == "bulk":
         out = _ess_batched(_rank_normalize(batched))
     elif kind == "raw":
         out = _ess_batched(batched)
-    elif kind == "tail":
+    else:  # tail
         q = jnp.quantile(batched, jnp.asarray([0.05, 0.95]), axis=(-2, -1))  # (2, K)
         lo = (batched <= q[0][..., None, None]).astype(jnp.float32)
         hi = (batched <= q[1][..., None, None]).astype(jnp.float32)
         out = jnp.minimum(_ess_batched(lo), _ess_batched(hi))
-    else:
-        raise ValueError(f"kind must be 'bulk', 'tail' or 'raw', got {kind!r}")
+    # constant draws: rank-normalization would fabricate variation out of
+    # arbitrary tie-breaking (argsort of equal values), so pin the documented
+    # ESS = total draws before the transforms can launder it
+    m2, n2 = batched.shape[-2], batched.shape[-1]
+    const = batched.max(axis=(-2, -1)) == batched.min(axis=(-2, -1))
+    out = jnp.where(const, float(m2 * n2), out)
+    bad = jnp.isnan(batched).any(axis=(-2, -1))
+    out = jnp.where(bad, jnp.nan, out)
     return out.reshape(jnp.shape(x)[2:])
 
 

@@ -17,11 +17,27 @@ The `MCMC` driver runs `num_chains` chains initialized from split PRNG keys.
 Warmup (with windowed mass-matrix re-estimation) and collection each run
 inside a single `lax.scan`, so one `MCMC.run` issues a constant number of
 compiled calls regardless of `num_warmup`/`num_samples`
-(`benchmarks/mcmc_chains.py` asserts this). Chains are vectorized with
-`vmap`; `chain_method="sharded"` additionally constrains the chain axis onto
-the mesh's data axes via `distributed.sharding.shard_chains`, which is a
-no-op transformation of the math — on a 1-device mesh the output is
-bit-for-bit identical to `"vectorized"`.
+(`benchmarks/mcmc_chains.py` asserts this). `chain_method="sharded"`
+additionally constrains the chain axis onto the mesh's data axes via
+`distributed.sharding.shard_chains`, which is a no-op transformation of the
+math — on a 1-device mesh the output is bit-for-bit identical to
+`"vectorized"`.
+
+Two interiors implement that contract. The default **fused** driver ravels
+all chains into one (num_chains, D) matrix and steps them together through
+the backend-dispatched `ops.leapfrog` kernel — a shared-gradient integrator
+costing n + 1 potential gradients per trajectory (not the textbook 2n) and
+only the steps actually taken (not the `max_num_steps` cap). Adaptation is
+pooled across chains: one dual-averaged step size from the mean accept
+probability, one diagonal mass matrix from a cross-chain Welford
+accumulator, and (`HMC(adapt_trajectory_length=True)`) one ChEES-adapted
+trajectory length (see `infer/chees.py`). NUTS builds its trees batched:
+iterative doubling with per-chain active masks, no per-chain control flow.
+The **legacy** per-chain vmap sampler — `REPRO_MCMC_FUSED=0` or
+`MCMC(..., fused=False)` — is retained as the benchmark baseline;
+`benchmarks/mcmc_bench.py` holds fused to >= 2x its draws/sec at 1024
+chains, and `tests/test_mcmc_conformance.py` pins the fused distribution
+against closed-form targets under both kernel backends.
 
 Example — two HMC chains on a conjugate model, grouped samples::
 
@@ -47,13 +63,17 @@ Example — two HMC chains on a conjugate model, grouped samples::
 from __future__ import annotations
 
 import math
+import os
 from functools import partial
 from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.flatten_util import ravel_pytree
 
+from ..kernels import ops
+from .chees import ChEESState, chees_init, chees_update, halton_jitter
 from .util import init_to_uniform, initialize_model, potential_energy, transform_fn
 
 # ---------------------------------------------------------------------------
@@ -142,6 +162,30 @@ def welford_variance(state: WelfordState, regularize: bool = True):
     return jax.tree_util.tree_map(var, state.m2)
 
 
+def welford_update_batch(mean, m2, n, x):
+    """Fold a whole (C, D) batch into a pooled (D,)-per-dim Welford
+    accumulator in one shot (Chan et al.'s parallel combine) — the fused
+    driver feeds all chains' draws to ONE cross-chain mass-matrix estimate
+    per transition instead of C independent ones."""
+    c = x.shape[0]
+    bmean = jnp.mean(x, axis=0)
+    bm2 = jnp.sum(jnp.square(x - bmean), axis=0)
+    delta = bmean - mean
+    tot = n + c
+    mean_new = mean + delta * (c / tot)
+    m2_new = m2 + bm2 + jnp.square(delta) * (n * c / tot)
+    return mean_new, m2_new, tot
+
+
+def pooled_variance(m2, n, regularize: bool = True):
+    """Variance of a pooled accumulator, with Stan's shrinkage toward unit
+    (same regularizer as `welford_variance`, n counted across chains)."""
+    v = m2 / jnp.maximum(n - 1.0, 1.0)
+    if regularize:
+        v = (n / (n + 5.0)) * v + 1e-3 * (5.0 / (n + 5.0))
+    return v
+
+
 # ---------------------------------------------------------------------------
 # Leapfrog
 # ---------------------------------------------------------------------------
@@ -198,6 +242,31 @@ class HMCState(NamedTuple):
     diverging: jax.Array  # this transition hit an energy error > threshold
 
 
+class FlatHMCState(NamedTuple):
+    """State of the fused batched driver: ALL chains in one struct, positions
+    raveled to a (C, D) matrix so the hot loop is dense batched linear
+    algebra (and `ops.leapfrog` kernel calls) instead of a vmap of pytree
+    traversals. Adaptation state is cross-chain: one step size, one diagonal
+    mass matrix, one pooled Welford accumulator, one ChEES trajectory length
+    — shared by every chain, which is what lets thousands of short chains
+    warm up from each other's statistics."""
+
+    z: jax.Array            # (C, D) unconstrained positions
+    potential: jax.Array    # (C,)
+    rng_key: jax.Array      # single PRNG key; per-step keys fold in `i`
+    step_size: jax.Array    # () shared across chains
+    inv_mass: jax.Array     # (D,) shared diagonal inverse mass
+    da: DAState             # shared dual-averaging state (scalars)
+    wf_mean: jax.Array      # (D,) pooled Welford mean
+    wf_m2: jax.Array        # (D,) pooled Welford sum of squared deviations
+    wf_n: jax.Array         # () pooled sample count (counts chain-draws)
+    chees: ChEESState       # shared trajectory-length adaptation (scalars)
+    i: jax.Array            # () transition counter
+    accept_prob: jax.Array  # (C,) last accept probabilities
+    num_steps: jax.Array    # (C,) int32 leapfrog steps (diagnostics)
+    diverging: jax.Array    # (C,) bool divergence flags
+
+
 class HMC:
     def __init__(
         self,
@@ -210,6 +279,7 @@ class HMC:
         target_accept_prob: float = 0.8,
         max_tree_depth: int = 10,
         max_num_steps: int = 1024,
+        adapt_trajectory_length: bool = False,
     ):
         if (model is None) == (potential_fn is None):
             raise ValueError("pass exactly one of model / potential_fn")
@@ -222,6 +292,10 @@ class HMC:
         self.target_accept = target_accept_prob
         self.max_tree_depth = max_tree_depth
         self.max_num_steps = max_num_steps
+        # ChEES cross-chain trajectory tuning (fused driver only; needs >= 2
+        # chains to carry information — see infer/chees.py). NUTS ignores it:
+        # the tree IS its trajectory adaptation.
+        self.adapt_trajectory_length = adapt_trajectory_length
         self._transforms = None
 
     # -- setup ---------------------------------------------------------------
@@ -339,6 +413,114 @@ class HMC:
             ok = state.welford.n > 1
             inv_mass = _tree_where(ok, var, inv_mass)
         step_size = jnp.exp(state.da.log_step_avg) if self.adapt_step_size else state.step_size
+        return state._replace(inv_mass=inv_mass, step_size=step_size)
+
+    # -- fused batched path (all chains at once, ops.leapfrog hot loop) ------
+    def fused_init_state(self, rng_key, z_flat, potential) -> FlatHMCState:
+        """State for the fused driver: z_flat (C, D), potential (C,)."""
+        C, D = z_flat.shape
+        return FlatHMCState(
+            z_flat,
+            potential,
+            rng_key,
+            jnp.asarray(self.step_size, jnp.float32),
+            jnp.ones((D,), jnp.float32),
+            da_init(self.step_size),
+            jnp.zeros((D,), jnp.float32),
+            jnp.zeros((D,), jnp.float32),
+            jnp.zeros(()),
+            chees_init(self.trajectory_length),
+            jnp.zeros((), jnp.int32),
+            jnp.zeros((C,)),
+            jnp.zeros((C,), jnp.int32),
+            jnp.zeros((C,), bool),
+        )
+
+    def _fused_adapt(self, state: FlatHMCState, accept_prob, z_batch, warmup_len):
+        """Cross-chain analogue of `_adapt`: dual averaging on the MEAN
+        accept probability across chains, pooled Welford over the whole
+        (C, D) batch of draws. Frozen once `state.i` passes warmup."""
+        in_warmup = state.i < warmup_len
+        if self.adapt_step_size:
+            da_new = da_update(state.da, jnp.mean(accept_prob), self.target_accept)
+            da = _tree_where(in_warmup, da_new, state.da)
+            step_size = jnp.where(
+                in_warmup, jnp.exp(da.log_step), jnp.exp(da.log_step_avg)
+            )
+        else:
+            da, step_size = state.da, state.step_size
+        if self.adapt_mass_matrix:
+            wf_new = welford_update_batch(
+                state.wf_mean, state.wf_m2, state.wf_n, z_batch
+            )
+            wf = _tree_where(in_warmup, wf_new, (state.wf_mean, state.wf_m2, state.wf_n))
+        else:
+            wf = (state.wf_mean, state.wf_m2, state.wf_n)
+        return da, step_size, wf
+
+    def fused_sample_step(
+        self, state: FlatHMCState, pe_flat, warmup_len: int = 0,
+        backend: Optional[str] = None,
+    ) -> FlatHMCState:
+        """One batched HMC transition for all C chains via `ops.leapfrog`.
+        The trajectory length is shared across chains — fixed at
+        `trajectory_length`, or Halton-jittered and ChEES-adapted during
+        warmup when `adapt_trajectory_length` (see infer/chees.py)."""
+        C, D = state.z.shape
+        key = jax.random.fold_in(state.rng_key, state.i)
+        key_mom, key_accept = jax.random.split(key)
+        inv_b = jnp.broadcast_to(state.inv_mass, (C, D))
+        r = jax.random.normal(key_mom, (C, D)) / jnp.sqrt(jnp.clip(inv_b, 1e-10))
+        energy0 = state.potential + 0.5 * jnp.sum(inv_b * r * r, axis=-1)
+        if self.adapt_trajectory_length:
+            u = halton_jitter(state.i)
+            traj = u * jnp.exp(state.chees.log_tau)
+        else:
+            u = jnp.ones(())
+            traj = jnp.asarray(self.trajectory_length, jnp.float32)
+        n = jnp.clip(
+            (traj / state.step_size).astype(jnp.int32), 1, self.max_num_steps
+        )
+        eps_c = jnp.broadcast_to(state.step_size, (C,)).astype(jnp.float32)
+        n_c = jnp.broadcast_to(n, (C,)).astype(jnp.int32)
+        z_new, r_new, pe_new = ops.leapfrog(
+            state.z, r, inv_b, eps_c, n_c, pe_flat,
+            max_steps=self.max_num_steps, backend=backend,
+        )
+        energy1 = pe_new + 0.5 * jnp.sum(inv_b * r_new * r_new, axis=-1)
+        delta = energy0 - energy1
+        delta = jnp.where(jnp.isnan(delta), -jnp.inf, delta)
+        diverging = -delta > 1000.0
+        accept_prob = jnp.minimum(1.0, jnp.exp(delta))
+        accept = jax.random.uniform(key_accept, (C,)) < accept_prob
+        z = jnp.where(accept[:, None], z_new, state.z)
+        potential = jnp.where(accept, pe_new, state.potential)
+        da, step_size, (wf_mean, wf_m2, wf_n) = self._fused_adapt(
+            state, accept_prob, z, warmup_len
+        )
+        chees = state.chees
+        if self.adapt_trajectory_length:
+            chees_new = chees_update(
+                state.chees, state.z, z_new, r_new, accept_prob, inv_b, u,
+            )
+            chees = _tree_where(state.i < warmup_len, chees_new, state.chees)
+        return FlatHMCState(
+            z, potential, state.rng_key, step_size, state.inv_mass, da,
+            wf_mean, wf_m2, wf_n, chees, state.i + 1, accept_prob, n_c,
+            diverging,
+        )
+
+    def fused_finalize_warmup(self, state: FlatHMCState) -> FlatHMCState:
+        inv_mass = state.inv_mass
+        if self.adapt_mass_matrix:
+            ok = state.wf_n > 1
+            var = pooled_variance(state.wf_m2, state.wf_n)
+            inv_mass = jnp.where(ok, var, inv_mass)
+        step_size = (
+            jnp.exp(state.da.log_step_avg)
+            if self.adapt_step_size
+            else state.step_size
+        )
         return state._replace(inv_mass=inv_mass, step_size=step_size)
 
 
@@ -502,6 +684,136 @@ class NUTS(HMC):
             welford, state.i + 1, accept_prob, tree.n_leapfrog, tree.diverging,
         )
 
+    # -- fused batched path: tree building vectorized across the chain axis --
+    def fused_sample_step(
+        self, state: FlatHMCState, pe_flat, warmup_len: int = 0,
+        backend: Optional[str] = None,
+    ) -> FlatHMCState:
+        """One batched NUTS transition: the iterative doubling loop runs ONCE
+        for the whole (C, D) batch with per-chain direction draws and active
+        masks, so every leapfrog step in the trajectory is a single
+        `ops.leapfrog` call over all chains (`num_steps` 1 where the chain is
+        still growing its tree, 0 where it has stopped) — the chain batch
+        never leaves the mesh, and the doubling-j subtree is a scan of
+        exactly 2^j steps instead of the per-chain path's fixed
+        2^max_tree_depth bound."""
+        C, D = state.z.shape
+        key = jax.random.fold_in(state.rng_key, state.i)
+        key_mom, key_loop = jax.random.split(key)
+        inv_b = jnp.broadcast_to(state.inv_mass, (C, D))
+        r0 = jax.random.normal(key_mom, (C, D)) / jnp.sqrt(jnp.clip(inv_b, 1e-10))
+        energy0 = state.potential + 0.5 * jnp.sum(inv_b * r0 * r0, axis=-1)
+        eps = jnp.broadcast_to(state.step_size, (C,)).astype(jnp.float32)
+        max_delta = 1000.0
+
+        def row_dot(a, b):
+            return jnp.sum(a * b, axis=-1)
+
+        # trajectory state, one row per chain
+        z_left = z_right = z_prop = state.z
+        r_left = r_right = r0
+        pe_prop = state.potential
+        log_w = jnp.zeros((C,))           # initial point has weight exp(0)
+        turning = jnp.zeros((C,), bool)
+        diverging = jnp.zeros((C,), bool)
+        sum_acc = jnp.zeros((C,))
+        n_leap = jnp.zeros((C,), jnp.int32)
+
+        for j in range(self.max_tree_depth):
+            key_j = jax.random.fold_in(key_loop, j)
+            key_dir, key_swap, key_in = jax.random.split(key_j, 3)
+            dirs = jnp.where(jax.random.bernoulli(key_dir, 0.5, (C,)), 1.0, -1.0)
+            stop = turning | diverging  # chains whose tree is finished
+            fwd = (dirs > 0)[:, None]
+            z_end = jnp.where(fwd, z_right, z_left)
+            r_end = jnp.where(fwd, r_right, r_left)
+
+            def body(carry, t, dirs=dirs, stop=stop, key_in=key_in):
+                (z_e, r_e, z_p, pe_p, lw, s_turn, s_div, s_acc,
+                 z_f, r_f, started, taken) = carry
+                active = ~stop & ~s_turn & ~s_div
+                z_n, r_n, pe_n = ops.leapfrog(
+                    z_e, r_e, inv_b, eps * dirs, active.astype(jnp.int32),
+                    pe_flat, max_steps=1, backend=backend,
+                )
+                e_n = pe_n + 0.5 * jnp.sum(inv_b * r_n * r_n, axis=-1)
+                delta = e_n - energy0
+                delta = jnp.where(jnp.isnan(delta), jnp.inf, delta)
+                div_n = delta > max_delta
+                lw_n = -delta
+                lw2 = jnp.logaddexp(lw, lw_n)
+                take = (
+                    jax.random.uniform(jax.random.fold_in(key_in, t), (C,))
+                    < jnp.exp(lw_n - lw2)
+                )
+                upd = active
+                sel = upd & take
+                z_p = jnp.where(sel[:, None], z_n, z_p)
+                pe_p = jnp.where(sel, pe_n, pe_p)
+                s_acc = s_acc + jnp.where(upd, jnp.minimum(1.0, jnp.exp(-delta)), 0.0)
+                first = upd & ~started
+                z_f = jnp.where(first[:, None], z_n, z_f)
+                r_f = jnp.where(first[:, None], r_n, r_f)
+                # direction-normalized U-turn within the growing subtree
+                dz = dirs[:, None] * (z_n - z_f)
+                turn_n = (
+                    (row_dot(dz, inv_b * r_f) < 0)
+                    | (row_dot(dz, inv_b * r_n) < 0)
+                ) & started  # need >= 2 points in the subtree
+                s_turn = s_turn | (upd & turn_n)
+                s_div = s_div | (upd & div_n)
+                lw = jnp.where(upd, lw2, lw)
+                z_e = jnp.where(upd[:, None], z_n, z_e)
+                r_e = jnp.where(upd[:, None], r_n, r_e)
+                started = started | upd
+                taken = taken + upd.astype(jnp.int32)
+                return (z_e, r_e, z_p, pe_p, lw, s_turn, s_div, s_acc,
+                        z_f, r_f, started, taken), None
+
+            init = (
+                z_end, r_end, z_prop, pe_prop, jnp.full((C,), -jnp.inf),
+                jnp.zeros((C,), bool), jnp.zeros((C,), bool), jnp.zeros((C,)),
+                z_end, r_end, jnp.zeros((C,), bool), jnp.zeros((C,), jnp.int32),
+            )
+            (z_end, r_end, z_ps, pe_ps, lw_sub, turn_sub, div_sub, acc_sub,
+             _, _, _, taken), _ = jax.lax.scan(body, init, jnp.arange(2 ** j))
+
+            # biased progressive sampling between the old tree and the subtree
+            total = jnp.logaddexp(log_w, lw_sub)
+            take_new = (
+                (jax.random.uniform(key_swap, (C,)) < jnp.exp(lw_sub - total))
+                & ~turn_sub & ~div_sub & ~stop
+            )
+            z_prop = jnp.where(take_new[:, None], z_ps, z_prop)
+            pe_prop = jnp.where(take_new, pe_ps, pe_prop)
+            move = ~stop
+            grow_l = ((dirs < 0) & move)[:, None]
+            grow_r = ((dirs > 0) & move)[:, None]
+            z_left = jnp.where(grow_l, z_end, z_left)
+            r_left = jnp.where(grow_l, r_end, r_left)
+            z_right = jnp.where(grow_r, z_end, z_right)
+            r_right = jnp.where(grow_r, r_end, r_right)
+            dzf = z_right - z_left
+            turn_full = (
+                (row_dot(dzf, inv_b * r_left) < 0)
+                | (row_dot(dzf, inv_b * r_right) < 0)
+            )
+            log_w = jnp.where(move, total, log_w)
+            turning = turning | turn_sub | (move & turn_full)
+            diverging = diverging | div_sub
+            sum_acc = sum_acc + acc_sub  # already masked per chain
+            n_leap = n_leap + taken
+
+        accept_prob = sum_acc / jnp.maximum(n_leap, 1)
+        da, step_size, (wf_mean, wf_m2, wf_n) = self._fused_adapt(
+            state, accept_prob, z_prop, warmup_len
+        )
+        return FlatHMCState(
+            z_prop, pe_prop, state.rng_key, step_size, state.inv_mass, da,
+            wf_mean, wf_m2, wf_n, state.chees, state.i + 1, accept_prob,
+            n_leap, diverging,
+        )
+
 
 # ---------------------------------------------------------------------------
 # MCMC driver: multi-chain, scan-based, optionally mesh-sharded
@@ -513,9 +825,19 @@ class MCMC:
 
     `run` initializes `num_chains` kernel states from split PRNG keys, runs
     warmup (with windowed mass-matrix re-estimation) and sample collection
-    inside `lax.scan`, and vmaps the whole per-chain program over the chain
-    axis — the entire run is ONE jit-compiled call, so the number of XLA
-    dispatches is constant in `num_warmup` and `num_samples`.
+    inside `lax.scan` — the entire run is ONE jit-compiled call, so the
+    number of XLA dispatches is constant in `num_warmup` and `num_samples`.
+
+    fused:
+      * ``True`` (the default; env override ``REPRO_MCMC_FUSED=0``) — all
+        chains step together as one (num_chains, D) batch through the
+        backend-dispatched `ops.leapfrog` kernel, with adaptation pooled
+        across chains (shared step size / mass matrix / optional ChEES
+        trajectory length). The raw-speed path, >= 2x legacy draws/sec at
+        1024 chains (`benchmarks/mcmc_bench.py`).
+      * ``False`` — the legacy interior: the per-chain program is vmapped
+        over the chain axis, each chain adapts independently. Kept as the
+        benchmark baseline.
 
     chain_method:
       * ``"vectorized"`` — chains ride a plain local `vmap` (default);
@@ -541,6 +863,7 @@ class MCMC:
         thinning: int = 1,
         chain_method: str = "vectorized",
         mesh=None,
+        fused: Optional[bool] = None,
     ):
         if chain_method not in ("vectorized", "sharded"):
             raise ValueError(
@@ -548,6 +871,13 @@ class MCMC:
             )
         if num_chains < 1:
             raise ValueError("num_chains must be >= 1")
+        if fused is None:
+            # default ON; REPRO_MCMC_FUSED=0 keeps the per-chain vmap path
+            # (the pre-fused baseline benchmarks compare against)
+            fused = os.environ.get("REPRO_MCMC_FUSED", "1").lower() not in (
+                "0", "false", "off",
+            )
+        self.fused = fused
         self.kernel = kernel
         self.num_warmup = num_warmup
         self.num_samples = num_samples
@@ -569,9 +899,9 @@ class MCMC:
         self._exec = None  # cached jitted driver
         self._exec_key = None
 
-    # -- the fused driver ----------------------------------------------------
+    # -- the legacy per-chain driver -----------------------------------------
     def _build_driver(self, randomize: bool, treedef, is_dyn, static_leaves):
-        """Build the fused (init -> warmup -> collect) program. Model args
+        """Build the legacy (init -> warmup -> collect) program. Model args
         ride the traced signature (array leaves in `is_dyn` positions) so
         repeat runs with fresh keys/data of the same shapes reuse one
         compiled executable; non-array leaves are baked in statically."""
@@ -662,6 +992,123 @@ class MCMC:
 
         return driver
 
+    def _build_fused_driver(
+        self, randomize: bool, treedef, is_dyn, static_leaves, backend: str
+    ):
+        """The fused batched program: positions raveled to one (C, D) matrix,
+        transitions stepped for ALL chains at once through `ops.leapfrog` on
+        the resolved kernel backend, adaptation pooled across chains. Same
+        external contract as `_build_driver` (one trace per run, samples as
+        {site: (C, S, ...)}), different interior: no per-chain vmap, so
+        cross-chain statistics (shared dual averaging, pooled Welford, ChEES)
+        are ordinary batch reductions."""
+        kernel = self.kernel
+        transforms = kernel._transforms
+        W, S, T, C = self.num_warmup, self.num_samples, self.thinning, self.num_chains
+        win = max(1, W // 2)
+        mesh = self.mesh
+        adapt_mm = kernel.adapt_mass_matrix
+        if mesh is not None:
+            from ..distributed.sharding import shard_chains
+
+        def make_pe(dyn_leaves):
+            if kernel.model is None:
+                return kernel._potential_fn
+            it = iter(dyn_leaves)
+            merged = [next(it) if d else s for d, s in zip(is_dyn, static_leaves)]
+            margs, mkwargs = jax.tree_util.tree_unflatten(treedef, merged)
+            return partial(potential_energy, kernel.model, margs, mkwargs, transforms)
+
+        def shard_state(s: FlatHMCState) -> FlatHMCState:
+            # only the chain-major leaves ride the mesh's data axes — the
+            # shared adaptation scalars/vectors are replicated by definition
+            if mesh is None:
+                return s
+            batch = {
+                "z": s.z, "potential": s.potential, "accept_prob": s.accept_prob,
+                "num_steps": s.num_steps, "diverging": s.diverging,
+            }
+            batch = shard_chains(batch, mesh)
+            return s._replace(**batch)
+
+        def driver(chain_keys, proto, dyn_leaves):
+            self.num_traces += 1  # trace-time side effect (retrace detector)
+            pe_fn = make_pe(dyn_leaves)
+            z0 = proto
+            if randomize:
+                z0 = jax.vmap(init_to_uniform)(chain_keys, z0)
+            _, unravel = ravel_pytree(
+                jax.tree_util.tree_map(lambda x: x[0], proto)
+            )
+            flat = jax.vmap(lambda t: ravel_pytree(t)[0])(z0)  # (C, D)
+
+            def pe_flat(zvec):
+                return pe_fn(unravel(zvec))
+
+            state = kernel.fused_init_state(
+                chain_keys[0], flat, jax.vmap(pe_flat)(flat)
+            )
+            state = shard_state(state)
+
+            def step(s):
+                return kernel.fused_sample_step(s, pe_flat, W, backend=backend)
+
+            def warmup_body(s, i):
+                s = step(s)
+                if adapt_mm:
+                    do = ((i + 1) % win == 0) & (i + 1 < W)
+                    s = jax.lax.cond(
+                        do,
+                        lambda s: s._replace(
+                            inv_mass=pooled_variance(s.wf_m2, s.wf_n),
+                            wf_mean=jnp.zeros_like(s.wf_mean),
+                            wf_m2=jnp.zeros_like(s.wf_m2),
+                            wf_n=jnp.zeros_like(s.wf_n),
+                        ),
+                        lambda s: s,
+                        s,
+                    )
+                return s, None
+
+            if W > 0:
+                state, _ = jax.lax.scan(warmup_body, state, jnp.arange(W))
+            state = kernel.fused_finalize_warmup(state)
+
+            def collect_body(s, _):
+                if T > 1:
+                    def thin_step(carry, _):
+                        s, div = carry
+                        s = step(s)
+                        return (s, div | s.diverging), None
+
+                    (s, diverging), _ = jax.lax.scan(
+                        thin_step, (s, jnp.zeros((C,), bool)), None, length=T
+                    )
+                else:
+                    s = step(s)
+                    diverging = s.diverging
+                extras = {
+                    "accept_prob": s.accept_prob,
+                    "diverging": diverging,
+                    "num_steps": s.num_steps,
+                    "potential_energy": s.potential,
+                    "step_size": jnp.broadcast_to(s.step_size, (C,)),
+                }
+                return s, (s.z, extras)
+
+            state, (zs, extras) = jax.lax.scan(collect_body, state, None, length=S)
+            zs = jnp.swapaxes(zs, 0, 1)  # (S, C, D) -> (C, S, D)
+            extras = jax.tree_util.tree_map(
+                lambda x: jnp.swapaxes(x, 0, 1), extras
+            )
+            z = jax.vmap(jax.vmap(unravel))(zs)  # {site: (C, S, ...)}
+            if mesh is not None:
+                z = shard_chains(z, mesh)
+                extras = shard_chains(extras, mesh)
+            return state, z, extras
+
+        return driver
+
     # -- public API ----------------------------------------------------------
     def run(self, rng_key, *args, init_params=None, **kwargs):
         """Run all chains; returns `get_samples()` (flattened across chains).
@@ -696,11 +1143,19 @@ class MCMC:
         is_dyn = tuple(isinstance(l, (jax.Array, np.ndarray)) for l in leaves)
         dyn_leaves = [l for l, d in zip(leaves, is_dyn) if d]
         static_leaves = tuple(None if d else l for l, d in zip(leaves, is_dyn))
-        exec_key = (randomize, treedef, is_dyn, static_leaves)
+        # the kernel backend is a trace-time constant of the fused driver, so
+        # it joins the cache key (flipping REPRO_KERNEL_BACKEND between runs
+        # recompiles instead of silently reusing the old backend)
+        backend = ops.resolve_backend(None) if self.fused else None
+        exec_key = (randomize, treedef, is_dyn, static_leaves, self.fused, backend)
         if self._exec is None or self._exec_key != exec_key:
-            self._exec = jax.jit(
-                self._build_driver(randomize, treedef, is_dyn, static_leaves)
-            )
+            if self.fused:
+                driver = self._build_fused_driver(
+                    randomize, treedef, is_dyn, static_leaves, backend
+                )
+            else:
+                driver = self._build_driver(randomize, treedef, is_dyn, static_leaves)
+            self._exec = jax.jit(driver)
             self._exec_key = exec_key
         states, z, extras = self._exec(chain_keys, proto, dyn_leaves)
         self._last_state = states

@@ -28,6 +28,7 @@ import jax.numpy as jnp
 from . import ref
 from .categorical_logprob import categorical_logprob_flat
 from .flash_attention import flash_attention_gqa
+from .leapfrog import leapfrog_fused
 from .semiring import SEMIRINGS, semiring_matmul_tiled
 from .ssd_scan import ssd_scan_chunked
 
@@ -75,6 +76,7 @@ _SUPPORT = {
     "ssd_scan": ("tpu", "interpret", "reference"),
     "semiring_matmul": ("tpu", "interpret", "reference"),
     "hmm_scan": ("tpu", "interpret", "reference"),
+    "leapfrog": ("tpu", "interpret", "reference"),
 }
 
 
@@ -244,6 +246,63 @@ def semiring_matmul(
         raise ValueError(f"unknown semiring {semiring!r}; expected one of {SEMIRINGS}")
     return _semiring_matmul(
         a, b, semiring=semiring, block=block, backend=resolve_backend(backend)
+    )
+
+
+# -- fused HMC leapfrog (MCMC hot path) ---------------------------------------
+
+
+def leapfrog(
+    z,
+    r,
+    inv_mass,
+    step_size,
+    num_steps,
+    potential_fn,
+    *,
+    max_steps: int,
+    block_chains: int = 8,
+    backend: Optional[str] = None,
+):
+    """Run a batch of leapfrog trajectories in one fused program.
+
+    z, r, inv_mass: (C, D) — positions, momenta, diagonal inverse mass per
+    chain; step_size: (C,) f32 (the *sign* is the integration direction, so
+    NUTS runs backward trajectories with a negative step size); num_steps:
+    (C,) int (0 freezes a chain: its z/r pass through untouched and it only
+    pays the final potential evaluation). potential_fn maps a (D,) vector to
+    a scalar potential. Returns ``(z', r', potential(z'))``.
+
+    Unlike the other ops this one takes a *function* argument, so there is no
+    jit wrapper here — callers (the MCMC drivers) are jitted already, and the
+    resolved backend must be static at their trace time. On the Pallas
+    backends the potential is traced once via ``jax.value_and_grad`` →
+    ``make_jaxpr`` and replayed inside the kernel; its captured constants
+    (model data, transform parameters) become ordinary kernel inputs — see
+    `kernels/leapfrog.py` for the closure-conversion details.
+
+    No AD rule on purpose: MCMC never differentiates its own transition, and
+    ``jax.grad`` through this op should fail loudly, not silently pick an
+    unfused path.
+    """
+    backend = resolve_backend(backend)
+    if backend == "reference":
+        return ref.leapfrog_ref(
+            z, r, inv_mass, step_size, num_steps, potential_fn,
+            max_steps=max_steps,
+        )
+    closed = jax.make_jaxpr(jax.value_and_grad(potential_fn))(z[0])
+    return leapfrog_fused(
+        z,
+        r,
+        inv_mass,
+        step_size,
+        num_steps,
+        closed.consts,
+        jaxpr=closed.jaxpr,
+        max_steps=max_steps,
+        block_chains=block_chains,
+        interpret=(backend == "interpret"),
     )
 
 

@@ -63,6 +63,41 @@ def semiring_matmul_ref(a, b, *, semiring: str = "logsumexp") -> jax.Array:
     return jnp.log(p) + am_s + bm_s
 
 
+def leapfrog_ref(z, r, inv_mass, step_size, num_steps, potential_fn, *, max_steps):
+    """Batched leapfrog oracle for `ops.leapfrog`, in the textbook
+    two-half-kicks-per-step form (deliberately *not* the fused kernel's
+    shared-gradient rewrite, so parity tests compare independent algebra).
+
+    z, r, inv_mass: (C, D); step_size: (C,) (sign = integration direction);
+    num_steps: (C,) int (0 = chain frozen, position/momentum pass through).
+    Runs `min(max(num_steps), max_steps)` masked iterations; returns
+    (z', r', potential(z')).
+    """
+    vg = jax.vmap(jax.value_and_grad(potential_fn))
+    eps = step_size[:, None].astype(jnp.float32)
+    n = num_steps[:, None].astype(jnp.int32)
+    nmax = jnp.minimum(jnp.max(n), max_steps)
+
+    def cond(carry):
+        return carry[0] < nmax
+
+    def body(carry):
+        i, z, r = carry
+        active = i < n  # (C, 1)
+        _, g = vg(z)
+        r2 = r - 0.5 * eps * g
+        z2 = z + eps * inv_mass * r2
+        _, g2 = vg(z2)
+        r2 = r2 - 0.5 * eps * g2
+        z = jnp.where(active, z2, z)
+        r = jnp.where(active, r2, r)
+        return (i + 1, z, r)
+
+    _, z, r = jax.lax.while_loop(cond, body, (jnp.zeros((), jnp.int32), z, r))
+    pe, _ = vg(z)
+    return z, r, pe
+
+
 def hmm_scan_ref(factors, *, semiring: str = "logsumexp") -> jax.Array:
     """Sequential left-fold oracle for `ops.hmm_scan`: the ordered semiring
     product F_0 ⊗ F_1 ⊗ ... ⊗ F_{T-1} of a (..., T, K, K) stack of log-factors,

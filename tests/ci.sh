@@ -24,10 +24,12 @@
 #                 example's own convergence assertions still apply), run
 #                 exactly the way users run them (installed package path,
 #                 no sys.path hacks)
-#   bench       - smoke-mode benchmarks; writes BENCH_enum.json and
-#                 BENCH_serve.json (uploaded as workflow artifacts) and FAILS
-#                 on any retrace-counter regression or if the bucketed serve
-#                 path drops under its 5x-vs-naive floor
+#   bench       - smoke-mode benchmarks; writes BENCH_enum.json,
+#                 BENCH_serve.json and BENCH_mcmc.json (uploaded as workflow
+#                 artifacts) and FAILS on any retrace-counter regression, if
+#                 the bucketed serve path drops under its 5x-vs-naive floor,
+#                 or if the fused MCMC driver drops under 2x the legacy
+#                 sampler's draws/sec at 1024 chains
 #   bench-gate  - bench-regression gate: diffs the freshly written
 #                 BENCH_*.json steady-state numbers against the committed
 #                 (HEAD) baselines; >25% regression fails (tune with
@@ -45,10 +47,10 @@ export JAX_PLATFORMS=cpu
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 
 # Coverage floor (percent). Calibrated with tools/coverage_floor.py on the
-# engine suite (73.0% measured at the serving PR), minus ~5 points of margin
-# for coverage.py-vs-estimator methodology and the 3.10/3.12 matrix.
+# engine suite (74.2% measured at the fused-MCMC PR), minus ~5 points of
+# margin for coverage.py-vs-estimator methodology and the 3.10/3.12 matrix.
 # Ratchet UP as coverage grows; never lower it to land code.
-REPRO_COV_FLOOR="${REPRO_COV_FLOOR:-68}"
+REPRO_COV_FLOOR="${REPRO_COV_FLOOR:-69}"
 
 STEP="${1:-all}"
 if [[ $# -gt 0 ]]; then shift; fi
@@ -147,6 +149,7 @@ run_bench() {
     python benchmarks/mcmc_chains.py --smoke
     python benchmarks/enum_ve.py --smoke --json BENCH_enum.json
     python benchmarks/serve_bench.py --smoke --json BENCH_serve.json
+    python benchmarks/mcmc_bench.py --smoke --json BENCH_mcmc.json
     python - <<'PY'
 from repro.launch.compile_cache import compilation_cache_stats
 from repro.infer import plan_cache_stats
@@ -156,7 +159,7 @@ PY
 }
 
 run_bench_gate() {
-    python benchmarks/check_regression.py BENCH_enum.json BENCH_serve.json
+    python benchmarks/check_regression.py BENCH_enum.json BENCH_serve.json BENCH_mcmc.json
 }
 
 case "$STEP" in

@@ -122,6 +122,61 @@ def test_ess_kind_validation():
 
 
 # ---------------------------------------------------------------------------
+# diagnostics: degenerate inputs must give documented values, not garbage
+# ---------------------------------------------------------------------------
+
+
+def test_diagnostics_single_chain_well_defined():
+    x = jax.random.normal(jax.random.PRNGKey(10), (1, 400))
+    assert float(split_rhat(x)) == pytest.approx(1.0, abs=0.05)
+    assert float(effective_sample_size(x)) > 100
+    assert float(effective_sample_size(x, kind="tail")) > 50
+
+
+def test_diagnostics_length_one_chain_nan_not_crash():
+    x = jnp.ones((2, 1))
+    assert bool(jnp.isnan(split_rhat(x)))
+    for kind in ("bulk", "tail", "raw"):
+        assert bool(jnp.isnan(effective_sample_size(x, kind=kind)))
+
+
+def test_diagnostics_too_few_draws_nan():
+    # split halves need >= 2 draws each; below 4 everything is documented NaN
+    x = jax.random.normal(jax.random.PRNGKey(11), (4, 3))
+    assert bool(jnp.isnan(split_rhat(x)))
+    assert bool(jnp.isnan(effective_sample_size(x)))
+
+
+def test_diagnostics_constant_chain():
+    const = jnp.full((4, 100), 2.5)
+    # no variance at all: R̂ undefined (NaN), ESS = total draws by convention
+    assert bool(jnp.isnan(split_rhat(const)))
+    for kind in ("bulk", "tail", "raw"):
+        assert float(effective_sample_size(const, kind=kind)) == 400.0
+
+
+def test_diagnostics_constant_distinct_chains_inf_rhat():
+    # chains frozen at different values: maximally unconverged -> +inf
+    x = jnp.broadcast_to(jnp.arange(4.0)[:, None], (4, 100))
+    assert bool(jnp.isinf(split_rhat(x)))
+
+
+def test_diagnostics_nan_draws_propagate():
+    """A NaN draw (e.g. a diverged chain) must surface as NaN diagnostics —
+    rank-normalization and tail indicators would otherwise silently convert
+    it into a finite, trustworthy-looking number."""
+    x = jax.random.normal(jax.random.PRNGKey(12), (4, 100)).at[1, 3].set(jnp.nan)
+    assert bool(jnp.isnan(split_rhat(x)))
+    for kind in ("bulk", "tail", "raw"):
+        assert bool(jnp.isnan(effective_sample_size(x, kind=kind)))
+    # event-shaped input: only the poisoned column goes NaN
+    y = jax.random.normal(jax.random.PRNGKey(13), (4, 100, 2)).at[0, 0, 1].set(jnp.nan)
+    ess = effective_sample_size(y)
+    assert not bool(jnp.isnan(ess[0]))
+    assert bool(jnp.isnan(ess[1]))
+
+
+# ---------------------------------------------------------------------------
 # engine: chain layout, trace count, sharding parity
 # ---------------------------------------------------------------------------
 
@@ -177,6 +232,55 @@ def test_sharded_matches_vectorized_on_one_device_mesh():
 def test_chain_method_validation():
     with pytest.raises(ValueError):
         MCMC(small_hmc(), 10, 10, chain_method="pmap")
+
+
+def test_fused_sharded_matches_vectorized_with_kernels(monkeypatch):
+    """Sharded/vectorized bit-identity must survive the fused path with the
+    Pallas kernel body enabled (interpret backend): the sharding constraint
+    is a layout annotation, never a math change."""
+    monkeypatch.setenv("REPRO_KERNEL_BACKEND", "interpret")
+    mesh = jax.make_mesh((1,), ("data",))
+    runs = {}
+    for method, kw in (("vectorized", {}), ("sharded", {"mesh": mesh})):
+        mcmc = MCMC(
+            small_hmc(), num_warmup=40, num_samples=30, num_chains=2,
+            chain_method=method, fused=True, **kw,
+        )
+        mcmc.run(jax.random.PRNGKey(0), DATA)
+        runs[method] = (mcmc.get_samples(group_by_chain=True), mcmc.get_extra_fields())
+    s_vec, e_vec = runs["vectorized"]
+    s_sh, e_sh = runs["sharded"]
+    assert jnp.array_equal(s_vec["loc"], s_sh["loc"])  # bit-for-bit
+    assert jnp.array_equal(e_vec["accept_prob"], e_sh["accept_prob"])
+    assert jnp.array_equal(e_vec["num_steps"], e_sh["num_steps"])
+
+
+def test_num_traces_one_under_chees():
+    """ChEES cross-chain adaptation must not break the compile-once
+    contract: one trace per executable, reused across repeat runs."""
+    kernel = HMC(normal_model, max_num_steps=32, adapt_trajectory_length=True)
+    mcmc = MCMC(kernel, num_warmup=50, num_samples=40, num_chains=4, fused=True)
+    mcmc.run(jax.random.PRNGKey(0), DATA)
+    assert mcmc.num_traces == 1
+    # same shapes, fresh key/data -> the cached executable is reused
+    mcmc.run(jax.random.PRNGKey(1), DATA + 0.5)
+    assert mcmc.num_traces == 1
+
+
+def test_fused_vs_legacy_same_posterior():
+    """The fused driver is a new execution strategy, not a new sampler: both
+    paths recover the same conjugate posterior."""
+    post = {}
+    for fused in (False, True):
+        mcmc = MCMC(
+            HMC(normal_model, max_num_steps=16), num_warmup=150,
+            num_samples=150, num_chains=2, fused=fused,
+        )
+        mcmc.run(jax.random.PRNGKey(3), DATA)
+        post[fused] = mcmc.get_samples()["loc"]
+    for fused, draws in post.items():
+        assert float(draws.mean()) == pytest.approx(POST_MEAN, abs=0.2), fused
+        assert float(draws.std()) == pytest.approx(POST_SD, abs=0.15), fused
 
 
 def test_init_params_broadcast_and_potential_fn():

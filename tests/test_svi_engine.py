@@ -304,6 +304,7 @@ def test_backend_support_matrix_complete():
         "ssd_scan",
         "semiring_matmul",
         "hmm_scan",
+        "leapfrog",
     }
     for row in m.values():
         assert set(row) == set(ops.BACKENDS)
