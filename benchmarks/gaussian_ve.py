@@ -1,0 +1,295 @@
+"""Gaussian-semiring VE microbench: O(log T) parallel Kalman scan vs the
+sequential information-form fold (acceptance criterion for the Gaussian
+semiring PR).
+
+Three levels, mirroring enum_ve.py:
+
+1. Contraction level — a linear-Gaussian Markov chain of T scalar edge
+   factors plus unary observation factors, eliminated by
+   `eliminate_gaussian_factors` under the two chain lowerings:
+   ``REPRO_ENUM_CHAIN_LOWER=scan`` (sequential `lax.scan` Kalman fold — O(T)
+   depth, O(1) traced graph) vs ``tree`` with the ``interpret`` kernel
+   backend (`ops.gaussian_scan`'s O(log T) associative combine tree over the
+   fused pairwise kernel). At T=512 the tree must win steady-state: log-depth
+   batched combines beat 512 sequential while-loop iterations even on CPU.
+   Both lowerings must agree on log Z to float-association tolerance.
+
+2. Plan-cache level — re-eliminating the same chain structure with fresh
+   values must be served from the plan cache (hits > 0, no misses): Gaussian
+   plans are keyed under ``semiring="gaussian"`` fingerprints in the same
+   cache the log-semiring uses, and a refit never replans.
+
+3. Model level — a scalar Kalman smoother with a learnable transition
+   coefficient driven through `TraceEnum_ELBO` + `SVI.update_jit`: per-step
+   wall time and the retrace counter, which must stay at 1 (fresh same-shape
+   observations must never recompile the lowering or the elimination).
+
+Writes a machine-readable BENCH_gaussian.json (steady/cold wall times,
+speedup, plan-cache stats, retrace counters) for the check_regression.py
+gate, and exits nonzero if the tree fails to beat the sequential fold at
+T=512, if the lowerings disagree, if the plan cache misses on a repeated
+structure, or on any retrace regression (reference/interpret backends, CPU).
+
+Run: PYTHONPATH=src python benchmarks/gaussian_ve.py [--smoke] [--json PATH]
+"""
+
+import argparse
+import json
+import os
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+# ---------------------------------------------------------------------------
+# contraction-level chain benchmark
+# ---------------------------------------------------------------------------
+
+
+def chain_inputs(T: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return (
+        jnp.asarray(rng.uniform(0.5, 0.95, (T - 1,)).astype(np.float32)),  # coeffs
+        jnp.asarray(rng.normal(size=(T,)).astype(np.float32)),             # obs
+    )
+
+
+def build_chain_factors(T: int, coeffs, obs):
+    """A scalar Kalman chain in lowered form: prior on x0, T-1 transition
+    edge factors, T unary observation factors — the exact factor layout
+    `_lower_gaussian_trace` produces for the equivalent model."""
+    from repro.infer.contract import affine_gaussian_factor
+
+    one = jnp.ones((1, 1), jnp.float32)
+    factors = [affine_gaussian_factor(("x0",), (1,), {}, jnp.zeros((1,)), one, "x0")]
+    for t in range(1, T):
+        factors.append(
+            affine_gaussian_factor(
+                (f"x{t - 1}", f"x{t}"),
+                (1, 1),
+                {f"x{t - 1}": coeffs[t - 1].reshape(1, 1)},
+                jnp.zeros((1,)),
+                0.5 * one,
+                f"x{t}",
+            )
+        )
+    for t in range(T):
+        factors.append(
+            affine_gaussian_factor(
+                (f"x{t}",),
+                (1,),
+                {f"x{t}": one},
+                obs[t].reshape(1),
+                0.6 * one,
+                None,
+            )
+        )
+    return factors, [f"x{t}" for t in range(T)]
+
+
+LOWERINGS = {
+    # mode -> env pinning {REPRO_ENUM_CHAIN_LOWER, REPRO_ENUM_CHAIN_MIN,
+    # REPRO_KERNEL_BACKEND}. The tree needs a non-reference kernel backend:
+    # under "reference", ops.gaussian_scan deliberately runs the sequential
+    # oracle instead of the combine tree.
+    "scan": {"REPRO_ENUM_CHAIN_LOWER": "scan"},
+    "tree": {"REPRO_ENUM_CHAIN_LOWER": "tree", "REPRO_KERNEL_BACKEND": "interpret"},
+}
+
+
+def time_contract(T: int, mode: str, reps: int = 20):
+    from repro.infer.contract import eliminate_gaussian_factors
+
+    saved = {k: os.environ.get(k) for v in LOWERINGS.values() for k in v}
+    os.environ.update(LOWERINGS[mode])
+    try:
+        coeffs, obs = chain_inputs(T)
+
+        @jax.jit
+        def run(coeffs, obs):
+            factors, order = build_chain_factors(T, coeffs, obs)
+            return sum(eliminate_gaussian_factors(factors, order))
+
+        t0 = time.perf_counter()
+        r = run(coeffs, obs)
+        jax.block_until_ready(r)
+        cold_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            r = run(coeffs, obs)
+        jax.block_until_ready(r)
+        return {
+            "T": T,
+            "mode": mode,
+            "cold_s": round(cold_s, 3),  # plan + trace + compile + first step
+            "steady_ms": round((time.perf_counter() - t0) / reps * 1e3, 3),
+            "log_z": round(float(r), 4),
+        }
+    finally:
+        for k, v in saved.items():
+            if v is None:
+                os.environ.pop(k, None)
+            else:
+                os.environ[k] = v
+
+
+# ---------------------------------------------------------------------------
+# model level: Kalman smoother through TraceEnum_ELBO + SVI
+# ---------------------------------------------------------------------------
+
+
+def model_stage(T: int, steps: int, log=print):
+    from repro import distributions as dist
+    from repro import optim
+    from repro.core import primitives as P
+    from repro.infer import SVI, TraceEnum_ELBO, gaussian_marginals
+
+    GM = {"marginalize": "gaussian"}
+    obs = chain_inputs(T, seed=1)[1]
+
+    def kalman(obs):
+        a = P.param("a", jnp.asarray(0.7))
+        x = P.sample("x0", dist.Normal(0.0, 1.0), infer=GM)
+        P.sample("y0", dist.Normal(x, 0.6), obs=obs[0])
+        for t in range(1, T):
+            x = P.sample(f"x{t}", dist.Normal(a * x, 0.5), infer=GM)
+            P.sample(f"y{t}", dist.Normal(x, 0.6), obs=obs[t])
+
+    elbo = TraceEnum_ELBO(max_plate_nesting=0)
+    svi = SVI(kalman, lambda obs: None, optim.Adam(0.01), elbo)
+    state = svi.init(jax.random.PRNGKey(0), obs)
+    elbo.num_traces = 0
+    times = []
+    for i in range(steps):
+        t1 = time.perf_counter()
+        state, loss = svi.update_jit(state, obs + 1e-4 * i)  # fresh same-shape data
+        loss.block_until_ready()
+        times.append(time.perf_counter() - t1)
+    out = {
+        "T": T,
+        "steps": steps,
+        "cold_s": round(times[0], 3),  # first step = trace + compile + run
+        "step_ms": round(min(times) * 1e3, 3),
+        "num_traces": elbo.num_traces,
+    }
+    assert elbo.num_traces == 1, (
+        f"Kalman SVI retraced: {elbo.num_traces} traces in {steps} steps"
+    )
+
+    # smoother-marginal query (the cumulant-trick surface), probing 3 sites
+    t1 = time.perf_counter()
+    marg = gaussian_marginals(
+        lambda: kalman(obs), jax.random.PRNGKey(1),
+        sites=["x0", f"x{T // 2}", f"x{T - 1}"],
+    )
+    out["marginals_s"] = round(time.perf_counter() - t1, 3)
+    out["marginal_mid"] = round(float(marg[f"x{T // 2}"][0]), 4)
+    log(f"  kalman svi: {out}")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true", help="CI-sized run")
+    ap.add_argument("--json", default=str(REPO / "BENCH_gaussian.json"), help="output path")
+    args = ap.parse_args(argv)
+
+    from repro.infer import clear_plan_cache, plan_cache_stats
+
+    clear_plan_cache()
+    results = {
+        "bench": "gaussian_ve",
+        "jax": jax.__version__,
+        "jax_backend": jax.default_backend(),
+        "smoke": bool(args.smoke),
+        "chain": [],
+    }
+
+    big_T = 512
+    matched = [64, big_T]
+    reps = 20 if args.smoke else 50
+
+    print("# contraction level: sequential scan fold vs O(log T) combine tree")
+    print(f"{'T':>5} {'mode':>5} {'cold_s':>9} {'steady_ms':>10}")
+    steady, logz = {}, {}
+    for T in matched:
+        for mode in ("scan", "tree"):
+            r = time_contract(T, mode, reps=reps)
+            results["chain"].append(r)
+            steady[(T, mode)] = r["steady_ms"]
+            logz[(T, mode)] = r["log_z"]
+            print(f"{T:>5} {mode:>5} {r['cold_s']:>9.2f} {r['steady_ms']:>10.3f}")
+    for T in matched:
+        # float-association tolerance: same chain, different combine order
+        assert abs(logz[(T, "scan")] - logz[(T, "tree")]) <= 1e-3 * max(
+            1.0, abs(logz[(T, "scan")])
+        ), f"lowerings disagree at T={T}: {logz[(T, 'scan')]} vs {logz[(T, 'tree')]}"
+
+    # the acceptance point: the parallel scan must beat the sequential fold
+    # at T=512 (log-depth batched combines vs 512 while-loop iterations)
+    speedup = round(steady[(big_T, "scan")] / steady[(big_T, "tree")], 2)
+    results["winner"] = {
+        "T": big_T,
+        "scan_steady_ms": steady[(big_T, "scan")],
+        "tree_steady_ms": steady[(big_T, "tree")],
+        "speedup_steady": speedup,
+    }
+    assert steady[(big_T, "tree")] < steady[(big_T, "scan")], (
+        f"parallel scan ({steady[(big_T, 'tree')]:.3f}ms) did not beat the "
+        f"sequential fold ({steady[(big_T, 'scan')]:.3f}ms) at T={big_T}"
+    )
+    print(f"parallel scan beats sequential fold at T={big_T}: {speedup}x")
+
+    # -- plan-cache level: same structure, fresh values -> plan from cache --
+    print("\n# plan-cache level: second same-structure elimination")
+    from repro.infer.contract import eliminate_gaussian_factors
+
+    T = matched[0]
+    # first fit plans (the chain stage above ran under pinned lowering env,
+    # which is part of the fingerprint); the refit with fresh values must hit
+    coeffs, obs = chain_inputs(T, seed=2)
+    factors, order = build_chain_factors(T, coeffs, obs)
+    jax.block_until_ready(sum(eliminate_gaussian_factors(factors, order)))
+    before = plan_cache_stats()
+    coeffs, obs = chain_inputs(T, seed=3)
+    factors, order = build_chain_factors(T, coeffs, obs)
+    jax.block_until_ready(sum(eliminate_gaussian_factors(factors, order)))
+    after = plan_cache_stats()
+    hits = after["hits"] - before["hits"]
+    misses = after["misses"] - before["misses"]
+    results["plan_cache"] = {
+        "bench": "refit", "T": T, "hits": hits, "misses": misses, "stats": after,
+    }
+    print(f"  T={T} refit: hits={hits} misses={misses}")
+    assert hits > 0 and misses == 0, (
+        f"plan cache missed on a repeated Gaussian structure (hits={hits}, "
+        f"misses={misses}) — the semiring fingerprint is unstable"
+    )
+
+    print("\n# model level: TraceEnum_ELBO retrace counter (must stay 1)")
+    results["model"] = model_stage(
+        T=24 if args.smoke else 48,
+        steps=8 if args.smoke else 25,
+    )
+
+    Path(args.json).write_text(json.dumps(results, indent=2) + "\n")
+    print(f"\nwrote {args.json}")
+    print("OK: parallel scan wins the T=512 chain; plan cache hit on refit; "
+          "retrace counter == 1")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

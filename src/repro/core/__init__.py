@@ -1,6 +1,6 @@
 """repro.core — the paper's contribution: effect-handler PPL runtime."""
 from . import handlers, messenger, primitives, reparam as _reparam_mod
-from .handlers import Trace, config_enumerate, enum, infer_config
+from .handlers import Trace, config_enumerate, config_gaussian, enum, infer_config
 from .reparam import LocScaleReparam, reparam
 from .messenger import DimAllocator, Messenger, apply_stack
 from .primitives import (
@@ -25,6 +25,7 @@ __all__ = [
     "reparam",
     "apply_stack",
     "config_enumerate",
+    "config_gaussian",
     "enum",
     "infer_config",
     "sample",

@@ -342,6 +342,46 @@ def config_enumerate(fn=None, default: str = "parallel"):
     return infer_config(fn, config_fn=config_fn)
 
 
+def config_gaussian(fn=None, sites=None):
+    """Annotate Normal/MultivariateNormal non-observed sample sites with
+    ``infer={"marginalize": "gaussian"}`` so `TraceEnum_ELBO` and
+    `gaussian_marginals` integrate them out exactly (information-form
+    Gaussian variable elimination — the continuous analogue of
+    `config_enumerate`). Usable as a decorator or a wrapper:
+
+        model = config_gaussian(model)                # every Gaussian latent
+        model = config_gaussian(model, sites=["x0"])  # just these sites
+        @config_gaussian                              # decorate
+        def model(...): ...
+
+    Without ``sites``, every non-observed Normal/MVN site is annotated;
+    with ``sites``, only the named ones (and naming a non-Gaussian site
+    raises at trace time). Explicit per-site annotations win."""
+    if fn is None:  # decorator-with-arguments form
+        return lambda f: config_gaussian(f, sites=sites)
+    site_set = None if sites is None else frozenset(sites)
+
+    def config_fn(msg):
+        # local import: distributions imports core for its sample machinery
+        from ..distributions.continuous import MultivariateNormal, Normal
+
+        if msg["is_observed"] or "marginalize" in msg["infer"]:
+            return {}
+        if site_set is not None and msg["name"] not in site_set:
+            return {}
+        if not isinstance(msg["fn"], (Normal, MultivariateNormal)):
+            if site_set is not None:
+                raise ValueError(
+                    f"config_gaussian: site '{msg['name']}' has distribution "
+                    f"{type(msg['fn']).__name__}; only Normal and "
+                    "MultivariateNormal sites can be Gaussian-marginalized"
+                )
+            return {}
+        return {"marginalize": "gaussian"}
+
+    return infer_config(fn, config_fn=config_fn)
+
+
 class enum(Messenger):
     """Parallel enumeration (paper §2's canonical custom-inference example):
     each discrete sample site annotated with ``infer={"enumerate":

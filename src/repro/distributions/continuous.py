@@ -48,6 +48,32 @@ class Normal(Distribution):
     def icdf(self, q):
         return self.loc + self.scale * math.sqrt(2) * jsp.erfinv(2 * q - 1)
 
+    def to_information_form(self):
+        """Natural parameters ``(precision, info_vec, log_normalizer)`` of
+        the density as a quadratic in the value:
+
+            log p(x) = -1/2 precision x^2 + info_vec x + log_normalizer
+
+        with precision = 1/σ², info_vec = μ/σ², every leaf broadcast to
+        `batch_shape` — the scalar seed the Gaussian-semiring VE engine
+        builds its factors from."""
+        prec = jnp.broadcast_to(self.scale ** -2.0, self.batch_shape)
+        loc = jnp.broadcast_to(self.loc, self.batch_shape)
+        info = prec * loc
+        log_norm = (
+            -0.5 * info * loc
+            - jnp.broadcast_to(jnp.log(self.scale), self.batch_shape)
+            - 0.5 * math.log(2 * math.pi)
+        )
+        return prec, info, log_norm
+
+    @classmethod
+    def from_information_form(cls, precision, info_vec):
+        """Inverse of `to_information_form` (the log-normalizer is implied
+        by normalization): N(info_vec / precision, precision**-0.5)."""
+        precision = jnp.asarray(precision)
+        return cls(loc=info_vec / precision, scale=precision ** -0.5)
+
 
 class LogNormal(Distribution):
     arg_constraints = {"loc": constraints.real, "scale": constraints.positive}
@@ -406,10 +432,10 @@ class MultivariateNormal(Distribution):
         if scale_tril is None:
             if covariance_matrix is None:
                 raise ValueError("need covariance_matrix or scale_tril")
-            scale_tril = jnp.linalg.cholesky(covariance_matrix)
+            scale_tril = jnp.linalg.cholesky(jnp.asarray(covariance_matrix))
         self.loc = loc
-        self.scale_tril = scale_tril
-        batch_shape = broadcast_shapes(loc.shape[:-1], scale_tril.shape[:-2])
+        self.scale_tril = jnp.asarray(scale_tril)
+        batch_shape = broadcast_shapes(loc.shape[:-1], self.scale_tril.shape[:-2])
         super().__init__(batch_shape, loc.shape[-1:])
 
     def sample(self, key, sample_shape=()):
@@ -440,7 +466,61 @@ class MultivariateNormal(Distribution):
 
     @property
     def covariance_matrix(self):
-        return self.scale_tril @ jnp.swapaxes(self.scale_tril, -1, -2)
+        # broadcast to the full batch shape: loc-driven batch dims must show
+        # up even though the covariance itself only carries scale_tril's
+        cov = self.scale_tril @ jnp.swapaxes(self.scale_tril, -1, -2)
+        return jnp.broadcast_to(cov, self.batch_shape + cov.shape[-2:])
+
+    @property
+    def precision_matrix(self):
+        eye = jnp.eye(self.event_shape[0], dtype=self.scale_tril.dtype)
+        tril = jnp.broadcast_to(
+            self.scale_tril, self.batch_shape + self.scale_tril.shape[-2:]
+        )
+        inv_tril = jax.scipy.linalg.solve_triangular(
+            tril, jnp.broadcast_to(eye, tril.shape), lower=True
+        )
+        return jnp.swapaxes(inv_tril, -1, -2) @ inv_tril
+
+    def to_information_form(self):
+        """Natural parameters ``(precision, info_vec, log_normalizer)`` of
+        the density as a quadratic in the value:
+
+            log p(x) = -1/2 x^T precision x + info_vec^T x + log_normalizer
+
+        with precision = Σ⁻¹ and info_vec = Σ⁻¹μ. All leaves broadcast to
+        the full `batch_shape` — loc-only and scale_tril-only batch dims
+        both surface, so batched parameters round-trip exactly."""
+        d = self.event_shape[0]
+        prec = self.precision_matrix                      # (*batch, d, d)
+        loc = jnp.broadcast_to(self.loc, self.batch_shape + (d,))
+        info = (prec @ loc[..., None])[..., 0]
+        half_log_det = jnp.broadcast_to(
+            jnp.sum(jnp.log(jnp.diagonal(self.scale_tril, axis1=-2, axis2=-1)), -1),
+            self.batch_shape,
+        )
+        log_norm = (
+            -0.5 * jnp.sum(info * loc, -1)
+            - half_log_det
+            - 0.5 * d * math.log(2 * math.pi)
+        )
+        return prec, info, log_norm
+
+    @classmethod
+    def from_information_form(cls, precision, info_vec):
+        """Inverse of `to_information_form` (the log-normalizer is implied
+        by normalization): MVN(Σ info_vec, Σ = precision⁻¹). Batch dims of
+        the two operands broadcast."""
+        precision = jnp.asarray(precision)
+        info_vec = jnp.asarray(info_vec)
+        cov = jnp.linalg.inv(precision)
+        cov = 0.5 * (cov + jnp.swapaxes(cov, -1, -2))
+        batch = broadcast_shapes(cov.shape[:-2], info_vec.shape[:-1])
+        loc = (
+            jnp.broadcast_to(cov, batch + cov.shape[-2:])
+            @ jnp.broadcast_to(info_vec, batch + info_vec.shape[-1:])[..., None]
+        )[..., 0]
+        return cls(loc=loc, covariance_matrix=cov)
 
 
 class LowRankMultivariateNormal(Distribution):

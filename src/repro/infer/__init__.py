@@ -5,10 +5,15 @@ from .autoguide import (
     AutoLowRankMultivariateNormal,
     AutoNormal,
 )
-from ..core.handlers import config_enumerate
+from ..core.handlers import config_enumerate, config_gaussian
 from .elbo import ELBO, RenyiELBO, Trace_ELBO, TraceMeanField_ELBO, vectorize_particles
 from .contract import clear_plan_cache, plan_cache_stats
-from .traceenum_elbo import TraceEnum_ELBO, discrete_marginals, infer_discrete
+from .traceenum_elbo import (
+    TraceEnum_ELBO,
+    discrete_marginals,
+    gaussian_marginals,
+    infer_discrete,
+)
 from .tracegraph_elbo import TraceGraph_ELBO
 from .importance import Importance
 from .diagnostics import effective_sample_size, print_summary, split_rhat, summary
@@ -31,7 +36,9 @@ __all__ = [
     "TraceMeanField_ELBO",
     "clear_plan_cache",
     "config_enumerate",
+    "config_gaussian",
     "discrete_marginals",
+    "gaussian_marginals",
     "plan_cache_stats",
     "infer_discrete",
     "Importance",

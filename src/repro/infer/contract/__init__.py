@@ -9,6 +9,17 @@ plan-level `lax.scan`. `executor.contract_log_factors` is the ordinal-level
 entry point every enumeration engine calls.
 """
 from .cache import PLAN_CACHE, clear_plan_cache, plan_cache_stats
+from .gaussian import (
+    GaussianFactor,
+    affine_gaussian_factor,
+    eliminate_gaussian_factors,
+    execute_gaussian_plan,
+    gaussian_marginal_params,
+    gaussian_marginalize,
+    gaussian_multiply,
+    greedy_eliminate_gaussians,
+    jaxpr_dependencies,
+)
 from .executor import (
     _ve_eliminate,
     contract_log_factors,
@@ -43,13 +54,22 @@ __all__ = [
     "ContractionPlan",
     "ElimStep",
     "FactorStruct",
+    "GaussianFactor",
+    "affine_gaussian_factor",
     "chain_threshold",
     "clear_plan_cache",
     "contract_log_factors",
+    "eliminate_gaussian_factors",
+    "execute_gaussian_plan",
     "execute_plan",
     "factor_structs",
     "fingerprint",
+    "gaussian_marginal_params",
+    "gaussian_marginalize",
+    "gaussian_multiply",
     "greedy_eliminate",
+    "greedy_eliminate_gaussians",
+    "jaxpr_dependencies",
     "plan_cache_stats",
     "plan_elimination",
     "plan_knobs",

@@ -1,0 +1,550 @@
+"""Gaussian semiring for the VE engine: exact marginalization of
+linear-Gaussian continuous latents through the same planner/executor/cache
+machinery that eliminates discrete enum dims.
+
+A `GaussianFactor` is an information-form Gaussian potential over a tuple of
+named flat variables x = (x_v1, ..., x_vk):
+
+    log F(x) = -1/2 x^T J x + h^T x + c
+
+with ``precision`` J (..., D, D), ``info_vec`` h (..., D), ``log_norm`` c
+(...), D = sum of variable widths. The leading batch dims are *enum lead*
+axes — discrete enumeration dims right-aligned in log-prob batch space (a
+switching LDS carries one factor per discrete assignment) — and broadcast
+against each other exactly like log-factor batch dims do.
+
+The semiring structure mirrors the log semiring one-to-one:
+
+* ⊗ (product) = embed into the union variable layout and ADD (J, h, c) —
+  `gaussian_multiply`.
+* ⊕ (marginalize a variable out) = Schur complement of its block —
+  `gaussian_marginalize`. Exact for Gaussians: no sampling, no quadrature.
+
+`eliminate_gaussian_factors` is the planner seam: continuous variables map
+to negative int ids in trace order (first site most negative, matching the
+greedy most-negative-first order to a *forward* Kalman filter sweep), each
+factor becomes a `FactorStruct` whose sizes are variable widths, and the
+shared `plan_elimination` recognizes linear-Gaussian chains structurally —
+its `ChainStep`s lower here to a sequential `lax.scan` Kalman fold, the
+O(log T) `ops.gaussian_scan` associative tree, or pairwise
+`ops.gaussian_combine` folds. Plans are cached in the shared `PLAN_CACHE`
+under ``semiring="gaussian"`` fingerprints, so Gaussian and log-semiring
+plans for the same shapes never collide.
+
+Cost-model caveat: `plan_elimination`'s objective multiplies dim sizes
+(right for tensor contractions, an underestimate for the cubic dense
+algebra here). Orders stay valid — elimination order never changes the
+result, only the flop count — and chains, the case that matters, are
+recognized structurally, so the shared planner is reused unchanged.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Callable, Dict, FrozenSet, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ...kernels import ops as kernel_ops
+from ...kernels import ref as kernel_ref
+from .cache import PLAN_CACHE
+from .planner import ChainStep, plan_elimination, plan_knobs
+from .structure import FactorStruct, _dispatch_mode, fingerprint
+
+_LOG_2PI = math.log(2.0 * math.pi)
+
+
+# ---------------------------------------------------------------------------
+# the factor
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class GaussianFactor:
+    """Information-form Gaussian potential over named flat variables.
+
+    ``vars``/``widths`` define the flat layout: variable ``vars[i]`` owns the
+    contiguous index block of width ``widths[i]``, in order. Arrays carry
+    broadcastable enum-lead batch dims in front."""
+
+    vars: Tuple[str, ...]
+    widths: Tuple[int, ...]
+    precision: jax.Array    # (..., D, D)
+    info_vec: jax.Array     # (..., D)
+    log_norm: jax.Array     # (...)
+
+    @property
+    def width(self) -> int:
+        return sum(self.widths)
+
+    def width_of(self, var: str) -> int:
+        return self.widths[self.vars.index(var)]
+
+    def _flat_idx(self, names: Sequence[str]) -> np.ndarray:
+        """Static flat indices of the given variables' blocks, in layout
+        order of `names` (numpy, so every gather below is trace-static)."""
+        offs = {}
+        off = 0
+        for v, w in zip(self.vars, self.widths):
+            offs[v] = off
+            off += w
+        return np.concatenate(
+            [np.arange(offs[v], offs[v] + self.width_of(v)) for v in names]
+        ) if names else np.zeros((0,), np.int64)
+
+
+def _bt(x) -> jax.Array:
+    return jnp.swapaxes(x, -1, -2)
+
+
+def gaussian_multiply(f: GaussianFactor, g: GaussianFactor) -> GaussianFactor:
+    """⊗: pointwise product of two potentials — embed both into the union
+    variable layout (f's variables first, then g's new ones in g's order)
+    and add (J, h, c). Batch dims broadcast."""
+    new = [v for v in g.vars if v not in f.vars]
+    vars_u = f.vars + tuple(new)
+    widths_u = f.widths + tuple(g.width_of(v) for v in new)
+    D = sum(widths_u)
+    offs = {}
+    off = 0
+    for v, w in zip(vars_u, widths_u):
+        offs[v] = off
+        off += w
+    idx_f = np.concatenate(
+        [np.arange(offs[v], offs[v] + w) for v, w in zip(f.vars, f.widths)]
+    )
+    idx_g = np.concatenate(
+        [np.arange(offs[v], offs[v] + w) for v, w in zip(g.vars, g.widths)]
+    )
+    batch = jnp.broadcast_shapes(
+        f.precision.shape[:-2], g.precision.shape[:-2],
+        f.info_vec.shape[:-1], g.info_vec.shape[:-1],
+        jnp.shape(f.log_norm), jnp.shape(g.log_norm),
+    )
+    J = jnp.zeros(batch + (D, D), jnp.float32)
+    h = jnp.zeros(batch + (D,), jnp.float32)
+    J = J.at[..., idx_f[:, None], idx_f[None, :]].add(f.precision)
+    J = J.at[..., idx_g[:, None], idx_g[None, :]].add(g.precision)
+    h = h.at[..., idx_f].add(f.info_vec)
+    h = h.at[..., idx_g].add(g.info_vec)
+    c = jnp.asarray(f.log_norm) + g.log_norm
+    return GaussianFactor(vars_u, widths_u, J, h, jnp.broadcast_to(c, batch))
+
+
+def gaussian_marginalize(f: GaussianFactor, drop: Sequence[str]) -> GaussianFactor:
+    """⊕: integrate the given variables out — the Schur complement of their
+    block. With x = (a, b), b the dropped block of total width d_b:
+
+        J' = J_aa - J_ab J_bb⁻¹ J_ba        h' = h_a - J_ab J_bb⁻¹ h_b
+        c' = c + 1/2 h_b^T J_bb⁻¹ h_b - 1/2 log|J_bb| + (d_b/2) log 2π
+
+    Exact when J_bb is positive definite — true whenever the dropped
+    variables' conditionals entered as genuine densities (see the
+    conditioning contract in `kernels/gaussian.py`)."""
+    drop_set = set(drop)
+    keep = [v for v in f.vars if v not in drop_set]
+    gone = [v for v in f.vars if v in drop_set]
+    if not gone:
+        return f
+    ia = f._flat_idx(keep)
+    ib = f._flat_idx(gone)
+    db = len(ib)
+    Jaa = f.precision[..., ia[:, None], ia[None, :]]
+    Jab = f.precision[..., ia[:, None], ib[None, :]]
+    Jbb = f.precision[..., ib[:, None], ib[None, :]]
+    ha = f.info_vec[..., ia]
+    hb = f.info_vec[..., ib]
+    S = jnp.linalg.solve(Jbb, _bt(Jab))              # J_bb⁻¹ J_ba
+    Mih = jnp.linalg.solve(Jbb, hb[..., None])[..., 0]
+    J = Jaa - Jab @ S
+    J = 0.5 * (J + _bt(J))
+    h = ha - (Jab @ Mih[..., None])[..., 0]
+    _, logdet = jnp.linalg.slogdet(Jbb)
+    c = (
+        f.log_norm + 0.5 * jnp.sum(hb * Mih, -1)
+        - 0.5 * logdet + 0.5 * db * _LOG_2PI
+    )
+    widths = tuple(f.width_of(v) for v in keep)
+    return GaussianFactor(tuple(keep), widths, J, h, c)
+
+
+def gaussian_marginal_params(f: GaussianFactor) -> Tuple[jax.Array, jax.Array]:
+    """(mean, cov) of the normalized density a factor encodes: mean = J⁻¹h,
+    cov = J⁻¹ — per batch element."""
+    cov = jnp.linalg.inv(f.precision)
+    cov = 0.5 * (cov + _bt(cov))
+    mean = (cov @ f.info_vec[..., None])[..., 0]
+    return mean, cov
+
+
+def affine_gaussian_factor(
+    vars: Tuple[str, ...],
+    widths: Tuple[int, ...],
+    coeffs: Dict[str, jax.Array],
+    m0: jax.Array,
+    scale_tril: jax.Array,
+    own: Optional[str],
+) -> GaussianFactor:
+    """Lower one conditional density N(value; Σ_p A_p x_p + b, L L^T) to an
+    information-form factor over its entangled variables.
+
+    The residual is affine in the stacked variables, r = M x + m0: the
+    site's own block (when the site itself is marginalized, ``own``) gets
+    M_own = I, each parent p gets M_p = -A_p (``coeffs[p]``, shaped
+    (..., w_site, w_p)), and m0 is -b (marginalized) or value - b (observed /
+    replayed). Then with W = L⁻¹M and u = L⁻¹m0:
+
+        J = W^T W    h = -W^T u    c = -1/2 u^T u - Σ log diag L - (w/2) log 2π
+
+    so the factor integrates to the site's exact conditional log-density —
+    normalized, which is what lets eliminated chains produce the true
+    marginal likelihood."""
+    w_site = scale_tril.shape[-1]
+    blocks = []
+    for v, w in zip(vars, widths):
+        if v == own:
+            blocks.append(
+                jnp.broadcast_to(jnp.eye(w_site, dtype=jnp.float32), m0.shape[:-1] + (w_site, w_site))
+            )
+        else:
+            blocks.append(-coeffs[v])
+    batch = jnp.broadcast_shapes(
+        *[b.shape[:-2] for b in blocks], m0.shape[:-1], scale_tril.shape[:-2]
+    )
+    M = jnp.concatenate(
+        [jnp.broadcast_to(b, batch + b.shape[-2:]) for b in blocks], axis=-1
+    )
+    m0 = jnp.broadcast_to(m0, batch + m0.shape[-1:])
+    L = jnp.broadcast_to(scale_tril, batch + scale_tril.shape[-2:])
+    W = jax.scipy.linalg.solve_triangular(L, M, lower=True)
+    u = jax.scipy.linalg.solve_triangular(L, m0[..., None], lower=True)[..., 0]
+    J = _bt(W) @ W
+    J = 0.5 * (J + _bt(J))
+    h = -(_bt(W) @ u[..., None])[..., 0]
+    c = (
+        -0.5 * jnp.sum(u * u, -1)
+        - jnp.sum(jnp.log(jnp.diagonal(L, axis1=-2, axis2=-1)), -1)
+        - 0.5 * w_site * _LOG_2PI
+    )
+    return GaussianFactor(vars, widths, J, h, c)
+
+
+# ---------------------------------------------------------------------------
+# edge-factor plumbing for chain lowerings
+# ---------------------------------------------------------------------------
+
+# event rank per edge 6-tuple leaf (J11, J12, J22, h1, h2, c)
+_EDGE_EVENT_RANKS = (2, 2, 2, 1, 1, 0)
+
+
+def _edge_tuple(f: GaussianFactor, u: str, v: str):
+    """Extract the ordered (u, v) edge 6-tuple from a binary factor."""
+    iu = f._flat_idx([u])
+    iv = f._flat_idx([v])
+    J = f.precision
+    return (
+        J[..., iu[:, None], iu[None, :]],
+        J[..., iu[:, None], iv[None, :]],
+        J[..., iv[:, None], iv[None, :]],
+        f.info_vec[..., iu],
+        f.info_vec[..., iv],
+        jnp.asarray(f.log_norm, jnp.float32),
+    )
+
+
+def _fold_unary(edge, f: GaussianFactor, side: str):
+    """Add a unary factor's (J, h, c) into one side of an edge tuple."""
+    J11, J12, J22, h1, h2, c = edge
+    if side == "left":
+        return (J11 + f.precision, J12, J22, h1 + f.info_vec, h2, c + f.log_norm)
+    return (J11, J12, J22 + f.precision, h1, h2 + f.info_vec, c + f.log_norm)
+
+
+def _stack_edges(edges):
+    """Stack edge tuples along a new chain axis (at -3/-2/-1 per leaf),
+    broadcasting every leaf to ONE common lead batch first — scan carries
+    must keep an invariant shape, so partial per-leaf batches can't ride
+    along the chain axis."""
+    leaves = [
+        [jnp.asarray(e[li], jnp.float32) for e in edges]
+        for li in range(6)
+    ]
+    batch = jnp.broadcast_shapes(
+        *[x.shape[: x.ndim - er] for xs, er in zip(leaves, _EDGE_EVENT_RANKS) for x in xs]
+    )
+    out = []
+    for xs, er in zip(leaves, _EDGE_EVENT_RANKS):
+        xs = [jnp.broadcast_to(x, batch + x.shape[x.ndim - er:]) for x in xs]
+        out.append(jnp.stack(xs, axis=len(batch)))
+    return tuple(out)
+
+
+def _marginalize_left(edge):
+    """Integrate an edge tuple's LEFT variable out, returning the unary
+    (J, h, c) on its right variable — one Kalman predict+update in
+    information form."""
+    J11, J12, J22, h1, h2, c = edge
+    d1 = J11.shape[-1]
+    S = jnp.linalg.solve(J11, J12)                    # J11⁻¹ J12
+    Mih = jnp.linalg.solve(J11, h1[..., None])[..., 0]
+    J = J22 - _bt(J12) @ S
+    J = 0.5 * (J + _bt(J))
+    h = h2 - (_bt(J12) @ Mih[..., None])[..., 0]
+    _, logdet = jnp.linalg.slogdet(J11)
+    c = c + 0.5 * jnp.sum(h1 * Mih, -1) - 0.5 * logdet + 0.5 * d1 * _LOG_2PI
+    return J, h, c
+
+
+def _run_gaussian_scan(step: ChainStep, edges, path_vars):
+    """Roll a uniform Gaussian chain through one forward `lax.scan` — the
+    sequential information-form Kalman fold. With `absorb` the carry is the
+    unary filtered potential on the frontier variable (O(T d³) total, the
+    textbook filter); otherwise the carry is the edge factor linking D_0 to
+    the frontier. Edge 0 resolves outside the scan (mirroring
+    `executor._run_scan`), so T=1 segments never pay a scan op."""
+    stacked = _stack_edges(edges)
+    # scan iterates the leading axis: move each leaf's chain axis to front
+    stacked = tuple(
+        jnp.moveaxis(x, x.ndim - er - 1, 0)
+        for x, er in zip(stacked, _EDGE_EVENT_RANKS)
+    )
+    rest = tuple(x[1:] for x in stacked)
+    first = tuple(x[0] for x in stacked)
+    if step.absorb:
+        init = _marginalize_left(first)
+
+        def body(carry, edge):
+            J, h, c = carry
+            J11, J12, J22, h1, h2, ec = edge
+            out = _marginalize_left((J11 + J, J12, J22, h1 + h, h2, ec + c))
+            return out, None
+
+        (J, h, c), _ = jax.lax.scan(body, init, rest)
+        return GaussianFactor((path_vars[-1],), (J.shape[-1],), J, h, c)
+
+    def body(carry, edge):
+        return kernel_ref.gaussian_combine_ref(carry, edge), None
+
+    out, _ = jax.lax.scan(body, first, rest)
+    return _edge_factor(out, path_vars[0], path_vars[-1])
+
+
+def _edge_factor(edge, u: str, v: str) -> GaussianFactor:
+    """Reassemble an edge 6-tuple into a binary `GaussianFactor` over (u, v)."""
+    J11, J12, J22, h1, h2, c = edge
+    d1, d2 = J11.shape[-1], J22.shape[-1]
+    top = jnp.concatenate([J11, J12], axis=-1)
+    bot = jnp.concatenate([_bt(J12), J22], axis=-1)
+    J = jnp.concatenate([top, bot], axis=-2)
+    h = jnp.concatenate([h1, h2], axis=-1)
+    return GaussianFactor((u, v), (d1, d2), J, h, c)
+
+
+def _run_gaussian_chain(step: ChainStep, factors, dim_to_var) -> GaussianFactor:
+    """Execute one `ChainStep` over Gaussian factors: assemble oriented edge
+    tuples (merging parallel binaries, folding interior unaries — left side
+    for the scan sweep, right side for tree/folds, mirroring the log
+    executor's association), then lower."""
+    path_vars = [dim_to_var[d] for d in step.path]
+    edges = []
+    for t, ids in enumerate(step.edges):
+        f = factors[ids[0]]
+        for i in ids[1:]:
+            f = gaussian_multiply(f, factors[i])
+        edges.append(_edge_tuple(f, path_vars[t], path_vars[t + 1]))
+
+    if step.lower == "scan":
+        for t in range(len(edges)):
+            ids = list(step.absorbed) if t == 0 else list(step.folded[t])
+            for i in ids:
+                edges[t] = _fold_unary(edges[t], factors[i], "left")
+        return _run_gaussian_scan(step, edges, path_vars)
+
+    assert not step.absorb, "terminal absorption is a scan-only lowering"
+    for t in range(len(edges)):
+        for i in step.folded[t + 1]:   # interior unaries fold into the entering edge
+            edges[t] = _fold_unary(edges[t], factors[i], "right")
+    if step.lower == "tree" and len(edges) >= 3:
+        out = kernel_ops.gaussian_scan(_stack_edges(edges))
+    else:
+        out = edges[0]
+        for e in edges[1:]:
+            out = kernel_ops.gaussian_combine(out, e)
+    return _edge_factor(out, path_vars[0], path_vars[-1])
+
+
+# ---------------------------------------------------------------------------
+# the planner seam
+# ---------------------------------------------------------------------------
+
+
+def _gaussian_structs(
+    factors: Sequence[GaussianFactor], var_to_dim: Dict[str, int]
+) -> List[FactorStruct]:
+    structs = []
+    for f in factors:
+        order = sorted(f.vars, key=lambda v: var_to_dim[v])
+        dims = tuple(var_to_dim[v] for v in order)
+        sizes = tuple(f.width_of(v) for v in order)
+        lead = jnp.shape(f.log_norm)
+        batch = tuple(i - len(lead) for i, s in enumerate(lead) if s > 1)
+        structs.append(FactorStruct(dims, sizes, batch, -1))
+    return structs
+
+
+def greedy_eliminate_gaussians(
+    factors: Sequence[GaussianFactor], order: Sequence[str]
+) -> List[jax.Array]:
+    """Legacy-shaped greedy path (``dispatch="pairwise"``): eliminate one
+    variable at a time in trace order — the dense sequential reference the
+    planned path is conformance-tested against."""
+    fs = list(factors)
+    for var in order:
+        group = [f for f in fs if var in f.vars]
+        rest = [f for f in fs if var not in f.vars]
+        if not group:
+            continue
+        f = group[0]
+        for g in group[1:]:
+            f = gaussian_multiply(f, g)
+        fs = rest + [gaussian_marginalize(f, [var])]
+    for f in fs:
+        if f.vars:
+            raise RuntimeError(f"variables {f.vars} survived greedy elimination")
+    return [f.log_norm for f in fs]
+
+
+def execute_gaussian_plan(plan, factors, dim_to_var) -> List[jax.Array]:
+    """Run a `ContractionPlan` against Gaussian factors: `ChainStep`s lower
+    to the fused Kalman sweeps, `ElimStep`s to one multiply+Schur each.
+    Returns the surviving factors' log-normalizer tensors (every planned
+    variable eliminated)."""
+    fs: List[Optional[GaussianFactor]] = list(factors)
+    for step in plan.steps:
+        if isinstance(step, ChainStep):
+            out = _run_gaussian_chain(step, fs, dim_to_var)
+        else:
+            group = [fs[i] for i in step.group]
+            f = group[0]
+            for g in group[1:]:
+                f = gaussian_multiply(f, g)
+            out = gaussian_marginalize(f, [dim_to_var[step.dim]])
+        assert step.out == len(fs), "plan ids out of sync with gaussian executor"
+        fs.append(out)
+    outs = [fs[i] for i in plan.outputs]
+    for f in outs:
+        if f.vars:
+            raise RuntimeError(
+                f"variables {f.vars} survived the planned elimination"
+            )
+    return [f.log_norm for f in outs]
+
+
+def eliminate_gaussian_factors(
+    factors: Sequence[GaussianFactor],
+    order: Sequence[str],
+    dispatch: Optional[str] = None,
+) -> List[jax.Array]:
+    """Integrate every variable out of a Gaussian factor graph, returning
+    the per-factor log-normalizer tensors (enum-lead batched, right-aligned
+    — ready to enter the discrete contraction as ordinary log-factors).
+
+    ``order`` is the variables' trace order: the first site maps to the most
+    negative planner id, so the planner's greedy most-negative-first
+    tie-break sweeps chains front-to-back (a forward Kalman filter). In
+    ``auto`` dispatch the elimination is planned through the shared
+    `plan_elimination` (plan-cached under a ``semiring="gaussian"``
+    fingerprint — same cache, disjoint keys from log-semiring plans);
+    ``pairwise`` runs the dense greedy reference path."""
+    if not factors:
+        return []
+    order = list(order)
+    n = len(order)
+    var_to_dim = {v: i - n for i, v in enumerate(order)}
+    for f in factors:
+        for v in f.vars:
+            if v not in var_to_dim:
+                raise ValueError(f"factor variable {v!r} missing from order {order}")
+    if _dispatch_mode(dispatch) == "pairwise":
+        return greedy_eliminate_gaussians(factors, order)
+    structs = _gaussian_structs(factors, var_to_dim)
+    dims = frozenset(var_to_dim.values())
+    knobs = plan_knobs()
+    key = fingerprint(structs, dims, "gaussian", knobs)
+    plan = PLAN_CACHE.get_or_plan(
+        key,
+        lambda: plan_elimination(structs, dims, semiring="gaussian", knobs=knobs),
+    )
+    dim_to_var = {d: v for v, d in var_to_dim.items()}
+    return execute_gaussian_plan(plan, factors, dim_to_var)
+
+
+# ---------------------------------------------------------------------------
+# structural dependence analysis (works under jit)
+# ---------------------------------------------------------------------------
+
+
+def jaxpr_dependencies(fn: Callable, protos) -> List[FrozenSet[int]]:
+    """Which input leaves each output leaf of ``fn`` structurally depends
+    on, via a conservative dataflow walk of the jaxpr.
+
+    ``protos`` is a pytree of abstract-value prototypes (typically a dict of
+    zero arrays); returns one frozenset of flat *input-leaf indices* per flat
+    *output leaf*, both in `jax.tree_util` flatten order. Conservative:
+    equations with sub-jaxprs (scan/cond/pjit) propagate the union of all
+    their inputs to all their outputs, so dependence is only ever
+    over-reported — an over-reported edge densifies a factor, never drops
+    one. Works on tracers, which is what makes marginalization structure
+    discoverable inside `jax.jit`."""
+    closed = jax.make_jaxpr(fn)(protos)
+    jaxpr = closed.jaxpr
+    deps: Dict = {}
+    for i, v in enumerate(jaxpr.invars):
+        deps[v] = frozenset([i])
+    for v in jaxpr.constvars:
+        deps[v] = frozenset()
+    for eqn in jaxpr.eqns:
+        ins: FrozenSet[int] = frozenset()
+        for v in eqn.invars:
+            if hasattr(v, "val"):       # Literal: no dependence
+                continue
+            ins = ins | deps.get(v, frozenset())
+        for o in eqn.outvars:
+            deps[o] = ins
+    out: List[FrozenSet[int]] = []
+    for v in jaxpr.outvars:
+        if hasattr(v, "val"):
+            out.append(frozenset())
+        else:
+            out.append(deps.get(v, frozenset()))
+    return out
+
+
+def color_sites(
+    sites: Sequence[str], dependents: Dict[str, Set[str]]
+) -> List[List[str]]:
+    """Greedy conflict coloring for Jacobian probing: two sites conflict
+    when some output depends on both, so sites within one color class can
+    share a JVP basis push and still be disentangled (each output sees at
+    most one active parent per push). A Markov chain 2-colors; the number
+    of pushes is colors × max width — O(1) in chain length."""
+    conflicts: Dict[str, Set[str]] = {s: set() for s in sites}
+    for parents in dependents.values():
+        ps = [p for p in sites if p in parents]
+        for a in ps:
+            for b in ps:
+                if a != b:
+                    conflicts[a].add(b)
+    colors: List[List[str]] = []
+    assigned: Dict[str, int] = {}
+    for s in sites:
+        used = {assigned[o] for o in conflicts[s] if o in assigned}
+        c = next(i for i in range(len(colors) + 1) if i not in used)
+        if c == len(colors):
+            colors.append([])
+        colors[c].append(s)
+        assigned[s] = c
+    return colors

@@ -23,14 +23,23 @@ does).
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable, Dict, FrozenSet, List, Optional, Tuple, Union
+from typing import Any, Callable, Dict, FrozenSet, List, NamedTuple, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh
 
 from ..core.handlers import block, enum, replay, seed, substitute, trace
 from ..core.primitives import prng_key
+from ..distributions.continuous import MultivariateNormal, Normal
+from .contract.gaussian import (
+    GaussianFactor,
+    affine_gaussian_factor,
+    color_sites,
+    eliminate_gaussian_factors,
+    jaxpr_dependencies,
+)
 from .contract import (
     _dispatch_mode,
     _from_matrix,
@@ -59,6 +68,7 @@ __all__ = [
     "TraceEnum_ELBO",
     "contract_log_factors",
     "discrete_marginals",
+    "gaussian_marginals",
     "infer_discrete",
     "plan_cache_stats",
     "clear_plan_cache",
@@ -90,11 +100,13 @@ def _max_plate_nesting(*traces) -> int:
     return mpn
 
 
-def _collect_factors(model_tr):
+def _collect_factors(model_tr, skip: FrozenSet[str] = frozenset()):
     """Extract (ordinal, log_prob, pending_scale) triples from a model trace,
     plus the frame->nesting-depth map used to order plate elimination and the
     pool of dims the enum messenger allocated. The ordinal of a factor is the
-    frozenset of plate frames enclosing its site.
+    frozenset of plate frames enclosing its site. Sites named in ``skip`` are
+    excluded entirely — used for Gaussian-entangled sites, whose densities
+    enter through the eliminated Gaussian factors' log-normalizers instead.
 
     Scale handling: a site scale (plate subsampling's size/subsample_size, or
     handlers.scale) is an exponent on probabilities — for factors entangled
@@ -108,8 +120,8 @@ def _collect_factors(model_tr):
     factors: List[Tuple[FrozenSet, jax.Array, Any]] = []
     depth: Dict = {}
     enum_dim_pool = set()
-    for site in model_tr.nodes.values():
-        if site["type"] != "sample":
+    for name, site in model_tr.nodes.items():
+        if site["type"] != "sample" or name in skip:
             continue
         enum_dim = site["infer"].get("_enumerate_dim")
         if enum_dim is not None:
@@ -147,6 +159,248 @@ def _collect_factors(model_tr):
         for o, lp, s in factors
     ]
     return factors, depth, pool
+
+
+# ---------------------------------------------------------------------------
+# Gaussian-site lowering (exact marginalization of linear-Gaussian latents)
+# ---------------------------------------------------------------------------
+
+
+def _gaussian_sites(model_tr) -> List[str]:
+    """Non-observed sites annotated ``infer={"marginalize": "gaussian"}``,
+    in trace order (which becomes the elimination order)."""
+    return [
+        name
+        for name, site in model_tr.nodes.items()
+        if site["type"] == "sample"
+        and not site["is_observed"]
+        and site["infer"].get("marginalize") == "gaussian"
+    ]
+
+
+def _check_gaussian_site(name, site, *, marginalized: bool):
+    role = "marginalized" if marginalized else "Gaussian-entangled"
+    if not isinstance(site["fn"], (Normal, MultivariateNormal)):
+        raise NotImplementedError(
+            f"{role} site '{name}' has distribution "
+            f"{type(site['fn']).__name__}; Gaussian marginalization supports "
+            "Normal and MultivariateNormal sites only"
+        )
+    if site["cond_indep_stack"]:
+        raise NotImplementedError(
+            f"{role} site '{name}' is inside a plate; plate-local Gaussian "
+            "marginalization is not implemented — write time/feature "
+            "structure as separate sites (or an MVN event dim) instead"
+        )
+    if site["scale"] is not None or site["mask"] is not None:
+        raise NotImplementedError(
+            f"{role} site '{name}' carries a scale or mask; neither commutes "
+            "with exact Gaussian elimination"
+        )
+
+
+def _check_gaussian_lead(name, lead, pool):
+    for i, s in enumerate(lead):
+        d = i - len(lead)
+        if s > 1 and d not in pool:
+            raise NotImplementedError(
+                f"Gaussian-entangled site '{name}' has a non-enumeration "
+                f"batch axis of size {s} at dim {d}; only enum dims may "
+                "batch Gaussian factors (vectorized/plated Gaussian sites "
+                "are unsupported — use separate sites or an MVN event dim)"
+            )
+
+
+class _GaussianLowering(NamedTuple):
+    factors: List[GaussianFactor]       # one per entangled site
+    order: List[str]                    # marginalized sites, trace order
+    entangled: FrozenSet[str]           # sites the factors' densities own
+    widths: Dict[str, int]
+    event_shapes: Dict[str, Tuple[int, ...]]
+
+
+def _lower_gaussian_trace(make_trace, model_tr, pool, *, fixed: FrozenSet[str]):
+    """Lower every ``marginalize="gaussian"`` site (and each site whose
+    location depends on one) to an information-form `GaussianFactor`.
+
+    Dependence structure is discovered with `jax.linearize` of a model
+    retrace that substitutes candidate values, plus a conservative jaxpr
+    dataflow walk (`contract.gaussian.jaxpr_dependencies`) — both work under
+    `jax.jit`. The affine coefficients A in loc_s = Σ_p A_sp x_p + b_s come
+    from JVP basis pushes, batched with a greedy conflict coloring
+    (`color_sites`) so a T-step chain costs 2 vectorized pushes, not T.
+    Anything non-linear-Gaussian in the entangled set raises
+    `NotImplementedError`: a dependent non-Gaussian site, a covariance
+    depending on a marginalized value, or (checked numerically when tracing
+    eagerly; skipped under jit) a non-affine location.
+
+    ``fixed`` names latents whose values are legitimately pinned (guide
+    draws); an entangled free latent that is neither fixed, observed, nor
+    itself marginalized is an error rather than a silent conditioning."""
+    marg = _gaussian_sites(model_tr)
+    if not marg:
+        return None
+    marg_set = set(marg)
+    for name in marg:
+        _check_gaussian_site(name, model_tr.nodes[name], marginalized=True)
+
+    widths: Dict[str, int] = {}
+    event_shapes: Dict[str, Tuple[int, ...]] = {}
+
+    def register(name):
+        fn = model_tr.nodes[name]["fn"]
+        ev = tuple(fn.event_shape) if isinstance(fn, MultivariateNormal) else ()
+        event_shapes[name] = ev
+        widths[name] = int(ev[0]) if ev else 1
+
+    for name in marg:
+        register(name)
+    protos = {n: jnp.zeros(event_shapes[n], jnp.float32) for n in marg}
+
+    sample_names = [n for n, s in model_tr.nodes.items() if s["type"] == "sample"]
+
+    def retrace(values):
+        tr = make_trace(values)
+        outs = {}
+        for n in sample_names:
+            site = tr.nodes[n]
+            fn = site["fn"]
+            if isinstance(fn, Normal):
+                outs[("loc", n)] = jnp.asarray(fn.loc, jnp.float32)
+                outs[("scale", n)] = jnp.asarray(fn.scale, jnp.float32)
+            elif isinstance(fn, MultivariateNormal):
+                outs[("loc", n)] = jnp.asarray(fn.loc, jnp.float32)
+                outs[("scale", n)] = jnp.asarray(fn.scale_tril, jnp.float32)
+            else:
+                outs[("lp", n)] = fn.log_prob(site["value"])
+        return outs
+
+    primal, jvp = jax.linearize(retrace, protos)
+    in_names = sorted(protos)           # dict flatten order == sorted keys
+    out_keys = sorted(primal)
+    dep_idx = jaxpr_dependencies(retrace, protos)
+    deps = {
+        k: frozenset(in_names[i] for i in dep_idx[j]) & marg_set
+        for j, k in enumerate(out_keys)
+    }
+
+    for (kind, n), ds in sorted(deps.items()):
+        if not ds or kind == "loc":
+            continue
+        if kind == "scale":
+            raise NotImplementedError(
+                f"the scale/covariance of site '{n}' depends on marginalized "
+                f"sites {sorted(ds)}; only locations may depend on "
+                "Gaussian-marginalized latents (linear-Gaussian structure)"
+            )
+        raise NotImplementedError(
+            f"site '{n}' depends on marginalized sites {sorted(ds)} but is "
+            "not Normal/MultivariateNormal; every site downstream of a "
+            "marginalized latent must be linear-Gaussian"
+        )
+
+    entangled = [
+        n for n in sample_names
+        if n in marg_set or deps.get(("loc", n), frozenset())
+    ]
+    for n in entangled:
+        site = model_tr.nodes[n]
+        if n not in marg_set:
+            _check_gaussian_site(n, site, marginalized=False)
+            if not site["is_observed"] and n not in fixed:
+                raise NotImplementedError(
+                    f"site '{n}' depends on marginalized sites but is a free "
+                    "latent; annotate it for marginalization too, or sample "
+                    "it in the guide"
+                )
+            register(n)
+
+    # numeric affine-ness check: only possible on concrete values (eager
+    # tracing); under jit the primal is a tracer and the check is skipped —
+    # the structural guards above still hold, linearity is trusted.
+    if not any(isinstance(x, jax.core.Tracer) for x in jax.tree_util.tree_leaves(primal)):
+        delta = {n: jnp.full(event_shapes[n], 0.7357, jnp.float32) for n in marg}
+        lhs = retrace(delta)
+        tang = jvp(delta)
+        for n in entangled:
+            want = primal[("loc", n)] + tang[("loc", n)]
+            if not np.allclose(lhs[("loc", n)], want, rtol=1e-3, atol=1e-4):
+                raise NotImplementedError(
+                    f"the location of site '{n}' is not affine in the "
+                    "marginalized sites; exact Gaussian elimination requires "
+                    "linear-Gaussian dependence"
+                )
+
+    # Jacobian blocks via color-batched JVP basis pushes
+    dependents_map = {
+        ("loc", n): deps.get(("loc", n), frozenset()) for n in entangled
+    }
+    jac: Dict[Tuple[str, str], jax.Array] = {}
+    for group in color_sites(marg, dependents_map):
+        group = [
+            p for p in group
+            if any(p in deps.get(("loc", n), ()) for n in entangled)
+        ]
+        if not group:
+            continue
+        wmax = max(widths[p] for p in group)
+
+        def basis(p, i):
+            z = jnp.zeros(event_shapes[p], jnp.float32)
+            if p not in group or i >= widths[p]:
+                return z
+            return z.at[i].set(1.0) if event_shapes[p] else z + 1.0
+
+        stacked = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs),
+            *[{p: basis(p, i) for p in protos} for i in range(wmax)],
+        )
+        pushed = jax.vmap(jvp)(stacked)
+        for n in entangled:
+            for p in group:
+                if p not in deps.get(("loc", n), ()):
+                    continue
+                col = jnp.moveaxis(pushed[("loc", n)][: widths[p]], 0, -1)
+                if not event_shapes[n]:
+                    col = col[..., None, :]         # scalar site: (*lead, 1, w_p)
+                jac[(n, p)] = col
+
+    # one information-form factor per entangled site
+    factors: List[GaussianFactor] = []
+    for n in entangled:
+        site = model_tr.nodes[n]
+        is_mvn = bool(event_shapes[n])
+        loc = jnp.asarray(primal[("loc", n)], jnp.float32)
+        scale = jnp.asarray(primal[("scale", n)], jnp.float32)
+        if is_mvn:
+            lead = jnp.broadcast_shapes(loc.shape[:-1], scale.shape[:-2])
+            locb = jnp.broadcast_to(loc, lead + loc.shape[-1:])
+            L = jnp.broadcast_to(scale, lead + scale.shape[-2:])
+        else:
+            lead = jnp.broadcast_shapes(loc.shape, scale.shape)
+            locb = jnp.broadcast_to(loc, lead)[..., None]
+            L = jnp.broadcast_to(scale, lead)[..., None, None]
+        _check_gaussian_lead(n, lead, pool)
+        parents = sorted(deps.get(("loc", n), frozenset()), key=marg.index)
+        if n in marg_set:
+            vars_ = (n,) + tuple(p for p in parents if p != n)
+            m0, own = -locb, n
+        else:
+            vars_ = tuple(parents)
+            value = jnp.asarray(site["value"], jnp.float32)
+            m0 = (value if is_mvn else value[..., None]) - locb
+            own = None
+        factors.append(
+            affine_gaussian_factor(
+                vars_,
+                tuple(widths[v] for v in vars_),
+                {p: jac[(n, p)] for p in vars_ if p != n},
+                m0,
+                L,
+                own,
+            )
+        )
+    return _GaussianLowering(factors, marg, frozenset(entangled), widths, event_shapes)
 
 
 # ---------------------------------------------------------------------------
@@ -204,7 +458,39 @@ class TraceEnum_ELBO(ELBO):
         with enum(first_available_dim=-1 - mpn):
             model_tr = trace(replay(seeded_model, guide_tr)).get_trace(*args, **kwargs)
 
-        factors, depth, pool = _collect_factors(model_tr)
+        guide_latents = frozenset(
+            name
+            for name, site in guide_tr.nodes.items()
+            if site["type"] == "sample" and not site["is_observed"]
+        )
+        for name in _gaussian_sites(model_tr):
+            if name in guide_latents:
+                raise NotImplementedError(
+                    f"guide samples site '{name}' which the model marks for "
+                    "Gaussian marginalization; remove it from the guide so "
+                    "TraceEnum_ELBO can integrate it out exactly"
+                )
+        pool = frozenset(
+            s["infer"]["_enumerate_dim"]
+            for s in model_tr.nodes.values()
+            if s["type"] == "sample" and s["infer"].get("_enumerate_dim") is not None
+        )
+
+        def make_trace(values):
+            with enum(first_available_dim=-1 - mpn):
+                return trace(
+                    substitute(replay(seeded_model, guide_tr), data=values)
+                ).get_trace(*args, **kwargs)
+
+        gauss = _lower_gaussian_trace(make_trace, model_tr, pool, fixed=guide_latents)
+        skip = gauss.entangled if gauss else frozenset()
+        factors, depth, pool = _collect_factors(model_tr, skip=skip)
+        if gauss:
+            # the eliminated factors' log-normalizers are ordinary enum-lead
+            # log-factors at the root ordinal (plates on entangled sites are
+            # rejected in the lowering), completing the mixed contraction
+            for t in eliminate_gaussian_factors(gauss.factors, gauss.order):
+                factors.append((frozenset(), t, None))
         elbo = jnp.sum(contract_log_factors(factors, depth, pool))
         score_logq = 0.0  # REINFORCE factor for non-reparam guide sites
         for site in guide_tr.nodes.values():
@@ -321,6 +607,95 @@ def _squeeze_to_rank(x: jax.Array, rank: int) -> jax.Array:
     while jnp.ndim(x) > rank and jnp.shape(x)[0] == 1:
         x = x[0]
     return x
+
+
+def gaussian_marginals(
+    model: Callable,
+    rng_key,
+    *args,
+    sites: Optional[List[str]] = None,
+    first_available_dim: Optional[int] = None,
+    **kwargs,
+) -> Dict[str, Tuple[jax.Array, jax.Array]]:
+    """Exact posterior (mean, covariance) of every Gaussian-marginalized
+    site — the smoother marginals of a Kalman model, conjugate posteriors of
+    a Bayesian linear regression, or the moment-matched mixture marginals of
+    a switching LDS (discrete enum and Gaussian elimination run in one mixed
+    contraction). Condition/substitute observations into the model first,
+    the way `discrete_marginals` expects.
+
+    Returns ``{site: (mean, cov)}``: scalar mean and variance for `Normal`
+    sites, ``(D,)`` mean and ``(D, D)`` covariance for `MultivariateNormal`
+    sites. ``sites`` restricts the query (covariances scale cubically with
+    total queried width).
+
+    Uses the cumulant trick — the Gaussian analogue of `discrete_marginals`'
+    dice-factor identity: appending a zero-precision perturbation factor
+    with info_vec ε to a site makes ∇_ε log Z the posterior mean and the
+    ε-Hessian the posterior covariance, both exact (and mixture-exact under
+    enumeration, since log Z sums over the discrete support)."""
+    if rng_key is None:
+        rng_key = prng_key()
+    if rng_key is None:
+        rng_key = jax.random.PRNGKey(0)
+    tr = _enum_trace(model, rng_key, args, kwargs, first_available_dim)
+    mpn = (
+        -first_available_dim - 1
+        if first_available_dim is not None
+        else _max_plate_nesting(tr)
+    )
+    seeded = seed(model, jnp.asarray(rng_key))
+
+    def make_trace(values):
+        with block():
+            with enum(first_available_dim=-1 - mpn):
+                return trace(substitute(seeded, data=values)).get_trace(*args, **kwargs)
+
+    pool = frozenset(
+        s["infer"]["_enumerate_dim"]
+        for s in tr.nodes.values()
+        if s["type"] == "sample" and s["infer"].get("_enumerate_dim") is not None
+    )
+    gauss = _lower_gaussian_trace(make_trace, tr, pool, fixed=frozenset())
+    if gauss is None:
+        raise ValueError(
+            "no sites are annotated for Gaussian marginalization; wrap the "
+            "model in config_gaussian or annotate sites with "
+            'infer={"marginalize": "gaussian"}'
+        )
+    factors, depth, _ = _collect_factors(tr, skip=gauss.entangled)
+    query = list(gauss.order) if sites is None else list(sites)
+    for n in query:
+        if n not in gauss.order:
+            raise ValueError(
+                f"site '{n}' is not Gaussian-marginalized "
+                f"(marginalized sites: {gauss.order})"
+            )
+
+    def log_z(eps: Dict[str, jax.Array]) -> jax.Array:
+        gfs = list(gauss.factors)
+        for n, e in eps.items():
+            w = gauss.widths[n]
+            gfs.append(
+                GaussianFactor(
+                    (n,), (w,),
+                    jnp.zeros((w, w), jnp.float32), e, jnp.zeros((), jnp.float32),
+                )
+            )
+        extra = [
+            (frozenset(), t, None)
+            for t in eliminate_gaussian_factors(gfs, gauss.order)
+        ]
+        return jnp.sum(contract_log_factors(factors + extra, depth, pool))
+
+    zero = {n: jnp.zeros((gauss.widths[n],), jnp.float32) for n in query}
+    means = jax.grad(log_z)(zero)
+    covs = jax.jacfwd(jax.grad(log_z))(zero)
+    out: Dict[str, Tuple[jax.Array, jax.Array]] = {}
+    for n in query:
+        m, C = means[n], covs[n][n]
+        out[n] = (m, C) if gauss.event_shapes[n] else (m[0], C[0, 0])
+    return out
 
 
 def _decode_discrete(model, rng_key, args, kwargs, first_available_dim, temperature):

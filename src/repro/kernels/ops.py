@@ -28,6 +28,7 @@ import jax.numpy as jnp
 from . import ref
 from .categorical_logprob import categorical_logprob_flat
 from .flash_attention import flash_attention_gqa
+from .gaussian import gaussian_combine_pairs
 from .leapfrog import leapfrog_fused
 from .semiring import SEMIRINGS, semiring_matmul_tiled
 from .ssd_scan import ssd_scan_chunked
@@ -77,6 +78,8 @@ _SUPPORT = {
     "semiring_matmul": ("tpu", "interpret", "reference"),
     "hmm_scan": ("tpu", "interpret", "reference"),
     "leapfrog": ("tpu", "interpret", "reference"),
+    "gaussian_combine": ("tpu", "interpret", "reference"),
+    "gaussian_scan": ("tpu", "interpret", "reference"),
 }
 
 
@@ -304,6 +307,159 @@ def leapfrog(
         block_chains=block_chains,
         interpret=(backend == "interpret"),
     )
+
+
+# -- information-form Gaussian combine / Kalman scan (Gaussian semiring) ------
+
+# T-axis position per edge-factor leaf (J11, J12, J22, h1, h2, c): matrices
+# carry the chain axis at -3, info vectors at -2, the log-normalizer at -1
+_GAUSS_T_AXES = (-3, -3, -3, -2, -2, -1)
+
+
+def _gauss_slice_t(factors, start, stop, step=1):
+    out = []
+    for x, ax in zip(factors, _GAUSS_T_AXES):
+        idx = [slice(None)] * x.ndim
+        idx[ax] = slice(start, stop, step)
+        out.append(x[tuple(idx)])
+    return tuple(out)
+
+
+def _gaussian_widths(f):
+    """(d_left, d_right) of an edge 6-tuple, from the J12 cross block."""
+    return f[1].shape[-2], f[1].shape[-1]
+
+
+# Like semiring_matmul, the Gaussian combine is differentiated straight
+# through (TraceEnum_ELBO objectives, the perturbation trick behind
+# gaussian_marginals), so the fused kernel carries a custom VJP with the
+# pure-jnp reference as its backward — same function, so same gradient.
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _gaussian_combine_kernel(f, g, block, backend):
+    leaves = f + g
+    batch = jnp.broadcast_shapes(
+        *(x.shape[:ax + 1 or None] for x, ax in zip(leaves, _GAUSS_T_AXES * 2))
+    )
+
+    def flat(x, ax):
+        ev = x.shape[ax + 1:] if ax != -1 else ()
+        x = jnp.broadcast_to(x, batch + ev)
+        return x.reshape((-1,) + ev)
+
+    ff = tuple(flat(x, ax) for x, ax in zip(f, _GAUSS_T_AXES))
+    gf = tuple(flat(x, ax) for x, ax in zip(g, _GAUSS_T_AXES))
+    out = gaussian_combine_pairs(
+        ff, gf, block_b=block, interpret=(backend == "interpret")
+    )
+    return tuple(
+        x.reshape(batch + x.shape[1:]) for x in out
+    )
+
+
+def _gaussian_combine_kernel_fwd(f, g, block, backend):
+    return _gaussian_combine_kernel(f, g, block, backend), (f, g)
+
+
+def _gaussian_combine_kernel_bwd(block, backend, res, ct):
+    f, g = res
+    _, vjp = jax.vjp(ref.gaussian_combine_ref, f, g)
+    return vjp(ct)
+
+
+_gaussian_combine_kernel.defvjp(_gaussian_combine_kernel_fwd, _gaussian_combine_kernel_bwd)
+
+
+def _gaussian_combine_impl(f, g, *, block, backend):
+    d1, db = _gaussian_widths(f)
+    db2, d2 = _gaussian_widths(g)
+    if backend == "reference" or not (d1 == db == db2 == d2):
+        # ragged widths never reach the kernel (its Gauss-Jordan unroll and
+        # lane layout assume one uniform square d); the jnp path is exact
+        return ref.gaussian_combine_ref(f, g)
+    if any(0 in x.shape for x in f + g):
+        return ref.gaussian_combine_ref(f, g)
+    return _gaussian_combine_kernel(f, g, block, backend)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "backend"))
+def _gaussian_combine(f, g, *, block, backend):
+    return _gaussian_combine_impl(f, g, block=block, backend=backend)
+
+
+def gaussian_combine(f, g, *, block: int = 256, backend: Optional[str] = None):
+    """Integrate out the shared middle variable of two Gaussian edge factors.
+
+    f, g: information-form edge 6-tuples ``(J11, J12, J22, h1, h2, c)`` —
+    ``log F(a, b) = -1/2 [a;b]^T J [a;b] + h^T [a;b] + c`` with J11 (..., d1, d1),
+    J12 (..., d1, db), J22 (..., db, db), h1 (..., d1), h2 (..., db), c (...).
+    g's left width must equal f's right width (db); batch dims broadcast.
+    Returns the (..., d1)-by-(..., d2) edge factor of ``∫ F(a, b) G(b, c) db``
+    — the associative Kalman-filter combine (see `ref.gaussian_combine_ref`
+    for the Schur-complement algebra, `kernels/gaussian.py` for the
+    conditioning contract).
+    """
+    d1, db = _gaussian_widths(f)
+    db2, _ = _gaussian_widths(g)
+    if db != db2:
+        raise ValueError(
+            f"middle widths disagree: f's right variable has width {db}, "
+            f"g's left variable has width {db2}"
+        )
+    return _gaussian_combine(
+        tuple(f), tuple(g), block=block, backend=resolve_backend(backend)
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block", "backend"))
+def _gaussian_scan(factors, *, block, backend):
+    if backend == "reference":
+        return ref.gaussian_scan_ref(factors)
+    x = factors
+    T = x[0].shape[-3]
+    # O(log T) associative tree, same shape as _hmm_scan's — except the
+    # Gaussian combine has NO identity element (it would need an infinite-
+    # precision delta factor), so an odd round carries its unpaired last
+    # element forward instead of identity-padding; adjacency is preserved,
+    # and associativity makes the regrouping exact
+    while T > 1:
+        m = (T // 2) * 2
+        a = _gauss_slice_t(x, 0, m, 2)
+        b = _gauss_slice_t(x, 1, m, 2)
+        comb = _gaussian_combine_impl(a, b, block=block, backend=backend)
+        if T % 2:
+            last = _gauss_slice_t(x, m, T)
+            comb = tuple(
+                jnp.concatenate([c_, l_], axis=ax)
+                for c_, l_, ax in zip(comb, last, _GAUSS_T_AXES)
+            )
+        x = comb
+        T = x[0].shape[-3]
+    return tuple(
+        jnp.squeeze(x_, axis=ax) for x_, ax in zip(x, _GAUSS_T_AXES)
+    )
+
+
+def gaussian_scan(factors, *, block: int = 256, backend: Optional[str] = None):
+    """Eliminate a linear-Gaussian Markov chain in O(log T) depth.
+
+    ``factors`` is an information-form edge 6-tuple stacked along a chain
+    axis: matrices (..., T, d, d), info vectors (..., T, d), log-normalizer
+    (..., T), where slice t is the edge factor linking chain state t-1 to
+    state t. Returns the single (..., d)-by-(..., d) edge factor of the full
+    ordered combine F_0 ⊗ F_1 ⊗ ... ⊗ F_{T-1} — every interior state
+    integrated out exactly (this *is* the parallel Kalman filter, in
+    information form). Associativity of the combine legalizes the log-depth
+    tree; the sequential O(T) oracle is `ref.gaussian_scan_ref`.
+    """
+    factors = tuple(factors)
+    if len(factors) != 6:
+        raise ValueError(f"expected an edge 6-tuple, got {len(factors)} leaves")
+    d1, d2 = _gaussian_widths(factors)
+    if d1 != d2:
+        raise ValueError(
+            f"chain edge factors must have a uniform square width, got ({d1}, {d2})"
+        )
+    return _gaussian_scan(factors, block=block, backend=resolve_backend(backend))
 
 
 def _semiring_eye(k: int) -> jax.Array:

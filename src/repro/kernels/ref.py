@@ -98,6 +98,113 @@ def leapfrog_ref(z, r, inv_mass, step_size, num_steps, potential_fn, *, max_step
     return z, r, pe
 
 
+_LOG_2PI = 1.8378770664093453
+
+
+def _bt(x) -> jax.Array:
+    """Batched matrix transpose (swap the trailing two axes)."""
+    return jnp.swapaxes(x, -1, -2)
+
+
+def gaussian_combine_ref(f, g):
+    """Associative Kalman combine of two information-form Gaussian edge factors.
+
+    An *edge factor* F(a, b) over a left variable a (width d1) and a right
+    variable b (width d2) is the 6-tuple ``(J11, J12, J22, h1, h2, c)``
+    encoding
+
+        log F(a, b) = -1/2 [a;b]^T [[J11, J12],[J12^T, J22]] [a;b]
+                      + [h1;h2]^T [a;b] + c
+
+    with ``J11: (..., d1, d1)``, ``J12: (..., d1, d2)``, ``J22: (..., d2, d2)``,
+    ``h1: (..., d1)``, ``h2: (..., d2)``, ``c: (...)``. Batch dims broadcast.
+
+    The combine integrates out the shared middle variable of F(a, b) · G(b, c):
+
+        (F ⊗ G)(a, c) = ∫ F(a, b) G(b, c) db
+
+    which is exact for Gaussians (Schur complement of the middle block):
+    with ``M = F.J22 + G.J11`` and ``hb = F.h2 + G.h1``,
+
+        J11' = F.J11 - F.J12 M⁻¹ F.J12^T
+        J12' = -F.J12 M⁻¹ G.J12
+        J22' = G.J22 - G.J12^T M⁻¹ G.J12
+        h1'  = F.h1 - F.J12 M⁻¹ hb
+        h2'  = G.h2 - G.J12^T M⁻¹ hb
+        c'   = F.c + G.c + 1/2 hb^T M⁻¹ hb - 1/2 log|M| + (d_b/2) log 2π
+
+    This operator is associative (it is marginalization of a chain graph, and
+    integration order over interior variables is exchangeable), which is what
+    legalizes the O(log T) tree in `ops.gaussian_scan`. M must be positive
+    definite — guaranteed when each factor's diagonal blocks came from genuine
+    conditional densities (see kernels/gaussian.py for the conditioning
+    contract).
+    """
+    fJ11, fJ12, fJ22, fh1, fh2, fc = (jnp.asarray(x, jnp.float32) for x in f)
+    gJ11, gJ12, gJ22, gh1, gh2, gc = (jnp.asarray(x, jnp.float32) for x in g)
+    M = fJ22 + gJ11
+    hb = fh2 + gh1
+    db = M.shape[-1]
+    # broadcast batch dims once so jnp.linalg.solve sees matching operands
+    batch = jnp.broadcast_shapes(
+        fJ11.shape[:-2], fJ12.shape[:-2], gJ12.shape[:-2], gJ22.shape[:-2],
+        M.shape[:-2], hb.shape[:-1], jnp.shape(fc), jnp.shape(gc),
+    )
+    M = jnp.broadcast_to(M, batch + M.shape[-2:])
+    fJ12b = jnp.broadcast_to(fJ12, batch + fJ12.shape[-2:])
+    gJ12b = jnp.broadcast_to(gJ12, batch + gJ12.shape[-2:])
+    hbb = jnp.broadcast_to(hb, batch + hb.shape[-1:])
+    MiFt = jnp.linalg.solve(M, _bt(fJ12b))          # (..., db, d1)
+    MiG = jnp.linalg.solve(M, gJ12b)                # (..., db, d2)
+    Mih = jnp.linalg.solve(M, hbb[..., None])[..., 0]
+    J11 = fJ11 - fJ12 @ MiFt
+    J12 = -(fJ12 @ MiG)
+    J22 = gJ22 - _bt(gJ12b) @ MiG
+    h1 = fh1 - (fJ12b @ Mih[..., None])[..., 0]
+    h2 = gh2 - (_bt(gJ12b) @ Mih[..., None])[..., 0]
+    _, logdet = jnp.linalg.slogdet(M)
+    c = (
+        fc + gc + 0.5 * jnp.sum(hbb * Mih, -1)
+        - 0.5 * logdet + 0.5 * db * _LOG_2PI
+    )
+    # Schur complements are symmetric in exact arithmetic; resymmetrize so
+    # float error never compounds across a long chain of combines
+    J11 = 0.5 * (J11 + _bt(J11))
+    J22 = 0.5 * (J22 + _bt(J22))
+    return (
+        jnp.broadcast_to(J11, batch + J11.shape[-2:]),
+        jnp.broadcast_to(J12, batch + J12.shape[-2:]),
+        jnp.broadcast_to(J22, batch + J22.shape[-2:]),
+        jnp.broadcast_to(h1, batch + h1.shape[-1:]),
+        jnp.broadcast_to(h2, batch + h2.shape[-1:]),
+        jnp.broadcast_to(c, batch),
+    )
+
+
+def gaussian_scan_ref(factors):
+    """Sequential left-fold oracle for `ops.gaussian_scan`: the ordered
+    combine F_0 ⊗ F_1 ⊗ ... ⊗ F_{T-1} of a stack of information-form edge
+    factors, one `gaussian_combine_ref` at a time (O(T) depth — the allclose
+    target for the O(log T) associative-tree path).
+
+    ``factors`` is the edge 6-tuple with a T axis left of each leaf's event
+    axes: matrices (..., T, d, d), info vectors (..., T, d), scalar (..., T).
+    Returns the single edge factor linking the first left variable to the
+    last right variable, every interior variable integrated out.
+    """
+    J11, J12, J22, h1, h2, c = factors
+    T = J11.shape[-3]
+
+    def at(t):
+        return (J11[..., t, :, :], J12[..., t, :, :], J22[..., t, :, :],
+                h1[..., t, :], h2[..., t, :], c[..., t])
+
+    out = at(0)
+    for t in range(1, T):
+        out = gaussian_combine_ref(out, at(t))
+    return out
+
+
 def hmm_scan_ref(factors, *, semiring: str = "logsumexp") -> jax.Array:
     """Sequential left-fold oracle for `ops.hmm_scan`: the ordered semiring
     product F_0 ⊗ F_1 ⊗ ... ⊗ F_{T-1} of a (..., T, K, K) stack of log-factors,

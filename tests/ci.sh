@@ -25,7 +25,8 @@
 #                 exactly the way users run them (installed package path,
 #                 no sys.path hacks)
 #   bench       - smoke-mode benchmarks; writes BENCH_enum.json,
-#                 BENCH_serve.json and BENCH_mcmc.json (uploaded as workflow
+#                 BENCH_serve.json, BENCH_mcmc.json and BENCH_gaussian.json
+#                 (uploaded as workflow
 #                 artifacts) and FAILS on any retrace-counter regression, if
 #                 the bucketed serve path drops under its 5x-vs-naive floor,
 #                 or if the fused MCMC driver drops under 2x the legacy
@@ -150,6 +151,7 @@ run_bench() {
     python benchmarks/enum_ve.py --smoke --json BENCH_enum.json
     python benchmarks/serve_bench.py --smoke --json BENCH_serve.json
     python benchmarks/mcmc_bench.py --smoke --json BENCH_mcmc.json
+    python benchmarks/gaussian_ve.py --smoke --json BENCH_gaussian.json
     python - <<'PY'
 from repro.launch.compile_cache import compilation_cache_stats
 from repro.infer import plan_cache_stats
@@ -159,7 +161,7 @@ PY
 }
 
 run_bench_gate() {
-    python benchmarks/check_regression.py BENCH_enum.json BENCH_serve.json BENCH_mcmc.json
+    python benchmarks/check_regression.py BENCH_enum.json BENCH_serve.json BENCH_mcmc.json BENCH_gaussian.json
 }
 
 case "$STEP" in

@@ -486,3 +486,83 @@ def test_enumerate_support_or_actionable_error(name):
         db = case.batched_mk()
     eb = db.enumerate_support(expand=True)
     assert eb.shape == (cardinality,) + db.batch_shape + db.event_shape
+
+
+# ---------------------------------------------------------------------------
+# information-form round-trips (Gaussian semiring, ISSUE 8 satellite) —
+# regression tests beside the PR 3 broadcasting fixes, since the Gaussian
+# lowering is the first consumer of batched MVN covariance/precision views.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("batch", [(), (4,), (2, 3)])
+def test_normal_information_form_round_trip(batch):
+    rng = np.random.default_rng(0)
+    loc = jnp.asarray(rng.normal(size=batch).astype(np.float32))
+    scale = jnp.asarray(rng.uniform(0.5, 2.0, size=batch).astype(np.float32))
+    d = dist.Normal(loc, scale)
+    prec, info, log_norm = d.to_information_form()
+    assert prec.shape == info.shape == log_norm.shape == batch
+    np.testing.assert_allclose(np.asarray(prec), 1.0 / np.asarray(scale) ** 2, rtol=1e-6)
+    # log_norm is the density's value at x=0 minus the quadratic/linear terms:
+    # log N(0; mu, sigma) == c exactly
+    np.testing.assert_allclose(
+        np.asarray(log_norm),
+        np.asarray(d.log_prob(jnp.zeros(batch))),
+        rtol=1e-5,
+        atol=1e-6,
+    )
+    d2 = dist.Normal.from_information_form(prec, info)
+    np.testing.assert_allclose(np.asarray(d2.loc), np.asarray(loc), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(d2.scale), np.asarray(scale), rtol=1e-5, atol=1e-6
+    )
+
+
+@pytest.mark.parametrize("batch", [(), (4,), (2, 3)])
+@pytest.mark.parametrize("d_dim", [1, 3])
+def test_mvn_information_form_round_trip(batch, d_dim):
+    rng = np.random.default_rng(1)
+    loc = jnp.asarray(rng.normal(size=batch + (d_dim,)).astype(np.float32))
+    A = rng.normal(size=batch + (d_dim, d_dim))
+    cov = A @ np.swapaxes(A, -1, -2) + 0.5 * np.eye(d_dim)
+    d = dist.MultivariateNormal(loc, covariance_matrix=jnp.asarray(cov, jnp.float32))
+    prec, info, log_norm = d.to_information_form()
+    assert prec.shape == batch + (d_dim, d_dim)
+    assert info.shape == batch + (d_dim,)
+    assert log_norm.shape == batch
+    np.testing.assert_allclose(
+        np.asarray(prec), np.linalg.inv(cov), rtol=1e-3, atol=1e-4
+    )
+    np.testing.assert_allclose(
+        np.asarray(log_norm),
+        np.asarray(d.log_prob(jnp.zeros(batch + (d_dim,)))),
+        rtol=1e-4,
+        atol=1e-5,
+    )
+    d2 = dist.MultivariateNormal.from_information_form(prec, info)
+    np.testing.assert_allclose(np.asarray(d2.loc), np.asarray(loc), rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(
+        np.asarray(d2.covariance_matrix), cov, rtol=1e-3, atol=1e-4
+    )
+
+
+def test_mvn_batched_views_broadcast():
+    """Regression (PR 3 follow-up): loc-driven batch dims must surface in
+    covariance_matrix / precision_matrix even when scale_tril is unbatched,
+    and scale_tril must be an array (not the raw argument) after __init__."""
+    loc = jnp.zeros((5, 3))
+    L = np.tril(np.random.default_rng(2).uniform(0.5, 1.5, (3, 3)))
+    d = dist.MultivariateNormal(loc, scale_tril=jnp.asarray(L, jnp.float32))
+    assert d.batch_shape == (5,)
+    assert isinstance(d.scale_tril, jnp.ndarray)
+    assert d.covariance_matrix.shape == (5, 3, 3)
+    assert d.precision_matrix.shape == (5, 3, 3)
+    np.testing.assert_allclose(
+        np.asarray(d.precision_matrix[0] @ d.covariance_matrix[0]),
+        np.eye(3),
+        atol=1e-5,
+    )
+    # covariance built from a python-list covariance_matrix also coerces
+    d3 = dist.MultivariateNormal(jnp.zeros(2), covariance_matrix=[[2.0, 0.0], [0.0, 3.0]])
+    assert isinstance(d3.scale_tril, jnp.ndarray)

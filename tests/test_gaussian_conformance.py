@@ -1,0 +1,589 @@
+"""Gaussian-semiring VE conformance: closed-form Kalman gate (ISSUE 8).
+
+The acceptance gate for exact continuous marginalization: smoother marginals
+from `gaussian_marginals` must match a hand-rolled sequential Kalman filter +
+RTS smoother (and the dense joint posterior via scipy / plain numpy linear
+algebra) to rtol 1e-5 across T in {1, 2, 64, 512}, under both the
+``interpret`` (Pallas bodies) and ``reference`` (pure-jnp oracle) kernel
+backends; the O(log T) associative tree must agree with the sequential
+information-form fold to float-association tolerance; a switching LDS must
+match brute-force path enumeration x dense Gaussian elimination; refitting
+the same structure must hit the plan cache.
+
+Robustness rows ride along: |rho| -> 0.999 correlation, near-singular
+precisions at the documented conditioning contract (see kernels/gaussian.py),
+and the T=1 / T=2 degenerate chains that never reach a scan.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import distributions as dist
+from repro.core import handlers
+from repro.core import primitives as P
+from repro.infer import (
+    TraceEnum_ELBO,
+    clear_plan_cache,
+    config_gaussian,
+    gaussian_marginals,
+    plan_cache_stats,
+)
+from repro.infer.contract import (
+    GaussianFactor,
+    affine_gaussian_factor,
+    eliminate_gaussian_factors,
+    gaussian_marginal_params,
+    gaussian_marginalize,
+    gaussian_multiply,
+)
+
+KEY = jax.random.PRNGKey(0)
+GM = {"marginalize": "gaussian"}
+
+
+# ---------------------------------------------------------------------------
+# sequential references (numpy float64 — independent of everything under test)
+# ---------------------------------------------------------------------------
+
+
+def kalman_reference(ys, a, q, r, m0, p0):
+    """Textbook scalar Kalman filter + RTS smoother in float64.
+
+    x_0 ~ N(m0, p0); x_t = a x_{t-1} + N(0, q); y_t = x_t + N(0, r).
+    Returns (smoothed means, smoothed variances, log marginal likelihood)."""
+    T = len(ys)
+    fm = np.zeros(T)
+    fp = np.zeros(T)
+    logz = 0.0
+    pm, pp = m0, p0
+    for t in range(T):
+        if t > 0:
+            pm, pp = a * fm[t - 1], a * a * fp[t - 1] + q
+        s = pp + r
+        logz += -0.5 * ((ys[t] - pm) ** 2 / s + np.log(2 * np.pi * s))
+        k = pp / s
+        fm[t] = pm + k * (ys[t] - pm)
+        fp[t] = (1 - k) * pp
+    sm = fm.copy()
+    sp = fp.copy()
+    for t in range(T - 2, -1, -1):
+        pp = a * a * fp[t] + q
+        g = a * fp[t] / pp
+        sm[t] = fm[t] + g * (sm[t + 1] - a * fm[t])
+        sp[t] = fp[t] + g * g * (sp[t + 1] - pp)
+    return sm, sp, logz
+
+
+def dense_joint_posterior(ys, a, q, r, m0, p0):
+    """Same model, solved as one dense joint Gaussian in float64: build the
+    (T, T) prior-chain precision directly, condition on the observations.
+    Returns (posterior mean, posterior cov, log marginal likelihood)."""
+    T = len(ys)
+    J = np.zeros((T, T))
+    h = np.zeros(T)
+    J[0, 0] += 1.0 / p0
+    h[0] += m0 / p0
+    for t in range(1, T):
+        J[t, t] += 1.0 / q
+        J[t - 1, t - 1] += a * a / q
+        J[t, t - 1] -= a / q
+        J[t - 1, t] -= a / q
+    c = -0.5 * m0 * m0 / p0 - 0.5 * np.log(2 * np.pi * p0) - 0.5 * (T - 1) * np.log(
+        2 * np.pi * q
+    )
+    for t in range(T):
+        J[t, t] += 1.0 / r
+        h[t] += ys[t] / r
+        c += -0.5 * ys[t] ** 2 / r - 0.5 * np.log(2 * np.pi * r)
+    cov = np.linalg.inv(J)
+    mean = cov @ h
+    logz = c + 0.5 * h @ cov @ h + 0.5 * np.linalg.slogdet(2 * np.pi * cov)[1]
+    return mean, cov, logz
+
+
+def scalar_kalman_model(ys, a=0.9, q=0.2, r=0.3, m0=0.5, p0=1.0):
+    x = P.sample("x0", dist.Normal(m0, p0**0.5), infer=GM)
+    P.sample("y0", dist.Normal(x, r**0.5), obs=ys[0])
+    for t in range(1, len(ys)):
+        x = P.sample(f"x{t}", dist.Normal(a * x, q**0.5), infer=GM)
+        P.sample(f"y{t}", dist.Normal(x, r**0.5), obs=ys[t])
+
+
+def observations(T, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(0.0, 1.0, (T,)).astype(np.float32))
+
+
+@pytest.fixture(params=["interpret", "reference"])
+def backend(request, monkeypatch):
+    monkeypatch.setenv("REPRO_KERNEL_BACKEND", request.param)
+    return request.param
+
+
+# ---------------------------------------------------------------------------
+# tentpole gate: smoother marginals vs sequential reference
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("T", [1, 2, 64, 512])
+def test_kalman_smoother_vs_sequential_reference(T, backend):
+    ys = observations(T)
+    # querying all T sites makes the epsilon-Hessian T x T; probe a spread of
+    # sites instead so T=512 stays a unit test, not a benchmark
+    probe = sorted({0, 1, T // 2, T - 1} & set(range(T)))
+    sites = [f"x{t}" for t in probe]
+    out = gaussian_marginals(
+        lambda: scalar_kalman_model(ys), KEY, sites=sites
+    )
+    sm, sp, _ = kalman_reference(np.asarray(ys, np.float64), 0.9, 0.2, 0.3, 0.5, 1.0)
+    for t in probe:
+        m, v = out[f"x{t}"]
+        assert np.allclose(float(m), sm[t], rtol=1e-5, atol=1e-6), (t, float(m), sm[t])
+        assert np.allclose(float(v), sp[t], rtol=1e-5, atol=1e-6), (t, float(v), sp[t])
+
+
+@pytest.mark.parametrize("T", [1, 2, 5, 17])
+def test_kalman_marginals_vs_dense_joint(T):
+    """Full-cov cross-check: every smoother marginal against the dense joint
+    posterior (numpy float64 Schur-free solve)."""
+    ys = observations(T, seed=1)
+    out = gaussian_marginals(lambda: scalar_kalman_model(ys), KEY)
+    mean, cov, _ = dense_joint_posterior(
+        np.asarray(ys, np.float64), 0.9, 0.2, 0.3, 0.5, 1.0
+    )
+    for t in range(T):
+        m, v = out[f"x{t}"]
+        assert np.allclose(float(m), mean[t], rtol=1e-5, atol=1e-6)
+        assert np.allclose(float(v), cov[t, t], rtol=1e-5, atol=1e-6)
+
+
+def test_kalman_logz_vs_reference_all_dispatches(monkeypatch):
+    """The eliminated chain's log-normalizer is the exact marginal likelihood
+    under pairwise greedy, the default scan lowering, and the forced
+    associative-tree lowering (REPRO_ENUM_CHAIN_MIN=2)."""
+    T = 24
+    ys = observations(T, seed=2)
+    ref = kalman_reference(np.asarray(ys, np.float64), 0.9, 0.2, 0.3, 0.5, 1.0)[2]
+
+    def logz():
+        elbo = TraceEnum_ELBO(max_plate_nesting=0)
+        return -elbo.loss(KEY, {}, lambda: scalar_kalman_model(ys), lambda: None)
+
+    got = {}
+    monkeypatch.setenv("REPRO_ENUM_DISPATCH", "pairwise")
+    got["pairwise"] = float(logz())
+    monkeypatch.delenv("REPRO_ENUM_DISPATCH")
+    got["scan"] = float(logz())
+    monkeypatch.setenv("REPRO_ENUM_CHAIN_MIN", "2")
+    monkeypatch.setenv("REPRO_KERNEL_BACKEND", "interpret")
+    got["tree"] = float(logz())
+    for name, val in got.items():
+        assert np.allclose(val, ref, rtol=1e-5, atol=1e-5), (name, val, ref)
+
+
+def test_tree_matches_sequential_fold(monkeypatch, backend):
+    """O(log T) associative tree vs the sequential information-form fold:
+    same chain, different association order. Bit-identity is not guaranteed
+    in f32; the documented float-association tolerance is."""
+    T = 64
+    ys = observations(T, seed=3)
+
+    def logz():
+        elbo = TraceEnum_ELBO(max_plate_nesting=0)
+        return -elbo.loss(KEY, {}, lambda: scalar_kalman_model(ys), lambda: None)
+
+    seq = float(logz())
+    monkeypatch.setenv("REPRO_ENUM_CHAIN_MIN", "2")
+    tree = float(logz())
+    assert np.allclose(seq, tree, rtol=1e-5, atol=1e-4)
+
+
+def test_mvn_chain_vs_dense_joint():
+    """d=3 MVN chain: smoother mean vectors and full covariance blocks vs a
+    dense joint posterior assembled from the same factors via the pairwise
+    greedy path, cross-checked against scipy's MVN logpdf."""
+    ss = pytest.importorskip("scipy.stats", reason="dense cross-check needs scipy")
+    T, d = 5, 3
+    rng = np.random.default_rng(4)
+    A = jnp.asarray(0.5 * rng.normal(size=(d, d)).astype(np.float32))
+    Lq = jnp.asarray(
+        np.linalg.cholesky(0.2 * np.eye(d) + 0.05).astype(np.float32)
+    )
+    Lr = jnp.asarray((0.4 * np.eye(d)).astype(np.float32))
+    ys = jnp.asarray(rng.normal(size=(T, d)).astype(np.float32))
+
+    def model():
+        x = P.sample(
+            "x0",
+            dist.MultivariateNormal(jnp.zeros(d), scale_tril=jnp.eye(d)),
+            infer=GM,
+        )
+        P.sample("y0", dist.MultivariateNormal(x, scale_tril=Lr), obs=ys[0])
+        for t in range(1, T):
+            x = P.sample(
+                f"x{t}",
+                dist.MultivariateNormal(A @ x, scale_tril=Lq),
+                infer=GM,
+            )
+            P.sample(f"y{t}", dist.MultivariateNormal(x, scale_tril=Lr), obs=ys[t])
+
+    out = gaussian_marginals(model, KEY)
+
+    # dense float64 joint over the stacked (T*d,) state
+    An, Lqn, Lrn, yn = (np.asarray(z, np.float64) for z in (A, Lq, Lr, ys))
+    Qi = np.linalg.inv(Lqn @ Lqn.T)
+    Ri = np.linalg.inv(Lrn @ Lrn.T)
+    D = T * d
+    J = np.zeros((D, D))
+    h = np.zeros(D)
+    J[:d, :d] += np.eye(d)
+    for t in range(1, T):
+        s, p = slice(t * d, (t + 1) * d), slice((t - 1) * d, t * d)
+        J[s, s] += Qi
+        J[p, p] += An.T @ Qi @ An
+        J[s, p] -= Qi @ An
+        J[p, s] -= An.T @ Qi
+    for t in range(T):
+        s = slice(t * d, (t + 1) * d)
+        J[s, s] += Ri
+        h[s] += Ri @ yn[t]
+    cov = np.linalg.inv(J)
+    mean = cov @ h
+    for t in range(T):
+        m, C = out[f"x{t}"]
+        s = slice(t * d, (t + 1) * d)
+        assert np.allclose(np.asarray(m), mean[s], rtol=1e-4, atol=3e-5)
+        assert np.allclose(np.asarray(C), cov[s, s], rtol=1e-4, atol=3e-5)
+
+    # scipy cross-check of the same dense joint's evidence at y
+    prior_cov = np.linalg.inv(J - np.kron(np.eye(T), Ri))
+    obs_cov = prior_cov + np.kron(np.eye(T), Lrn @ Lrn.T)
+    ref_logz = ss.multivariate_normal(np.zeros(D), obs_cov).logpdf(yn.reshape(-1))
+    elbo = TraceEnum_ELBO(max_plate_nesting=0)
+    got = -float(elbo.loss(KEY, {}, model, lambda: None))
+    assert np.allclose(got, ref_logz, rtol=1e-5, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# mixed contraction: switching LDS vs brute force
+# ---------------------------------------------------------------------------
+
+
+def test_switching_lds_vs_brute_force():
+    """Discrete enumeration x Gaussian elimination in one contraction: a
+    K=2, T=4 switching LDS's evidence and mixture marginals vs explicit
+    enumeration of all K^T regime paths, each solved as a dense Gaussian."""
+    T, K = 4, 2
+    coeff = jnp.asarray([0.9, -0.6])
+    probs = jnp.asarray([0.7, 0.3])
+    q, r, p0 = 0.2, 0.3, 1.0
+    ys = observations(T, seed=5)
+
+    def model():
+        x = P.sample("x0", dist.Normal(0.0, p0**0.5), infer=GM)
+        P.sample("y0", dist.Normal(x, r**0.5), obs=ys[0])
+        for t in range(1, T):
+            s = P.sample(
+                f"s{t}", dist.Categorical(probs), infer={"enumerate": "parallel"}
+            )
+            x = P.sample(f"x{t}", dist.Normal(coeff[s] * x, q**0.5), infer=GM)
+            P.sample(f"y{t}", dist.Normal(x, r**0.5), obs=ys[t])
+
+    elbo = TraceEnum_ELBO(max_plate_nesting=0)
+    got_logz = -float(elbo.loss(KEY, {}, model, lambda: None))
+    got_marg = gaussian_marginals(model, KEY)
+
+    # brute force over the K^(T-1) regime paths, float64
+    yn = np.asarray(ys, np.float64)
+    cn = np.asarray(coeff, np.float64)
+    pn = np.asarray(probs, np.float64)
+    path_logz, path_mean, path_var = [], [], []
+    import itertools
+
+    for path in itertools.product(range(K), repeat=T - 1):
+        J = np.zeros((T, T))
+        h = np.zeros(T)
+        J[0, 0] += 1.0 / p0
+        c = -0.5 * np.log(2 * np.pi * p0)
+        for t in range(1, T):
+            a = cn[path[t - 1]]
+            J[t, t] += 1.0 / q
+            J[t - 1, t - 1] += a * a / q
+            J[t, t - 1] -= a / q
+            J[t - 1, t] -= a / q
+            c += -0.5 * np.log(2 * np.pi * q)
+        for t in range(T):
+            J[t, t] += 1.0 / r
+            h[t] += yn[t] / r
+            c += -0.5 * yn[t] ** 2 / r - 0.5 * np.log(2 * np.pi * r)
+        cov = np.linalg.inv(J)
+        mean = cov @ h
+        lz = c + 0.5 * h @ mean + 0.5 * np.linalg.slogdet(2 * np.pi * cov)[1]
+        path_logz.append(lz + sum(np.log(pn[k]) for k in path))
+        path_mean.append(mean)
+        path_var.append(np.diagonal(cov))
+    path_logz = np.asarray(path_logz)
+    ref_logz = np.log(np.sum(np.exp(path_logz - path_logz.max()))) + path_logz.max()
+    w = np.exp(path_logz - ref_logz)
+    mix_mean = np.einsum("p,pt->t", w, np.asarray(path_mean))
+    mix_var = np.einsum(
+        "p,pt->t", w, np.asarray(path_var) + np.asarray(path_mean) ** 2
+    ) - mix_mean**2
+
+    assert np.allclose(got_logz, ref_logz, rtol=1e-5, atol=1e-5)
+    for t in range(T):
+        m, v = got_marg[f"x{t}"]
+        assert np.allclose(float(m), mix_mean[t], rtol=1e-4, atol=1e-5)
+        assert np.allclose(float(v), mix_var[t], rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# plan cache, gradients, surface checks
+# ---------------------------------------------------------------------------
+
+
+def test_plan_cache_hit_on_refit():
+    """Same chain structure, new observation values: the second elimination
+    must hit the plan cache, and gaussian/log-semiring fingerprints must not
+    collide (the log contraction in the same loss doesn't evict the plan)."""
+    clear_plan_cache()
+    T = 8
+
+    def logz(ys):
+        elbo = TraceEnum_ELBO(max_plate_nesting=0)
+        return -elbo.loss(KEY, {}, lambda: scalar_kalman_model(ys), lambda: None)
+
+    logz(observations(T, seed=6))
+    before = plan_cache_stats()
+    logz(observations(T, seed=7))
+    after = plan_cache_stats()
+    assert after["hits"] > before["hits"]
+    assert after["misses"] == before["misses"]
+
+
+def test_elbo_grad_matches_finite_differences():
+    """jit(grad(loss)) through the Gaussian elimination wrt a guide latent
+    feeding the marginalized chain."""
+    T = 6
+    ys = observations(T, seed=8)
+
+    def model(params):
+        z = P.sample("z", dist.Normal(params["mu"], 1.0))
+        x = P.sample("x0", dist.Normal(z, 1.0), infer=GM)
+        P.sample("y0", dist.Normal(x, 0.5), obs=ys[0])
+        for t in range(1, T):
+            x = P.sample(f"x{t}", dist.Normal(0.8 * x, 0.5), infer=GM)
+            P.sample(f"y{t}", dist.Normal(x, 0.5), obs=ys[t])
+
+    def guide(params):
+        P.sample("z", dist.Normal(params["mu"], 0.3))
+
+    elbo = TraceEnum_ELBO(max_plate_nesting=0)
+    loss = lambda p: elbo.loss(KEY, {}, model, guide, p)
+    g = jax.jit(jax.grad(lambda mu: loss({"mu": mu})))(0.4)
+    eps = 1e-2
+    fd = (loss({"mu": 0.4 + eps}) - loss({"mu": 0.4 - eps})) / (2 * eps)
+    assert np.allclose(float(g), float(fd), rtol=2e-2, atol=2e-3)
+
+
+def test_config_gaussian_handler():
+    """config_gaussian annotates every Gaussian latent (or just the named
+    sites) without touching observed or discrete sites."""
+    ys = observations(3, seed=9)
+
+    def model():
+        x = P.sample("x0", dist.Normal(0.0, 1.0))
+        P.sample("y0", dist.Normal(x, 0.5), obs=ys[0])
+        P.sample("k", dist.Categorical(jnp.asarray([0.5, 0.5])))
+
+    tr = handlers.trace(handlers.seed(config_gaussian(model), KEY)).get_trace()
+    assert tr.nodes["x0"]["infer"].get("marginalize") == "gaussian"
+    assert "marginalize" not in tr.nodes["y0"]["infer"]
+    assert "marginalize" not in tr.nodes["k"]["infer"]
+
+    out = gaussian_marginals(config_gaussian(lambda: scalar_kalman_model(ys)), KEY)
+    ref = gaussian_marginals(lambda: scalar_kalman_model(ys), KEY)
+    for n, (m, v) in out.items():
+        assert np.allclose(float(m), float(ref[n][0]))
+        assert np.allclose(float(v), float(ref[n][1]))
+
+
+def test_non_gaussian_site_annotation_rejected():
+    def model():
+        P.sample("k", dist.Categorical(jnp.asarray([0.5, 0.5])), infer=GM)
+
+    with pytest.raises((ValueError, NotImplementedError)):
+        gaussian_marginals(model, KEY)
+
+
+def test_unannotated_model_rejected():
+    with pytest.raises(ValueError, match="config_gaussian"):
+        gaussian_marginals(lambda: P.sample("x", dist.Normal(0.0, 1.0)), KEY)
+
+
+# ---------------------------------------------------------------------------
+# numerical robustness rows (documented conditioning contract)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("rho", [0.9, 0.99, 0.999])
+def test_high_correlation_chain(rho):
+    """|rho| -> 0.999: transition variance q = 1 - rho^2 shrinks to 2e-3 and
+    the chain precision's condition number climbs to ~2e3 — inside the
+    kappa * 1e-7 f32 contract from kernels/gaussian.py, so rtol 1e-5 must
+    still hold against the float64 reference."""
+    T = 16
+    q = 1.0 - rho * rho
+    ys = observations(T, seed=10)
+    out = gaussian_marginals(
+        lambda: scalar_kalman_model(ys, a=rho, q=q, r=0.3, m0=0.0, p0=1.0), KEY
+    )
+    sm, sp, _ = kalman_reference(np.asarray(ys, np.float64), rho, q, 0.3, 0.0, 1.0)
+    for t in range(T):
+        m, v = out[f"x{t}"]
+        assert np.allclose(float(m), sm[t], rtol=1e-5, atol=1e-5)
+        assert np.allclose(float(v), sp[t], rtol=1e-5, atol=1e-5)
+
+
+def test_near_singular_precision_marginalize():
+    """Schur elimination of a nearly-deterministic block (precision 1e6 on
+    the dropped variable) stays finite and matches float64."""
+    J = jnp.asarray([[1e6, 999.0], [999.0, 2.0]], jnp.float32)
+    h = jnp.asarray([3.0, 1.0], jnp.float32)
+    f = GaussianFactor(("a", "b"), (1, 1), J, h, jnp.zeros(()))
+    g = gaussian_marginalize(f, ["a"])
+    Jn = np.asarray(J, np.float64)
+    ref_J = Jn[1, 1] - Jn[0, 1] ** 2 / Jn[0, 0]
+    ref_h = 1.0 - Jn[0, 1] * 3.0 / Jn[0, 0]
+    assert np.isfinite(float(g.log_norm))
+    assert np.allclose(float(g.precision[0, 0]), ref_J, rtol=1e-5)
+    assert np.allclose(float(g.info_vec[0]), ref_h, rtol=1e-4)
+
+
+@pytest.mark.parametrize("T", [1, 2])
+def test_degenerate_chain_lengths(T, backend):
+    """T=1 (no edges at all) and T=2 (a single edge — below every tree/scan
+    threshold) exercise the non-chain code paths end to end."""
+    ys = observations(T, seed=11)
+    out = gaussian_marginals(lambda: scalar_kalman_model(ys), KEY)
+    sm, sp, ref_logz = kalman_reference(
+        np.asarray(ys, np.float64), 0.9, 0.2, 0.3, 0.5, 1.0
+    )
+    for t in range(T):
+        m, v = out[f"x{t}"]
+        assert np.allclose(float(m), sm[t], rtol=1e-5, atol=1e-6)
+        assert np.allclose(float(v), sp[t], rtol=1e-5, atol=1e-6)
+    elbo = TraceEnum_ELBO(max_plate_nesting=0)
+    got = -float(elbo.loss(KEY, {}, lambda: scalar_kalman_model(ys), lambda: None))
+    assert np.allclose(got, ref_logz, rtol=1e-5, atol=1e-5)
+
+
+def test_affine_factor_is_normalized_density():
+    """A single lowered conditional must integrate to 1: eliminating its own
+    variable from N(x; b, L L^T) leaves log_norm == 0."""
+    L = jnp.asarray([[0.7, 0.0], [0.2, 1.1]], jnp.float32)
+    f = affine_gaussian_factor(
+        ("x",), (2,), {}, -jnp.asarray([0.3, -0.5]), L, "x"
+    )
+    g = gaussian_marginalize(f, ["x"])
+    assert g.vars == ()
+    assert np.allclose(float(g.log_norm), 0.0, atol=1e-6)
+    mean, cov = gaussian_marginal_params(f)
+    assert np.allclose(np.asarray(mean), [0.3, -0.5], atol=1e-6)
+    assert np.allclose(np.asarray(cov), np.asarray(L @ L.T), atol=1e-6)
+
+
+def test_eliminate_factors_enum_lead_batch():
+    """Enum-lead batched elimination (K parallel chains in one shot) is
+    bit-comparable to K separate eliminations."""
+    K, T = 3, 4
+    rng = np.random.default_rng(12)
+    a = jnp.asarray(rng.uniform(0.3, 0.9, (K,)).astype(np.float32))
+
+    def chain_factors(ak):
+        fs = [
+            affine_gaussian_factor(
+                ("x0",), (1,), {}, jnp.zeros((1,)), jnp.ones((1, 1)), "x0"
+            )
+        ]
+        for t in range(1, T):
+            fs.append(
+                affine_gaussian_factor(
+                    (f"x{t - 1}", f"x{t}"),
+                    (1, 1),
+                    {f"x{t - 1}": ak.reshape(ak.shape + (1, 1))},
+                    jnp.zeros(ak.shape + (1,)),
+                    0.5 * jnp.ones((1, 1)),
+                    f"x{t}",
+                )
+            )
+        # observe each x_t at 1.0 through unit noise: residual = value - x_t
+        for t in range(T):
+            fs.append(
+                affine_gaussian_factor(
+                    (f"x{t}",),
+                    (1,),
+                    {f"x{t}": jnp.ones((1, 1))},
+                    jnp.ones((1,)),
+                    jnp.ones((1, 1)),
+                    None,
+                )
+            )
+        return fs
+
+    order = [f"x{t}" for t in range(T)]
+    batched = sum(eliminate_gaussian_factors(chain_factors(a), order))
+    singles = [
+        float(sum(eliminate_gaussian_factors(chain_factors(a[k]), order)))
+        for k in range(K)
+    ]
+    assert np.allclose(np.asarray(batched), np.asarray(singles), rtol=1e-6, atol=1e-6)
+
+
+def test_multiply_then_marginalize_matches_dense():
+    """gaussian_multiply + gaussian_marginalize against plain dense algebra
+    on a 3-variable star with mixed widths."""
+
+    def rand_factor(vars, widths, seed):
+        r = np.random.default_rng(seed)
+        D = sum(widths)
+        A = r.normal(size=(D, D))
+        J = A @ A.T + 0.5 * np.eye(D)
+        h = r.normal(size=(D,))
+        return GaussianFactor(
+            vars,
+            widths,
+            jnp.asarray(J, jnp.float32),
+            jnp.asarray(h, jnp.float32),
+            jnp.asarray(r.normal(), jnp.float32),
+        )
+
+    f = rand_factor(("a", "b"), (2, 1), 1)
+    g = rand_factor(("b", "c"), (1, 3), 2)
+    prod = gaussian_multiply(f, g)
+    assert prod.vars == ("a", "b", "c")
+    marg = gaussian_marginalize(prod, ["b"])
+
+    # dense reference over layout (a, b, c)
+    J = np.zeros((6, 6))
+    h = np.zeros(6)
+    J[:3, :3] += np.asarray(f.precision, np.float64)
+    h[:3] += np.asarray(f.info_vec, np.float64)
+    J[2:, 2:] += np.asarray(g.precision, np.float64)
+    h[2:] += np.asarray(g.info_vec, np.float64)
+    keep = [0, 1, 3, 4, 5]
+    Jbb = J[2, 2]
+    ref_J = J[np.ix_(keep, keep)] - np.outer(J[keep, 2], J[2, keep]) / Jbb
+    ref_h = h[keep] - J[keep, 2] * h[2] / Jbb
+    ref_c = (
+        float(f.log_norm)
+        + float(g.log_norm)
+        + 0.5 * h[2] ** 2 / Jbb
+        - 0.5 * np.log(Jbb)
+        + 0.5 * np.log(2 * np.pi)
+    )
+    assert np.allclose(np.asarray(marg.precision), ref_J, rtol=1e-5, atol=1e-5)
+    assert np.allclose(np.asarray(marg.info_vec), ref_h, rtol=1e-5, atol=1e-5)
+    assert np.allclose(float(marg.log_norm), ref_c, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,137 @@
+"""Property tests for the Gaussian semiring algebra (ISSUE 8 satellite).
+
+Semiring laws that the planner is allowed to rely on when it reorders a
+contraction: ⊗ associativity/commutativity, marginalization-order
+invariance, neutrality of the identity factor, and PSD preservation under
+Schur elimination. Properties are checked pointwise — factors are compared
+by evaluating log F(x) = -1/2 x^T J x + h^T x + c at random points, which is
+layout-permutation invariant (⊗ is free to order the union layout however
+it likes).
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (pip install -r requirements.txt)"
+)
+from hypothesis import given, settings, strategies as st
+
+from repro.infer.contract import (
+    GaussianFactor,
+    gaussian_marginalize,
+    gaussian_multiply,
+)
+
+VARS = ("a", "b", "c")
+WIDTH = {"a": 1, "b": 2, "c": 1}
+
+
+def make_factor(seed, vars):
+    """Well-conditioned random info-form factor over the given variables:
+    J = A A^T + I/2 keeps eigenvalues in roughly [0.5, ~10]."""
+    rng = np.random.default_rng(seed)
+    widths = tuple(WIDTH[v] for v in vars)
+    D = sum(widths)
+    A = rng.normal(size=(D, D))
+    J = A @ A.T + 0.5 * np.eye(D)
+    return GaussianFactor(
+        tuple(vars),
+        widths,
+        jnp.asarray(J, jnp.float32),
+        jnp.asarray(rng.normal(size=(D,)), jnp.float32),
+        jnp.asarray(rng.normal(), jnp.float32),
+    )
+
+
+def logdens(f, points):
+    """Evaluate log F at a dict {var: value} — canonical, layout-free."""
+    x = jnp.concatenate([jnp.asarray(points[v], jnp.float32) for v in f.vars])
+    J, h = f.precision, f.info_vec
+    return float(-0.5 * x @ J @ x + h @ x + f.log_norm)
+
+
+def rand_points(seed):
+    rng = np.random.default_rng(seed)
+    return {v: rng.normal(size=(WIDTH[v],)) for v in VARS}
+
+
+subsets = st.sampled_from(
+    [("a",), ("b",), ("c",), ("a", "b"), ("b", "c"), ("a", "c"), ("a", "b", "c")]
+)
+seeds = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seeds, subsets, subsets, subsets)
+def test_multiply_associative(seed, va, vb, vc):
+    f, g, h = make_factor(seed, va), make_factor(seed + 1, vb), make_factor(seed + 2, vc)
+    left = gaussian_multiply(gaussian_multiply(f, g), h)
+    right = gaussian_multiply(f, gaussian_multiply(g, h))
+    assert set(left.vars) == set(right.vars)
+    for p in range(3):
+        pts = rand_points(seed + 10 + p)
+        assert np.allclose(logdens(left, pts), logdens(right, pts), rtol=1e-5, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seeds, subsets, subsets)
+def test_multiply_commutative(seed, va, vb):
+    f, g = make_factor(seed, va), make_factor(seed + 1, vb)
+    fg, gf = gaussian_multiply(f, g), gaussian_multiply(g, f)
+    assert set(fg.vars) == set(gf.vars)
+    for p in range(3):
+        pts = rand_points(seed + 10 + p)
+        assert np.allclose(logdens(fg, pts), logdens(gf, pts), rtol=1e-5, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seeds)
+def test_marginalization_order_invariant(seed):
+    """Integrating a and b out one at a time — in either order — or jointly
+    gives the same factor over c."""
+    f = make_factor(seed, VARS)
+    ab = gaussian_marginalize(gaussian_marginalize(f, ["a"]), ["b"])
+    ba = gaussian_marginalize(gaussian_marginalize(f, ["b"]), ["a"])
+    joint = gaussian_marginalize(f, ["a", "b"])
+    for g in (ab, ba, joint):
+        assert g.vars == ("c",)
+    for p in range(3):
+        pts = rand_points(seed + 10 + p)
+        vals = [logdens(g, pts) for g in (ab, ba, joint)]
+        assert np.allclose(vals[0], vals[1], rtol=1e-5, atol=1e-4)
+        assert np.allclose(vals[0], vals[2], rtol=1e-5, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seeds, subsets, st.sampled_from(VARS))
+def test_identity_factor_neutral(seed, vs, iv):
+    """The zero potential (J=0, h=0, c=0) is the ⊗ identity — even when it
+    introduces a variable the other factor doesn't mention (the new variable
+    enters flat, and eliminating it later contributes exactly its Lebesgue
+    normalizer, never changing the others' marginals)."""
+    f = make_factor(seed, vs)
+    w = WIDTH[iv]
+    e = GaussianFactor(
+        (iv,), (w,), jnp.zeros((w, w)), jnp.zeros((w,)), jnp.zeros(())
+    )
+    fe = gaussian_multiply(f, e)
+    for p in range(3):
+        pts = rand_points(seed + 10 + p)
+        assert np.allclose(logdens(fe, pts), logdens(f, pts), rtol=1e-6, atol=1e-5)
+    if iv not in f.vars:
+        assert fe.vars == f.vars + (iv,)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seeds, st.sampled_from([("a",), ("b",), ("a", "b")]))
+def test_schur_preserves_psd(seed, drop):
+    """The Schur complement of a PSD precision is PSD: eliminating variables
+    can never manufacture a negative direction."""
+    f = make_factor(seed, VARS)
+    g = gaussian_marginalize(f, list(drop))
+    eig = np.linalg.eigvalsh(np.asarray(g.precision, np.float64))
+    assert np.all(eig > -1e-5), eig
+    assert np.all(np.isfinite(np.asarray(g.info_vec)))
+    assert np.isfinite(float(g.log_norm))

@@ -305,6 +305,8 @@ def test_backend_support_matrix_complete():
         "semiring_matmul",
         "hmm_scan",
         "leapfrog",
+        "gaussian_combine",
+        "gaussian_scan",
     }
     for row in m.values():
         assert set(row) == set(ops.BACKENDS)
