@@ -10,7 +10,7 @@ commits the baseline). The two JSON trees are walked in parallel; numeric
 leaves whose key names a gated metric are compared:
 
 * lower-is-better steady-state (``steady_ms``, ``step_ms``, ``p50_ms``,
-  ``p99_ms``, ``bucketed_ms_per_req``): fail when
+  ``p99_ms``, ``bucketed_ms_per_req``, ``swap_gap_ms``): fail when
   ``fresh > base * (1 + tol) + abs_slack``
 * higher-is-better (``requests_per_sec``, ``rows_per_sec``,
   ``speedup_steady``, ``draws_per_sec``, ``ess_per_sec``): fail when
@@ -20,6 +20,9 @@ leaves whose key names a gated metric are compared:
   a separate, looser tolerance, because compile time is noisier than
   steady-state but a silent 2x compile regression is exactly what the
   contraction planner exists to prevent.
+* lower-is-better [0,1] rates (``shed_rate``): fail when
+  ``fresh > base + REPRO_BENCH_ABS_RATE`` — purely absolute slack, since the
+  healthy baseline is 0.0 shed and a relative tolerance on zero is vacuous.
 
 The naive-baseline numbers are deliberately NOT gated (they measure the
 rejected path, not the engine). List entries are matched positionally, but
@@ -35,6 +38,8 @@ Knobs (env):
   REPRO_BENCH_ABS_MS          absolute slack added to lower-is-better *_ms
                               gates, default 0.5 — keeps sub-millisecond
                               metrics from failing on scheduler noise.
+  REPRO_BENCH_ABS_RATE        absolute slack on [0,1] rate gates
+                              (``shed_rate``), default 0.05.
   REPRO_BENCH_COLD_TOLERANCE  relative tolerance on cold-compile metrics,
                               default 1.0 (= fail >2x regression).
   REPRO_BENCH_COLD_ABS_S      absolute slack (seconds) on cold-compile
@@ -49,11 +54,27 @@ from pathlib import Path
 
 REPO = Path(__file__).resolve().parent.parent
 
-LOWER_BETTER = {"steady_ms", "step_ms", "p50_ms", "p99_ms", "bucketed_ms_per_req"}
+
+def _knob_float(name: str, fallback: float) -> float:
+    """Tolerance knobs come from `repro.settings` so the defaults live in one
+    registry, but this script must stay runnable standalone (CI calls it
+    without PYTHONPATH=src), so fall back to the local default if the package
+    isn't importable."""
+    try:
+        from repro import settings
+        return settings.get_float(name)
+    except ImportError:
+        return float(os.environ.get(name, str(fallback)))
+
+LOWER_BETTER = {"steady_ms", "step_ms", "p50_ms", "p99_ms",
+                "bucketed_ms_per_req", "swap_gap_ms"}
 HIGHER_BETTER = {"requests_per_sec", "rows_per_sec", "speedup_steady",
                  "draws_per_sec", "ess_per_sec"}
 COLD_LOWER_BETTER = {"cold_s", "cold_compile_s", "viterbi_s"}
-IDENTITY_KEYS = ("T", "K", "dispatch", "bench", "chains", "mode")
+# dimensionless [0,1] rates gated with a purely absolute slack — a relative
+# tolerance is meaningless when the baseline is 0.0 (zero requests shed)
+RATE_LOWER_BETTER = {"shed_rate"}
+IDENTITY_KEYS = ("T", "K", "dispatch", "bench", "chains", "mode", "scenario")
 
 
 def committed_baseline(name: str):
@@ -80,11 +101,13 @@ def walk(base, fresh, path, rows):
             walk(b, f, f"{path}[{i}]", rows)
     elif isinstance(base, (int, float)) and isinstance(fresh, (int, float)):
         key = path.rsplit(".", 1)[-1].split("[")[0]
-        if key in LOWER_BETTER or key in HIGHER_BETTER or key in COLD_LOWER_BETTER:
+        if (key in LOWER_BETTER or key in HIGHER_BETTER
+                or key in COLD_LOWER_BETTER or key in RATE_LOWER_BETTER):
             rows.append((path, key, float(base), float(fresh)))
 
 
-def gate(name: str, tol: float, abs_ms: float, cold_tol: float, cold_abs_s: float) -> int:
+def gate(name: str, tol: float, abs_ms: float, cold_tol: float,
+         cold_abs_s: float, abs_rate: float) -> int:
     fresh_path = REPO / name
     if not fresh_path.exists():
         print(f"FAIL {name}: fresh file missing (did the bench stage run?)")
@@ -107,6 +130,9 @@ def gate(name: str, tol: float, abs_ms: float, cold_tol: float, cold_abs_s: floa
         elif key in COLD_LOWER_BETTER:
             limit = b * (1 + cold_tol) + cold_abs_s
             bad = f > limit
+        elif key in RATE_LOWER_BETTER:
+            limit = b + abs_rate
+            bad = f > limit
         else:
             limit = b / (1 + tol)
             bad = f < limit
@@ -123,11 +149,14 @@ def main(argv=None) -> int:
     names = (argv if argv is not None else sys.argv[1:]) or [
         "BENCH_enum.json", "BENCH_serve.json", "BENCH_mcmc.json"
     ]
-    tol = float(os.environ.get("REPRO_BENCH_TOLERANCE", "0.25"))
-    abs_ms = float(os.environ.get("REPRO_BENCH_ABS_MS", "0.5"))
-    cold_tol = float(os.environ.get("REPRO_BENCH_COLD_TOLERANCE", "1.0"))
-    cold_abs_s = float(os.environ.get("REPRO_BENCH_COLD_ABS_S", "2.0"))
-    failures = sum(gate(n, tol, abs_ms, cold_tol, cold_abs_s) for n in names)
+    tol = _knob_float("REPRO_BENCH_TOLERANCE", 0.25)
+    abs_ms = _knob_float("REPRO_BENCH_ABS_MS", 0.5)
+    cold_tol = _knob_float("REPRO_BENCH_COLD_TOLERANCE", 1.0)
+    cold_abs_s = _knob_float("REPRO_BENCH_COLD_ABS_S", 2.0)
+    abs_rate = _knob_float("REPRO_BENCH_ABS_RATE", 0.05)
+    failures = sum(
+        gate(n, tol, abs_ms, cold_tol, cold_abs_s, abs_rate) for n in names
+    )
     if failures:
         print(f"\n{failures} gated metric(s) regressed beyond tolerance "
               f"(steady {tol:.0%} +{abs_ms}ms; cold {cold_tol:.0%} "

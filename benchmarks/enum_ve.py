@@ -133,7 +133,7 @@ def model_stage(hmm_T: int, hmm_K: int, gmm_N: int, steps: int, log=print):
     from repro import optim
     from repro.core import handlers
     from repro.core import primitives as P
-    from repro.infer import SVI, TraceEnum_ELBO, config_enumerate, infer_discrete
+    from repro.infer import SVI, TraceEnum_ELBO, config, infer_discrete
 
     out = {}
 
@@ -179,7 +179,7 @@ def model_stage(hmm_T: int, hmm_K: int, gmm_N: int, steps: int, log=print):
     locs_h = jnp.linspace(-2.0, 2.0, hmm_K)
     obs_seq = jax.random.normal(jax.random.PRNGKey(3), (hmm_T,))
 
-    @config_enumerate
+    @config(enumerate=True)
     def hmm(obs_seq):
         scale = P.param("scale", jnp.asarray(1.0))
         z = P.sample("z_0", dist.Categorical(init_p))

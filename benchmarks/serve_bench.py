@@ -16,7 +16,16 @@ Three stages:
    `serve.MicroBatcher`; reports requests/sec, p50/p99 latency, mean
    coalesced batch size vs `max_batch`.
 
-3. Sharding parity — serving through a 1-device mesh
+3. Sustained load — concurrent clients with a per-request deadline;
+   overload must be *shed at admission* (LoadShedError -> 429 at the HTTP
+   front end), never dropped. Reports req/s, p50/p99, shed_rate.
+
+4. Refresh under traffic — the streaming-service hard property: hot-swap
+   the servable's params while clients hammer it. Reports ``swap_gap_ms``
+   (refresh() to the first response serving the new posterior) and asserts
+   zero dropped requests and zero recompiles across swaps.
+
+5. Sharding parity — serving through a 1-device mesh
    (`distributed.sharding.default_mesh`) must be bit-identical to
    unsharded serving.
 
@@ -182,6 +191,187 @@ def bench_batcher(model, guide, params, *, num_samples, max_batch,
     return summary
 
 
+def bench_sustained_load(model, guide, params, *, num_samples, max_batch,
+                         n_requests, n_clients, deadline_ms, log=print):
+    """Streaming-service scenario: concurrent clients with a per-request
+    deadline. Overload is admission-controlled (shed with `LoadShedError`),
+    never dropped: every request either completes or is shed — a queue
+    that silently eats requests fails the bench."""
+    import threading
+
+    from repro.serve import LoadShedError, MicroBatcher, ServableModel
+
+    servable = ServableModel.from_svi(
+        "bench-load", model, guide, params,
+        num_samples=num_samples, max_batch=max_batch,
+    )
+    for b in servable.engine.buckets:
+        servable.predict(jax.random.PRNGKey(0), jnp.ones((b, DIM)))
+
+    sizes = request_sizes(n_requests, max(1, max_batch // 4), seed=13)
+    counts = {"ok": 0, "shed": 0, "dropped": 0}
+    lock = threading.Lock()
+    with MicroBatcher(servable.engine, max_wait_ms=2.0) as mb:
+        mb.stats = type(mb.stats)(window=mb.stats.window)
+        per_client = (len(sizes) + n_clients - 1) // n_clients
+
+        def client(cid):
+            for i, n in enumerate(sizes[cid * per_client : (cid + 1) * per_client]):
+                x = jax.random.normal(
+                    jax.random.fold_in(jax.random.PRNGKey(14), cid * 10_000 + i),
+                    (n, DIM),
+                )
+                try:
+                    mb.predict(x, timeout=120, deadline_ms=deadline_ms)
+                    outcome = "ok"
+                except LoadShedError:
+                    outcome = "shed"
+                except Exception:  # noqa: BLE001 — the contract: never happens
+                    outcome = "dropped"
+                with lock:
+                    counts[outcome] += 1
+
+        t0 = time.perf_counter()
+        threads = [threading.Thread(target=client, args=(c,)) for c in range(n_clients)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        wall_s = time.perf_counter() - t0
+        summary = mb.stats.summary()
+    out = {
+        "scenario": "sustained_load",
+        "clients": n_clients,
+        "deadline_ms": deadline_ms,
+        "wall_s": round(wall_s, 3),
+        "ok": counts["ok"],
+        "shed": counts["shed"],
+        "dropped_requests": counts["dropped"],
+        "requests_per_sec": summary["requests_per_sec"],
+        "p50_ms": summary["p50_ms"],
+        "p99_ms": summary["p99_ms"],
+        "shed_rate": round(counts["shed"] / max(len(sizes), 1), 4),
+    }
+    log(f"  {counts['ok']} ok / {counts['shed']} shed / "
+        f"{counts['dropped']} dropped  "
+        f"p50 {out['p50_ms']}ms p99 {out['p99_ms']}ms "
+        f"shed_rate {out['shed_rate']}")
+    assert counts["dropped"] == 0, (
+        f"sustained load dropped {counts['dropped']} requests — overload must "
+        "shed at admission, never drop"
+    )
+    assert counts["ok"] + counts["shed"] == len(sizes)
+    return out
+
+
+def bench_refresh_under_traffic(*, max_batch, n_swaps, n_clients, log=print):
+    """Streaming-service scenario: hot-swap the servable's params while
+    concurrent clients hammer it. Measures ``swap_gap_ms`` — refresh() call
+    to the first served response reflecting the new params — and asserts
+    the hard contract: zero dropped requests, zero recompiles."""
+    import threading
+
+    from repro import distributions as dist, optim
+    from repro.core import primitives as P
+    from repro.infer import SVI, AutoDelta, Trace_ELBO
+    from repro.serve import MicroBatcher, ServableModel
+
+    # AutoDelta => deterministic serving (mu == x @ w_loc + b_loc), so "the
+    # new params are live" is an exact check, not a statistical one
+    def model(batch):
+        x, y = batch["x"], batch.get("y")
+        w = P.sample("w", dist.Normal(jnp.zeros(DIM), 1.0).to_event(1))
+        b = P.sample("b", dist.Normal(0.0, 1.0))
+        with P.plate("B", x.shape[0]):
+            mu = P.deterministic("mu", x @ w + b)
+            P.sample("y", dist.Normal(mu, 0.1), obs=y)
+
+    key = jax.random.PRNGKey(0)
+    x_train = jax.random.normal(key, (64, DIM))
+    y_train = x_train @ jnp.arange(1.0, DIM + 1.0) + 0.5
+    guide = AutoDelta(model)
+    svi = SVI(model, guide, optim.Adam(0.05), Trace_ELBO())
+    state = svi.init(jax.random.PRNGKey(1), {"x": x_train, "y": y_train})
+    for _ in range(10):
+        state, _ = svi.update_jit(state, {"x": x_train, "y": y_train})
+    params = svi.optim.get_params(state.optim_state)
+    servable = ServableModel.from_svi(
+        "bench-refresh", model, guide, params,
+        num_samples=1, return_sites=["mu"], max_batch=max_batch,
+    )
+
+    probe_x = jnp.ones((1, DIM))
+    stop = threading.Event()
+    dropped = []
+    with MicroBatcher(servable, max_wait_ms=1.0) as mb:
+        for b in servable.engine.buckets:
+            mb.predict({"x": jnp.ones((b, DIM))}, timeout=120)
+        traces_before = servable.num_traces
+
+        def client(cid):
+            i = 0
+            while not stop.is_set():
+                x = jax.random.normal(
+                    jax.random.fold_in(jax.random.PRNGKey(15), cid * 10_000 + i),
+                    (1 + (i % 3), DIM),
+                )
+                try:
+                    mb.predict({"x": x}, timeout=120)
+                except Exception as e:  # noqa: BLE001 — the contract: none
+                    dropped.append(e)
+                    return
+                i += 1
+
+        threads = [threading.Thread(target=client, args=(c,)) for c in range(n_clients)]
+        for t in threads:
+            t.start()
+        gaps = []
+        for swap in range(1, n_swaps + 1):
+            # full_like: the replacement tree must carry the SAME avals
+            # (shape/dtype/weak_type) as the trained params — that is the
+            # no-recompile contract a real checkpoint refresh satisfies
+            new_params = {
+                "auto_w_loc": jnp.full_like(params["auto_w_loc"], float(swap)),
+                "auto_b_loc": jnp.full_like(params["auto_b_loc"], -float(swap)),
+            }
+            expect = float(DIM * swap - swap)
+            t0 = time.perf_counter()
+            servable.refresh(params=new_params)
+            while True:  # first probe that serves the new posterior
+                mu = float(
+                    np.asarray(mb.predict({"x": probe_x}, timeout=120)["mu"]).ravel()[0]
+                )
+                if abs(mu - expect) < 1e-4:
+                    gaps.append((time.perf_counter() - t0) * 1e3)
+                    break
+        stop.set()
+        for t in threads:
+            t.join()
+        summary = mb.stats.summary()
+    gaps_sorted = sorted(gaps)
+    out = {
+        "scenario": "refresh_under_traffic",
+        "swaps": n_swaps,
+        "clients": n_clients,
+        "requests": summary["requests"],
+        "dropped_requests": len(dropped),
+        "swap_gap_ms": round(sum(gaps) / len(gaps), 3),
+        "swap_gap_max_ms": round(gaps_sorted[-1], 3),
+        "num_traces": servable.num_traces,
+        "recompiles_across_swaps": servable.num_traces - traces_before,
+    }
+    log(f"  {n_swaps} hot swaps under {summary['requests']} requests: "
+        f"swap gap {out['swap_gap_ms']}ms (max {out['swap_gap_max_ms']}ms), "
+        f"{out['dropped_requests']} dropped, "
+        f"{out['recompiles_across_swaps']} recompiles")
+    assert not dropped, f"hot swap dropped {len(dropped)} requests: {dropped[:3]}"
+    assert servable.num_traces == traces_before, (
+        f"hot swap recompiled: {traces_before} -> {servable.num_traces}"
+    )
+    assert servable.num_traces == len(servable.buckets_touched)
+    return out
+
+
 def bench_sharding_parity(model, guide, params, *, num_samples, log=print):
     """1-device mesh serving must be bit-identical to unsharded."""
     from repro.distributed.sharding import default_mesh
@@ -245,6 +435,17 @@ def main(argv=None):
         model, guide, params, num_samples=num_samples, max_batch=max_batch,
         n_requests=n_requests, n_clients=n_clients,
     )
+    print("# sustained load: deadline admission control under concurrency")
+    results["sustained_load"] = bench_sustained_load(
+        model, guide, params, num_samples=num_samples, max_batch=max_batch,
+        n_requests=n_requests, n_clients=n_clients,
+        deadline_ms=50.0 if args.smoke else 100.0,
+    )
+    print("# refresh under traffic: hot-swap gap + zero-drop/zero-recompile")
+    results["refresh_under_traffic"] = bench_refresh_under_traffic(
+        max_batch=max_batch, n_swaps=3 if args.smoke else 10,
+        n_clients=n_clients,
+    )
     print("# sharding parity (1-device mesh)")
     results["sharding"] = bench_sharding_parity(
         model, guide, params, num_samples=num_samples,
@@ -256,7 +457,9 @@ def main(argv=None):
     Path(args.json).write_text(json.dumps(results, indent=2) + "\n")
     print(f"\nwrote {args.json}")
     print(f"OK: speedup {results['steady_state']['speedup_steady']}x >= "
-          f"{SPEEDUP_FLOOR}x; compiles == buckets; sharding bit-identical")
+          f"{SPEEDUP_FLOOR}x; compiles == buckets; zero dropped requests; "
+          f"swap gap {results['refresh_under_traffic']['swap_gap_ms']}ms "
+          f"with zero recompiles; sharding bit-identical")
     return 0
 
 

@@ -24,7 +24,7 @@ import numpy as np
 
 from repro import distributions as dist, optim
 from repro.core import handlers, primitives as P
-from repro.infer import SVI, AutoNormal, TraceEnum_ELBO, config_enumerate, infer_discrete
+from repro.infer import SVI, AutoNormal, TraceEnum_ELBO, config, infer_discrete
 
 K = 2
 TRUE_LOCS = np.array([-2.0, 3.0])
@@ -39,7 +39,7 @@ def make_data(n=300, seed=0):
     return jnp.asarray(points), labels
 
 
-@config_enumerate
+@config(enumerate=True)
 def model(data):
     weight = P.sample("weight", dist.Beta(1.0, 1.0))
     with P.plate("components", K):

@@ -79,7 +79,16 @@ class AsyncCheckpointer:
         self._error: Optional[BaseException] = None
         self._lock = threading.Lock()
 
-    def save_async(self, step: int, tree: Any) -> None:
+    def save_async(self, step: int, tree: Any, *,
+                   on_commit: Optional[Any] = None) -> None:
+        """Snapshot `tree` to host now, write it in the background.
+
+        ``on_commit(step)`` — if given — runs on the writer thread *after*
+        the manifest rename commits the step. This is the streaming-service
+        hot-swap hook: the trainer passes a callback that restores the step
+        and `servable.refresh()`-es the server, so a swap can never observe
+        a half-written checkpoint. A callback exception is surfaced by the
+        next `save_async`/`wait`, like a write error."""
         with self._lock:
             self._wait_locked()  # one outstanding save at a time
             # copy=True: device_get of a host-resident (numpy / CPU-jax) leaf
@@ -93,6 +102,8 @@ class AsyncCheckpointer:
             def work():
                 try:
                     save(self.directory, step, host_tree, max_keep=self.max_keep)
+                    if on_commit is not None:
+                        on_commit(step)
                 except BaseException as e:  # pragma: no cover
                     self._error = e
 

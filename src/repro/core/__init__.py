@@ -1,6 +1,6 @@
 """repro.core — the paper's contribution: effect-handler PPL runtime."""
 from . import handlers, messenger, primitives, reparam as _reparam_mod
-from .handlers import Trace, config_enumerate, config_gaussian, enum, infer_config
+from .handlers import Trace, config, config_enumerate, config_gaussian, enum, infer_config
 from .reparam import LocScaleReparam, reparam
 from .messenger import DimAllocator, Messenger, apply_stack
 from .primitives import (
@@ -24,6 +24,7 @@ __all__ = [
     "LocScaleReparam",
     "reparam",
     "apply_stack",
+    "config",
     "config_enumerate",
     "config_gaussian",
     "enum",

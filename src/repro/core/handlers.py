@@ -5,6 +5,7 @@ poutine. Every inference algorithm in repro.infer is a composition of these.
 from __future__ import annotations
 
 import hashlib
+import warnings
 from collections import OrderedDict
 from typing import Any, Callable, Dict, Optional, Union
 
@@ -315,51 +316,26 @@ class infer_config(Messenger):
                 msg["infer"] = {**extra, **msg["infer"]}
 
 
-def config_enumerate(fn=None, default: str = "parallel"):
-    """Annotate every discrete non-observed sample site with
-    ``infer={"enumerate": default}`` unless the site already carries an
-    explicit annotation. Usable as a decorator or a wrapper:
-
-        model = config_enumerate(model)          # wrap
-        @config_enumerate                        # decorate
-        def model(...): ...
-    """
-    if fn is None:  # decorator-with-arguments form
-        return lambda f: config_enumerate(f, default=default)
-    if default not in ("parallel",):
-        raise NotImplementedError(
-            f"enumerate strategy '{default}' is not supported; only 'parallel' "
-            "(broadcast) enumeration is implemented"
-        )
+def _enumerate_config_fn(strategy: str, site_set):
+    """Annotate discrete non-observed sites with ``{"enumerate": strategy}``
+    unless already annotated (explicit per-site annotations win)."""
 
     def config_fn(msg):
         if msg["is_observed"] or not getattr(msg["fn"], "is_discrete", False):
             return {}
         if "enumerate" in msg["infer"]:
             return {}
-        return {"enumerate": default}
+        if site_set is not None and msg["name"] not in site_set:
+            return {}
+        return {"enumerate": strategy}
 
-    return infer_config(fn, config_fn=config_fn)
+    return config_fn
 
 
-def config_gaussian(fn=None, sites=None):
-    """Annotate Normal/MultivariateNormal non-observed sample sites with
-    ``infer={"marginalize": "gaussian"}`` so `TraceEnum_ELBO` and
-    `gaussian_marginals` integrate them out exactly (information-form
-    Gaussian variable elimination — the continuous analogue of
-    `config_enumerate`). Usable as a decorator or a wrapper:
-
-        model = config_gaussian(model)                # every Gaussian latent
-        model = config_gaussian(model, sites=["x0"])  # just these sites
-        @config_gaussian                              # decorate
-        def model(...): ...
-
-    Without ``sites``, every non-observed Normal/MVN site is annotated;
-    with ``sites``, only the named ones (and naming a non-Gaussian site
-    raises at trace time). Explicit per-site annotations win."""
-    if fn is None:  # decorator-with-arguments form
-        return lambda f: config_gaussian(f, sites=sites)
-    site_set = None if sites is None else frozenset(sites)
+def _gaussian_config_fn(site_set):
+    """Annotate Normal/MVN non-observed sites with
+    ``{"marginalize": "gaussian"}``; naming a non-Gaussian site raises at
+    trace time."""
 
     def config_fn(msg):
         # local import: distributions imports core for its sample machinery
@@ -372,14 +348,113 @@ def config_gaussian(fn=None, sites=None):
         if not isinstance(msg["fn"], (Normal, MultivariateNormal)):
             if site_set is not None:
                 raise ValueError(
-                    f"config_gaussian: site '{msg['name']}' has distribution "
+                    f"config: site '{msg['name']}' has distribution "
                     f"{type(msg['fn']).__name__}; only Normal and "
                     "MultivariateNormal sites can be Gaussian-marginalized"
                 )
             return {}
         return {"marginalize": "gaussian"}
 
-    return infer_config(fn, config_fn=config_fn)
+    return config_fn
+
+
+def config(fn=None, *, enumerate=None, marginalize=None, sites=None,
+           config_fn=None):
+    """The one annotation surface for inference configuration: wrap a model
+    so its sample sites carry the ``infer`` annotations the engines read.
+    Subsumes `config_enumerate`, `config_gaussian`, and raw `infer_config`
+    (all three remain as deprecated aliases of this function).
+
+    Arguments (any combination; at least one must be given):
+
+    * ``enumerate`` — ``True`` or a strategy name (only ``"parallel"`` is
+      implemented): annotate discrete non-observed sites with
+      ``infer={"enumerate": "parallel"}`` so `TraceEnum_ELBO` /
+      `infer_discrete` sum them out exactly.
+    * ``marginalize`` — ``True`` or ``"gaussian"``: annotate Normal/MVN
+      non-observed sites with ``infer={"marginalize": "gaussian"}`` so the
+      Gaussian semiring integrates them out exactly.
+    * ``sites`` — restrict either annotation to these site names. Naming a
+      non-Gaussian site under ``marginalize`` raises at trace time.
+    * ``config_fn`` — escape hatch: an arbitrary ``msg -> dict`` callable,
+      applied after the declarative annotations (explicit per-site
+      annotations still win over everything).
+
+    Usable as a wrapper or a decorator::
+
+        model = config(model, enumerate=True)
+        model = config(model, enumerate=True, marginalize="gaussian")  # SLDS
+        @config(marginalize="gaussian", sites=["x0"])
+        def model(...): ...
+    """
+    if fn is None:  # decorator-with-arguments form
+        return lambda f: config(f, enumerate=enumerate, marginalize=marginalize,
+                                sites=sites, config_fn=config_fn)
+    if enumerate is None and marginalize is None and config_fn is None:
+        raise ValueError(
+            "config() needs at least one of enumerate=, marginalize=, "
+            "or config_fn="
+        )
+    if enumerate is True:
+        enumerate = "parallel"
+    if enumerate is not None and enumerate not in ("parallel",):
+        raise NotImplementedError(
+            f"enumerate strategy '{enumerate}' is not supported; only "
+            "'parallel' (broadcast) enumeration is implemented"
+        )
+    if marginalize is True:
+        marginalize = "gaussian"
+    if marginalize is not None and marginalize not in ("gaussian",):
+        raise NotImplementedError(
+            f"marginalize strategy '{marginalize}' is not supported; only "
+            "'gaussian' (information-form VE) is implemented"
+        )
+    site_set = None if sites is None else frozenset(sites)
+
+    fns = []
+    if enumerate is not None:
+        fns.append(_enumerate_config_fn(enumerate, site_set))
+    if marginalize is not None:
+        fns.append(_gaussian_config_fn(site_set))
+    if config_fn is not None:
+        fns.append(config_fn)
+
+    def merged(msg):
+        out = {}
+        for f in fns:
+            extra = f(msg)
+            if extra:
+                out.update(extra)
+        return out
+
+    return infer_config(fn, config_fn=merged)
+
+
+def _warn_alias(old: str, hint: str) -> None:
+    # FutureWarning, not DeprecationWarning: the audience is users running
+    # model code, and Python hides DeprecationWarning from library frames.
+    # The default warning filter shows it once per call site.
+    warnings.warn(
+        f"{old} is deprecated; use {hint} instead (see docs/enumeration.md).",
+        FutureWarning,
+        stacklevel=3,
+    )
+
+
+def config_enumerate(fn=None, default: str = "parallel"):
+    """Deprecated alias of ``config(fn, enumerate=default)``."""
+    _warn_alias("config_enumerate(fn)", "config(fn, enumerate=True)")
+    if fn is None:  # decorator-with-arguments form
+        return lambda f: config(f, enumerate=default)
+    return config(fn, enumerate=default)
+
+
+def config_gaussian(fn=None, sites=None):
+    """Deprecated alias of ``config(fn, marginalize="gaussian", sites=sites)``."""
+    _warn_alias("config_gaussian(fn)", 'config(fn, marginalize="gaussian")')
+    if fn is None:  # decorator-with-arguments form
+        return lambda f: config(f, marginalize="gaussian", sites=sites)
+    return config(fn, marginalize="gaussian", sites=sites)
 
 
 class enum(Messenger):

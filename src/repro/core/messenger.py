@@ -14,19 +14,33 @@ of the compiled step.
 from __future__ import annotations
 
 import functools
+import threading
 from typing import Any, Callable, Dict, List, Optional
 
-# The global handler stack. Entering a Messenger pushes it; index 0 is the
-# outermost handler, the last element is the innermost.
-_HANDLER_STACK: List["Messenger"] = []
+
+class _HandlerStacks(threading.local):
+    """Per-thread handler stack. The streaming service traces models from
+    several threads at once (the background trainer's SVI step, each
+    MicroBatcher worker compiling a fresh bucket); a process-global stack
+    would interleave their handlers and corrupt both traces (symptom:
+    spurious "duplicate site name" errors under concurrent load). Entering
+    a Messenger pushes onto the *calling thread's* stack; index 0 is the
+    outermost handler, the last element is the innermost."""
+
+    def __init__(self):
+        self.stack: List["Messenger"] = []
+
+
+_LOCAL = _HandlerStacks()
 
 
 def current_stack() -> List["Messenger"]:
-    return _HANDLER_STACK
+    """The calling thread's handler stack (mutable, thread-local)."""
+    return _LOCAL.stack
 
 
 def am_i_wrapped() -> bool:
-    return len(_HANDLER_STACK) > 0
+    return len(current_stack()) > 0
 
 
 def default_process_message(msg: Dict[str, Any]) -> None:
@@ -76,13 +90,14 @@ def apply_stack(msg: Dict[str, Any]) -> Dict[str, Any]:
     """Run a message up the handler stack (innermost first), apply the default
     behavior unless a handler provided a value or stopped propagation, then run
     postprocessing back down the stack (Pyro's apply_stack semantics)."""
+    stack = current_stack()
     pointer = 0
-    for pointer, handler in enumerate(reversed(_HANDLER_STACK)):
+    for pointer, handler in enumerate(reversed(stack)):
         handler.process_message(msg)
         if msg.get("stop"):
             break
     default_process_message(msg)
-    for handler in _HANDLER_STACK[len(_HANDLER_STACK) - pointer - 1 :]:
+    for handler in stack[len(stack) - pointer - 1 :]:
         handler.postprocess_message(msg)
     return msg
 
@@ -118,15 +133,17 @@ class Messenger:
         functools.update_wrapper(self, fn, updated=[]) if fn is not None else None
 
     def __enter__(self):
-        _HANDLER_STACK.append(self)
+        current_stack().append(self)
         return self
 
     def __exit__(self, exc_type, exc_value, traceback):
-        # remove self even if handlers above us leaked (exception safety)
-        if _HANDLER_STACK and _HANDLER_STACK[-1] is self:
-            _HANDLER_STACK.pop()
+        # remove self even if handlers above us leaked (exception safety);
+        # enter/exit always pair on one thread, so this sees the same stack
+        stack = current_stack()
+        if stack and stack[-1] is self:
+            stack.pop()
         else:  # pragma: no cover - defensive
-            _HANDLER_STACK.remove(self)
+            stack.remove(self)
 
     def process_message(self, msg: Dict[str, Any]) -> None:
         pass

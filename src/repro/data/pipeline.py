@@ -13,8 +13,10 @@ steps (used by examples/train_lm.py and the Fig-3 benchmark).
 """
 from __future__ import annotations
 
+import queue
+import threading
 from dataclasses import dataclass
-from typing import Dict, Iterator
+from typing import Any, Dict, Iterable, Iterator, Optional
 
 import jax
 import jax.numpy as jnp
@@ -75,6 +77,129 @@ class SyntheticTokens:
         step = 0
         while True:
             yield self.global_batch(step)
+            step += 1
+
+
+class Prefetcher:
+    """Host-side prefetch: a background thread pulls batches from a source
+    iterator into a bounded queue so the training step never waits on data
+    generation (the lm1b input-pipeline idiom — producer thread + bounded
+    buffer — without a tf.data dependency).
+
+    The buffer holds at most ``prefetch`` batches, so a slow consumer
+    back-pressures the producer instead of growing host memory. Exceptions
+    in the source re-raise on the consumer thread at the point of `next`;
+    `close()` stops the producer and unblocks it if the queue is full.
+
+        for batch in Prefetcher(stream, prefetch=4):
+            state, loss = svi.update_jit(state, batch)
+    """
+
+    _DONE = object()
+
+    def __init__(self, source: Iterable, *, prefetch: int = 4):
+        if prefetch < 1:
+            raise ValueError("prefetch must be >= 1")
+        self._source = iter(source)
+        self._q: queue.Queue = queue.Queue(maxsize=prefetch)
+        self._closed = threading.Event()
+        self._thread = threading.Thread(target=self._produce, daemon=True)
+        self._thread.start()
+
+    def _produce(self) -> None:
+        try:
+            for item in self._source:
+                while not self._closed.is_set():
+                    try:
+                        self._q.put(item, timeout=0.1)
+                        break
+                    except queue.Full:
+                        continue
+                if self._closed.is_set():
+                    return
+            self._q.put(self._DONE)
+        except BaseException as e:  # noqa: BLE001 — re-raised on consumer
+            self._q.put(e)
+
+    def __iter__(self) -> "Prefetcher":
+        return self
+
+    def __next__(self) -> Any:
+        if self._closed.is_set():
+            raise StopIteration
+        item = self._q.get()
+        if item is self._DONE:
+            raise StopIteration
+        if isinstance(item, BaseException):
+            raise item
+        return item
+
+    def close(self) -> None:
+        """Stop the producer (idempotent); pending batches are dropped."""
+        self._closed.set()
+        # unblock a producer stuck on a full queue
+        while True:
+            try:
+                self._q.get_nowait()
+            except queue.Empty:
+                break
+        self._thread.join(timeout=5.0)
+
+    def __enter__(self) -> "Prefetcher":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
+
+
+@dataclass(frozen=True)
+class RegressionStreamConfig:
+    """Synthetic streaming linear-regression source for the streaming
+    inference service: `dim` features, `batch` rows per step, true weights
+    that *drift* slowly (rotated by `drift` radians per step around the
+    first two coordinates) — so a posterior trained on old steps is
+    measurably stale and a hot-swapped refresh is observable in served
+    predictions."""
+
+    dim: int = 4
+    batch: int = 64
+    seed: int = 0
+    noise: float = 0.1
+    drift: float = 0.0
+
+
+class RegressionStream:
+    """step -> {'x': (B, D), 'y': (B,)} float32, deterministic per (cfg, step)."""
+
+    def __init__(self, cfg: RegressionStreamConfig, max_steps: Optional[int] = None):
+        self.cfg = cfg
+        self.max_steps = max_steps
+        rng = np.random.default_rng(cfg.seed)
+        self._w0 = rng.normal(size=cfg.dim).astype(np.float32)
+        self._b = np.float32(rng.normal())
+
+    def true_weights(self, step: int) -> np.ndarray:
+        w = self._w0.copy()
+        if self.cfg.drift and self.cfg.dim >= 2:
+            theta = self.cfg.drift * step
+            c, s = np.cos(theta), np.sin(theta)
+            w0, w1 = w[0], w[1]
+            w[0], w[1] = c * w0 - s * w1, s * w0 + c * w1
+        return w
+
+    def batch(self, step: int) -> Dict[str, jax.Array]:
+        cfg = self.cfg
+        rng = np.random.default_rng(np.random.SeedSequence([cfg.seed, step]))
+        x = rng.normal(size=(cfg.batch, cfg.dim)).astype(np.float32)
+        w = self.true_weights(step)
+        y = x @ w + self._b + cfg.noise * rng.normal(size=cfg.batch).astype(np.float32)
+        return {"x": jnp.asarray(x), "y": jnp.asarray(y.astype(np.float32))}
+
+    def __iter__(self) -> Iterator[Dict[str, jax.Array]]:
+        step = 0
+        while self.max_steps is None or step < self.max_steps:
+            yield self.batch(step)
             step += 1
 
 

@@ -5,7 +5,7 @@ from .autoguide import (
     AutoLowRankMultivariateNormal,
     AutoNormal,
 )
-from ..core.handlers import config_enumerate, config_gaussian
+from ..core.handlers import config, config_enumerate, config_gaussian
 from .elbo import ELBO, RenyiELBO, Trace_ELBO, TraceMeanField_ELBO, vectorize_particles
 from .contract import clear_plan_cache, plan_cache_stats
 from .traceenum_elbo import (
@@ -35,6 +35,7 @@ __all__ = [
     "TraceGraph_ELBO",
     "TraceMeanField_ELBO",
     "clear_plan_cache",
+    "config",
     "config_enumerate",
     "config_gaussian",
     "discrete_marginals",

@@ -98,8 +98,8 @@ class AutoGuide:
                     raise ValueError(
                         f"autoguides require continuous latents; '{name}' is discrete. "
                         "Annotate it with infer={'enumerate': 'parallel'} (or wrap the "
-                        "model in config_enumerate) and train with TraceEnum_ELBO to "
-                        "marginalize it exactly."
+                        "model in config(enumerate=True)) and train with TraceEnum_ELBO "
+                        "to marginalize it exactly."
                     )
                 t = biject_to(site["fn"].support)
                 u0 = t.inv(site["value"])

@@ -11,12 +11,12 @@ bounds the cache (default 256 plans, FIFO eviction).
 """
 from __future__ import annotations
 
-import os
 import threading
 import time
 from collections import OrderedDict
 from typing import Callable, Dict, Tuple
 
+from ... import settings
 from .planner import ContractionPlan
 
 
@@ -32,13 +32,11 @@ class PlanCache:
 
     @staticmethod
     def _enabled() -> bool:
-        return os.environ.get("REPRO_ENUM_PLAN_CACHE", "1").lower() not in (
-            "0", "false", "off",
-        )
+        return settings.get_bool("REPRO_ENUM_PLAN_CACHE")
 
     @staticmethod
     def _maxsize() -> int:
-        return max(1, int(os.environ.get("REPRO_ENUM_PLAN_CACHE_SIZE", "256")))
+        return max(1, settings.get_int("REPRO_ENUM_PLAN_CACHE_SIZE"))
 
     def get_or_plan(self, key: Tuple, build: Callable[[], ContractionPlan]) -> ContractionPlan:
         if self._enabled():

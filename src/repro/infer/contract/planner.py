@@ -33,12 +33,12 @@ pins the lowering strategy (``scan`` / ``tree`` / ``folds``).
 from __future__ import annotations
 
 import math
-import os
 from dataclasses import dataclass, field
 from typing import Dict, FrozenSet, List, Optional, Sequence, Set, Tuple
 
 import jax
 
+from ... import settings
 from .structure import FactorStruct
 
 # ---------------------------------------------------------------------------
@@ -135,7 +135,7 @@ def chain_threshold(env_val: Optional[str] = None) -> int:
     """Minimum chain length (binary-factor edges) worth lowering to a fused
     segment. ``REPRO_ENUM_CHAIN_MIN`` overrides the cost-model crossover."""
     if env_val is None:
-        env_val = os.environ.get("REPRO_ENUM_CHAIN_MIN")
+        env_val = settings.get_raw("REPRO_ENUM_CHAIN_MIN")
     if env_val is not None:
         return max(2, int(env_val))
     return max(2, math.ceil(math.sqrt(_SCAN_LOWER_COST_S / _UNROLL_COMPILE_S_PER_EDGE2)))
@@ -144,16 +144,16 @@ def chain_threshold(env_val: Optional[str] = None) -> int:
 def plan_knobs() -> Tuple:
     """Environment/platform knobs that change planning decisions — part of
     the plan-cache fingerprint so flipping one never serves a stale plan."""
-    lower = os.environ.get("REPRO_ENUM_CHAIN_LOWER", "auto")
+    lower = settings.get_str("REPRO_ENUM_CHAIN_LOWER")
     if lower not in _LOWERINGS:
         raise ValueError(
             f"unknown chain lowering {lower!r} (REPRO_ENUM_CHAIN_LOWER); "
             f"expected one of {_LOWERINGS}"
         )
     return (
-        os.environ.get("REPRO_ENUM_CHAIN_MIN"),
+        settings.get_raw("REPRO_ENUM_CHAIN_MIN"),
         lower,
-        int(os.environ.get("REPRO_ENUM_PLAN_BB", "10")),
+        settings.get_int("REPRO_ENUM_PLAN_BB"),
         jax.default_backend(),
     )
 

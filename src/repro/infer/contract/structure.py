@@ -13,13 +13,14 @@ the same model shape plan exactly once.
 """
 from __future__ import annotations
 
-import os
 from dataclasses import dataclass
 from typing import Any, FrozenSet, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.scipy import special as jsp
+
+from ... import settings
 
 # ---------------------------------------------------------------------------
 # semiring reduction ops (shared with traceenum_elbo)
@@ -97,7 +98,7 @@ def _dispatch_mode(override: Optional[str] = None) -> str:
     eliminations and lowers them to the fused semiring kernels or a
     `lax.scan` roll; ``pairwise`` forces the legacy one-dim-at-a-time greedy
     path everywhere. Explicit argument > ``REPRO_ENUM_DISPATCH`` env var."""
-    mode = override or os.environ.get("REPRO_ENUM_DISPATCH", "auto")
+    mode = override or settings.get_str("REPRO_ENUM_DISPATCH")
     if mode not in _DISPATCH_MODES:
         raise ValueError(
             f"unknown enum dispatch mode {mode!r}; expected one of {_DISPATCH_MODES}"

@@ -63,7 +63,6 @@ Example — two HMC chains on a conjugate model, grouped samples::
 from __future__ import annotations
 
 import math
-import os
 from functools import partial
 from typing import Any, Callable, NamedTuple, Optional, Tuple
 
@@ -72,6 +71,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.flatten_util import ravel_pytree
 
+from .. import settings
 from ..kernels import ops
 from .chees import ChEESState, chees_init, chees_update, halton_jitter
 from .util import init_to_uniform, initialize_model, potential_energy, transform_fn
@@ -874,9 +874,7 @@ class MCMC:
         if fused is None:
             # default ON; REPRO_MCMC_FUSED=0 keeps the per-chain vmap path
             # (the pre-fused baseline benchmarks compare against)
-            fused = os.environ.get("REPRO_MCMC_FUSED", "1").lower() not in (
-                "0", "false", "off",
-            )
+            fused = settings.get_bool("REPRO_MCMC_FUSED")
         self.fused = fused
         self.kernel = kernel
         self.num_warmup = num_warmup

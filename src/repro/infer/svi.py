@@ -103,6 +103,13 @@ class SVI:
         # SVIRunner and direct callers (same-shape steps never re-trace).
         self.update_jit = jax.jit(self.update)
 
+    @property
+    def num_traces(self) -> int:
+        """XLA retrace counter (the shared `repro.retrace` contract): how
+        many distinct executables back `update_jit`. 1 after any number of
+        same-shape steps; growth means the hot loop is recompiling."""
+        return self.update_jit._cache_size()
+
     # -- param discovery -----------------------------------------------------
     def _find_params(self, rng_key, *args, **kwargs) -> Dict[str, Any]:
         """Trace guide then model, collecting `param` sites (guide first, so

@@ -411,7 +411,7 @@ def _lower_gaussian_trace(make_trace, model_tr, pool, *, fixed: FrozenSet[str]):
 class TraceEnum_ELBO(ELBO):
     """ELBO with exact parallel marginalization of enumerated discrete model
     sites. Annotate sites with ``infer={"enumerate": "parallel"}`` (or wrap
-    the model in `config_enumerate`); the guide must not sample them.
+    the model in ``config(enumerate=True)``); the guide must not sample them.
 
     Plugs into the shared `ELBO` engine: `num_particles`, `mesh=` particle
     sharding, and SVI's compile-once `update_jit` all work unchanged.
@@ -660,7 +660,8 @@ def gaussian_marginals(
     if gauss is None:
         raise ValueError(
             "no sites are annotated for Gaussian marginalization; wrap the "
-            "model in config_gaussian or annotate sites with "
+            'model in config(marginalize="gaussian") (formerly '
+            "config_gaussian) or annotate sites with "
             'infer={"marginalize": "gaussian"}'
         )
     factors, depth, _ = _collect_factors(tr, skip=gauss.entangled)
@@ -804,7 +805,7 @@ def infer_discrete(
 
         guide_draws = {...}                      # from SVI or MCMC
         decoded = infer_discrete(
-            handlers.substitute(config_enumerate(model), data=guide_draws),
+            handlers.substitute(config(model, enumerate=True), data=guide_draws),
             temperature=0, rng_key=key)
         tr = handlers.trace(decoded).get_trace(data)
         assignments = tr["z"]["value"]

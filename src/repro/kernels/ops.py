@@ -18,13 +18,13 @@ separate executable instead of clobbering one cache entry.
 from __future__ import annotations
 
 import functools
-import os
 import warnings
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from .. import settings
 from . import ref
 from .categorical_logprob import categorical_logprob_flat
 from .flash_attention import flash_attention_gqa
@@ -40,7 +40,7 @@ def resolve_backend(backend: Optional[str] = None) -> str:
     """Resolve an explicit/env/platform kernel-backend choice to one of
     `BACKENDS`. See module docstring for precedence."""
     if backend is None:
-        backend = os.environ.get("REPRO_KERNEL_BACKEND", "auto")
+        backend = settings.get_str("REPRO_KERNEL_BACKEND")
     if backend == "ref":  # convenience alias
         backend = "reference"
     if backend in BACKENDS:
@@ -49,7 +49,7 @@ def resolve_backend(backend: Optional[str] = None) -> str:
         raise ValueError(
             f"unknown kernel backend {backend!r}; expected one of {BACKENDS + ('auto',)}"
         )
-    legacy = os.environ.get("REPRO_PALLAS_INTERPRET")
+    legacy = settings.get_raw("REPRO_PALLAS_INTERPRET")
     if legacy is not None:
         resolved = "tpu" if legacy in ("0", "false", "False") else "interpret"
         # anything that isn't 0/false used to silently mean interpret — keep

@@ -24,13 +24,15 @@ from typing import Dict, Optional
 
 import jax
 
+from .. import settings
+
 _OFF = ("0", "false", "off", "none")
 
 
 def cache_dir() -> Optional[Path]:
     """Resolved compilation-cache directory, or None when disabled."""
-    env = os.environ.get("REPRO_COMPILATION_CACHE_DIR")
-    if env is not None:
+    if settings.is_set("REPRO_COMPILATION_CACHE_DIR"):
+        env = settings.get_str("REPRO_COMPILATION_CACHE_DIR")
         if env.strip().lower() in _OFF:
             return None
         return Path(env).expanduser()
@@ -56,7 +58,7 @@ def enable_compilation_cache() -> Optional[Path]:
         # executables out so the cache stays small and the hit path hot
         jax.config.update(
             "jax_persistent_cache_min_compile_time_secs",
-            float(os.environ.get("REPRO_COMPILATION_CACHE_MIN_COMPILE_S", "0.5")),
+            settings.get_float("REPRO_COMPILATION_CACHE_MIN_COMPILE_S"),
         )
         jax.config.update("jax_persistent_cache_min_entry_size_bytes", 0)
     except Exception as exc:  # pragma: no cover - depends on fs/jax build

@@ -1,0 +1,58 @@
+"""The `num_traces` retrace-counter contract.
+
+Every compiled engine in this codebase exposes a ``num_traces`` property:
+the number of distinct XLA executables behind its hot path. Recompilation
+is the silent performance killer on accelerators — an engine that retraces
+per step is 100–1000x slower than one that compiled once — so benches and
+CI assert retrace stability *uniformly* through this contract instead of
+each site inventing its own convention:
+
+* `SVI.num_traces` — size of the `update_jit` cache (1 after any number of
+  same-shape steps);
+* `MCMC.num_traces` — trace-time counter on the fused/vmap driver (1 per
+  (chains, shape) signature);
+* `Predictive.num_traces` — size of the forward jit cache (1 per static
+  partition);
+* `CompiledServable.num_traces` — size of the padded-forward jit cache
+  (``== len(buckets_touched)`` for a healthy server — one executable per
+  shape bucket, never one per request).
+
+`RetraceCounted` is the structural protocol (``isinstance`` works via
+``runtime_checkable``); `assert_num_traces` is the shared test/bench
+helper that failure-messages consistently.
+"""
+from __future__ import annotations
+
+from typing import Protocol, runtime_checkable
+
+
+@runtime_checkable
+class RetraceCounted(Protocol):
+    """Anything with a ``num_traces`` retrace counter."""
+
+    @property
+    def num_traces(self) -> int: ...
+
+
+def num_traces(obj: RetraceCounted) -> int:
+    """The retrace counter, validated to be a non-negative int."""
+    n = obj.num_traces
+    if not isinstance(n, int) or n < 0:
+        raise TypeError(
+            f"{type(obj).__name__}.num_traces must be a non-negative int, "
+            f"got {n!r}"
+        )
+    return n
+
+
+def assert_num_traces(obj: RetraceCounted, expected: int, context: str = "") -> None:
+    """Assert the engine compiled exactly `expected` executables. Used by
+    tests and benches so every retrace regression fails with the same
+    message shape."""
+    actual = num_traces(obj)
+    if actual != expected:
+        where = f" [{context}]" if context else ""
+        raise AssertionError(
+            f"{type(obj).__name__} retraced{where}: num_traces == {actual}, "
+            f"expected {expected} — the hot path is recompiling"
+        )

@@ -1,7 +1,7 @@
 """Posterior-serving subsystem: trained inference artifacts (SVI guides,
 MCMC sample stores, enumerated decoders) as compiled, batched, mesh-sharded
 endpoints. See docs/serving.md for the artifact -> endpoint walkthrough."""
-from .batcher import MicroBatcher, ServeStats
+from .batcher import LoadShedError, MicroBatcher, ServeStats
 from .engine import CompiledServable, bucket_for, default_buckets
 from .registry import (
     ServableModel,
@@ -11,16 +11,22 @@ from .registry import (
     register,
     unregister,
 )
+from .server import InferenceServer
+from .trainer import StreamingTrainer, hot_swap_on_commit
 
 __all__ = [
     "CompiledServable",
+    "InferenceServer",
+    "LoadShedError",
     "MicroBatcher",
     "ServableModel",
     "ServeStats",
+    "StreamingTrainer",
     "bucket_for",
     "clear_registry",
     "default_buckets",
     "get_servable",
+    "hot_swap_on_commit",
     "list_servables",
     "register",
     "unregister",

@@ -15,6 +15,12 @@ batcher's base key, so results are deterministic given the arrival
 grouping; requests coalesced together share the same posterior draws
 (that is what one sharded forward means).
 
+Overload behavior is *admission control*, not queue growth: a request
+submitted with ``deadline_ms=`` is rejected with `LoadShedError` (HTTP 429
+at the front end) when the projected queue wait — admitted-but-incomplete
+rows over max_batch forwards at the EWMA batch service time — exceeds its
+deadline. Requests without a deadline always queue.
+
 `ServeStats` is the observability surface: per-request latency quantiles
 (p50/p99), lifetime throughput, queue depth at batch formation, padding
 waste, and the engine's retrace counter — `launch/serve.py` prints it and
@@ -41,6 +47,22 @@ def _percentile(sorted_vals: List[float], p: float) -> float:
     return sorted_vals[idx]
 
 
+class LoadShedError(RuntimeError):
+    """Raised by `MicroBatcher.submit` when the projected queue wait exceeds
+    the request's deadline — the request is rejected *before* queueing so the
+    client can retry elsewhere instead of timing out in line. HTTP front
+    ends map this to 429 with ``retry_after_ms`` as the Retry-After hint."""
+
+    def __init__(self, projected_wait_ms: float, deadline_ms: float):
+        self.projected_wait_ms = projected_wait_ms
+        self.deadline_ms = deadline_ms
+        self.retry_after_ms = max(projected_wait_ms - deadline_ms, 1.0)
+        super().__init__(
+            f"shed: projected queue wait {projected_wait_ms:.1f}ms exceeds "
+            f"deadline {deadline_ms:.1f}ms"
+        )
+
+
 @dataclass
 class ServeStats:
     """Rolling serving metrics (thread-safe via the batcher's worker being
@@ -51,6 +73,7 @@ class ServeStats:
     batches: int = 0
     rows: int = 0
     padded_rows: int = 0
+    shed: int = 0
     max_queue_depth: int = 0
     started_at: float = field(default_factory=time.perf_counter)
     latencies_ms: List[float] = field(default_factory=list)
@@ -91,6 +114,8 @@ class ServeStats:
             "mean_batch_rows": round(sum(self.batch_sizes) / max(len(self.batch_sizes), 1), 2),
             "max_queue_depth": self.max_queue_depth,
             "pad_waste": round(self.padded_rows / total, 4),
+            "shed": self.shed,
+            "shed_rate": round(self.shed / max(self.requests + self.shed, 1), 4),
         }
 
 
@@ -143,6 +168,12 @@ class MicroBatcher:
         self._q: queue.Queue = queue.Queue()
         self._carry: Optional[_Request] = None
         self._closed = False
+        # load-shed bookkeeping: rows admitted but not yet completed, and an
+        # EWMA of per-batch service time — together they give submit() a
+        # projected queue wait without touching the worker thread
+        self._pending_rows = 0
+        self._ewma_batch_s: Optional[float] = None
+        self._ewma_alpha = 0.2
         # guards the closed-check + enqueue pair: without it, a submit that
         # passes the check while close() runs could land its request after
         # the shutdown drain, leaving the future forever unresolved
@@ -151,9 +182,27 @@ class MicroBatcher:
         self._worker.start()
 
     # -- client API ----------------------------------------------------------
-    def submit(self, batch: Any) -> Future:
+    def projected_wait_ms(self, n_rows: int = 1) -> float:
+        """Estimated queue wait for a new `n_rows` request: admitted-but-
+        incomplete rows ahead of it, divided into max_batch forwards, each
+        costing the EWMA batch service time (plus one coalesce window).
+        0.0 until the first batch has been measured — the batcher never
+        sheds on a cold queue."""
+        with self._submit_lock:
+            ewma, pending = self._ewma_batch_s, self._pending_rows
+        if ewma is None:
+            return 0.0
+        batches_ahead = (pending + n_rows) / self.max_batch
+        return (batches_ahead * ewma + self.max_wait_s) * 1e3
+
+    def submit(self, batch: Any, *, deadline_ms: Optional[float] = None) -> Future:
         """Enqueue a request pytree (leading dim = rows); returns a Future
-        resolving to the per-request output slice."""
+        resolving to the per-request output slice.
+
+        With ``deadline_ms``, the request is admitted only if the projected
+        queue wait fits the deadline; otherwise it is rejected immediately
+        with `LoadShedError` (HTTP 429 at the front end) instead of joining
+        a queue it cannot clear in time."""
         n = batch_count(batch)
         if n > self.max_batch:
             raise ValueError(
@@ -164,12 +213,20 @@ class MicroBatcher:
         with self._submit_lock:
             if self._closed:
                 raise RuntimeError("MicroBatcher is closed")
+            if deadline_ms is not None and self._ewma_batch_s is not None:
+                batches_ahead = (self._pending_rows + n) / self.max_batch
+                projected = (batches_ahead * self._ewma_batch_s + self.max_wait_s) * 1e3
+                if projected > deadline_ms:
+                    self.stats.shed += 1
+                    raise LoadShedError(projected, deadline_ms)
+            self._pending_rows += n
             self._q.put(req)
         return req.future
 
-    def predict(self, batch: Any, timeout: Optional[float] = None) -> Any:
+    def predict(self, batch: Any, timeout: Optional[float] = None,
+                deadline_ms: Optional[float] = None) -> Any:
         """Blocking convenience: submit + wait."""
-        return self.submit(batch).result(timeout)
+        return self.submit(batch, deadline_ms=deadline_ms).result(timeout)
 
     def close(self, timeout: Optional[float] = 10.0) -> None:
         """Drain the queue and stop the worker (idempotent)."""
@@ -222,6 +279,7 @@ class MicroBatcher:
         key = jax.random.fold_in(self._base_key, self._batch_counter)
         self._batch_counter += 1
         total = sum(r.n for r in group)
+        t_start = time.perf_counter()
         try:
             coalesced = jax.tree.map(
                 lambda *xs: jax.numpy.concatenate(xs, axis=0), *[r.batch for r in group]
@@ -241,7 +299,17 @@ class MicroBatcher:
             for r in group:
                 if not r.future.done():
                     r.future.set_exception(e)
+            with self._submit_lock:
+                self._pending_rows = max(self._pending_rows - total, 0)
             return
+        service_s = t_done - t_start
+        with self._submit_lock:
+            self._pending_rows = max(self._pending_rows - total, 0)
+            if self._ewma_batch_s is None:
+                self._ewma_batch_s = service_s
+            else:
+                a = self._ewma_alpha
+                self._ewma_batch_s = a * service_s + (1 - a) * self._ewma_batch_s
         from .engine import bucket_for
 
         self.stats.record_batch(

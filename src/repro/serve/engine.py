@@ -97,6 +97,11 @@ def pad_leading(batch: Any, total: int, *, force_copy: bool = False) -> Any:
     donate it even when no padding was needed)."""
 
     def leaf(x):
+        if getattr(x, "weak_type", False):
+            # canonicalize to a strong dtype: jnp.pad drops weak_type, so a
+            # bucket-sized (pad == 0) weak-typed batch would otherwise carry
+            # a different aval than a padded one and retrace the same bucket
+            x = x.astype(x.dtype)
         pad = total - x.shape[0]
         if pad < 0:
             raise ValueError(f"batch of {x.shape[0]} larger than bucket {total}")

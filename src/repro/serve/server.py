@@ -1,0 +1,287 @@
+"""HTTP front end for the posterior-serving stack (stdlib only).
+
+`InferenceServer` puts a `ThreadingHTTPServer` in front of the process
+servable registry: every registered `ServableModel` gets its own
+`MicroBatcher`, so uncoordinated HTTP requests coalesce into few large
+compiled forwards, with deadline-aware admission control (HTTP 429 +
+``Retry-After`` when the projected queue wait exceeds the request
+deadline) and hot-swap endpoints for the streaming trainer.
+
+Routes (all JSON):
+
+    GET  /healthz                          liveness + model count
+    GET  /v1/models                        multi-model registry listing
+    GET  /v1/models/<name>                 one model's metadata
+    GET  /v1/models/<name>/stats           ServeStats summary + num_traces
+    POST /v1/models/<name>:predict         {"inputs": ..., "deadline_ms": ...}
+    POST /admin/models/<name>/refresh      hot-swap from a checkpoint dir
+    POST /admin/device-loss                plan_remesh for surviving hosts
+
+Request deadline precedence: per-request ``deadline_ms`` in the body >
+the ``REPRO_SERVE_DEADLINE_MS`` knob > no deadline (requests always
+queue). Prediction inputs: a nested list becomes one array request batch;
+a dict of nested lists becomes a dict-of-arrays pytree. The leading axis
+is always the request's row count.
+
+The server binds 127.0.0.1 and an OS-assigned free port by default —
+`launch/stream.py` prints the resolved address; tests drive a live
+server through real sockets.
+"""
+from __future__ import annotations
+
+import json
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from .. import settings
+from ..distributed.fault_tolerance import plan_remesh
+from .batcher import LoadShedError, MicroBatcher
+from .registry import ServableModel
+
+
+def _to_batch(inputs: Any) -> Any:
+    """JSON inputs -> request pytree (leading dim = rows)."""
+    if isinstance(inputs, dict):
+        return {k: jax.numpy.asarray(np.asarray(v)) for k, v in inputs.items()}
+    return jax.numpy.asarray(np.asarray(inputs))
+
+
+def _to_json(tree: Any) -> Any:
+    """Output pytree -> JSON-serializable nested lists."""
+    return jax.tree.map(lambda x: np.asarray(x).tolist(), tree)
+
+
+class InferenceServer:
+    """N servables, one mesh, one HTTP port.
+
+    ``models`` maps name -> `ServableModel`; each gets a `MicroBatcher`
+    (per-model ``max_wait_ms`` via ``batcher_kwargs``). `default_deadline_ms`
+    (fallback: the ``REPRO_SERVE_DEADLINE_MS`` knob) applies to requests
+    that don't carry their own deadline."""
+
+    def __init__(
+        self,
+        models: Dict[str, ServableModel],
+        *,
+        host: str = "127.0.0.1",
+        port: int = 0,
+        default_deadline_ms: Optional[float] = None,
+        chips_per_host: int = 4,
+        model_parallelism: int = 1,
+        **batcher_kwargs,
+    ):
+        self.models = dict(models)
+        self.batchers: Dict[str, MicroBatcher] = {
+            name: MicroBatcher(servable, **batcher_kwargs)
+            for name, servable in self.models.items()
+        }
+        if default_deadline_ms is None:
+            default_deadline_ms = settings.get_optional_float("REPRO_SERVE_DEADLINE_MS")
+        self.default_deadline_ms = default_deadline_ms
+        self.chips_per_host = chips_per_host
+        self.model_parallelism = model_parallelism
+        self._httpd = ThreadingHTTPServer((host, port), _make_handler(self))
+        self._httpd.daemon_threads = True
+        self._thread: Optional[threading.Thread] = None
+
+    # -- lifecycle -----------------------------------------------------------
+    @property
+    def address(self) -> str:
+        host, port = self._httpd.server_address[:2]
+        return f"http://{host}:{port}"
+
+    def start(self) -> "InferenceServer":
+        if self._thread is not None:
+            raise RuntimeError("server already started")
+        self._thread = threading.Thread(
+            target=self._httpd.serve_forever, kwargs={"poll_interval": 0.05},
+            daemon=True,
+        )
+        self._thread.start()
+        return self
+
+    def close(self) -> None:
+        if self._thread is not None:
+            self._httpd.shutdown()
+            self._thread.join(timeout=10.0)
+            self._thread = None
+        self._httpd.server_close()
+        for batcher in self.batchers.values():
+            batcher.close()
+
+    def __enter__(self) -> "InferenceServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
+
+    # -- route logic (transport-independent; the handler is a thin shim) -----
+    def model_info(self, name: str) -> Dict[str, Any]:
+        servable = self.models[name]
+        return {
+            "name": name,
+            "kind": servable.kind,
+            "buckets": list(servable.engine.buckets),
+            "num_traces": servable.num_traces,
+            "restored_step": servable.restored_step,
+            "meta": {k: v for k, v in servable.meta.items()
+                     if isinstance(v, (str, int, float, bool, type(None)))},
+        }
+
+    def handle_get(self, path: str) -> tuple:
+        if path == "/healthz":
+            return 200, {"ok": True, "models": sorted(self.models)}
+        if path == "/v1/models":
+            return 200, {"models": [self.model_info(n) for n in sorted(self.models)]}
+        if path.startswith("/v1/models/"):
+            rest = path[len("/v1/models/"):]
+            name, _, tail = rest.partition("/")
+            if name not in self.models:
+                return 404, {"error": f"no model '{name}'"}
+            if tail == "stats":
+                stats = dict(self.batchers[name].stats.summary())
+                stats["num_traces"] = self.models[name].num_traces
+                stats["projected_wait_ms"] = round(
+                    self.batchers[name].projected_wait_ms(), 3
+                )
+                return 200, stats
+            if tail == "":
+                return 200, self.model_info(name)
+        return 404, {"error": f"no route {path}"}
+
+    def handle_post(self, path: str, body: Dict[str, Any]) -> tuple:
+        if path.startswith("/v1/models/") and path.endswith(":predict"):
+            name = path[len("/v1/models/"):-len(":predict")]
+            if name not in self.models:
+                return 404, {"error": f"no model '{name}'"}
+            return self._predict(name, body)
+        if path.startswith("/admin/models/") and path.endswith("/refresh"):
+            name = path[len("/admin/models/"):-len("/refresh")]
+            if name not in self.models:
+                return 404, {"error": f"no model '{name}'"}
+            return self._refresh(name, body)
+        if path == "/admin/device-loss":
+            return self._device_loss(body)
+        return 404, {"error": f"no route {path}"}
+
+    def _predict(self, name: str, body: Dict[str, Any]) -> tuple:
+        if "inputs" not in body:
+            return 400, {"error": "missing 'inputs'"}
+        try:
+            batch = _to_batch(body["inputs"])
+        except Exception as e:  # noqa: BLE001 — malformed client payload
+            return 400, {"error": f"bad inputs: {e}"}
+        deadline_ms = body.get("deadline_ms", self.default_deadline_ms)
+        try:
+            out = self.batchers[name].predict(batch, deadline_ms=deadline_ms)
+        except LoadShedError as e:
+            return 429, {
+                "error": "shed",
+                "projected_wait_ms": round(e.projected_wait_ms, 3),
+                "deadline_ms": e.deadline_ms,
+                "retry_after_ms": round(e.retry_after_ms, 3),
+            }
+        except ValueError as e:
+            return 400, {"error": str(e)}
+        return 200, {"outputs": _to_json(out)}
+
+    def _refresh(self, name: str, body: Dict[str, Any]) -> tuple:
+        """Hot-swap `name` from a committed checkpoint directory. The swap is
+        a state mutation on the live engine — in-flight requests finish on
+        the old params, new requests see the new ones, nothing recompiles."""
+        from ..checkpoint.store import restore_latest
+
+        servable = self.models[name]
+        directory = body.get("directory") or servable.meta.get("directory")
+        if not directory:
+            return 400, {"error": "no checkpoint directory (pass 'directory')"}
+        traces_before = servable.num_traces
+        try:
+            step, tree = restore_latest(directory)
+        except FileNotFoundError as e:
+            return 409, {"error": str(e)}
+        params = tree["params"] if isinstance(tree, dict) and "params" in tree else tree
+        servable.refresh(params=params)
+        servable.restored_step = step
+        return 200, {
+            "name": name,
+            "restored_step": step,
+            "num_traces": servable.num_traces,
+            "recompiled": servable.num_traces != traces_before,
+        }
+
+    def _device_loss(self, body: Dict[str, Any]) -> tuple:
+        """Simulated device loss: report the largest viable mesh for the
+        survivors (the elastic re-mesh `restore(..., shardings=...)` path)."""
+        try:
+            n_hosts_alive = int(body["n_hosts_alive"])
+        except (KeyError, TypeError, ValueError):
+            return 400, {"error": "missing/invalid 'n_hosts_alive'"}
+        plan = plan_remesh(
+            n_hosts_alive,
+            chips_per_host=int(body.get("chips_per_host", self.chips_per_host)),
+            model_parallelism=int(
+                body.get("model_parallelism", self.model_parallelism)
+            ),
+        )
+        if plan is None:
+            return 507, {
+                "error": "no viable mesh: survivors cannot fit one model replica",
+                "n_hosts_alive": n_hosts_alive,
+            }
+        plan = dict(plan)
+        plan["mesh_shape"] = list(plan["mesh_shape"])
+        plan["axes"] = list(plan["axes"])
+        return 200, {"plan": plan, "models": sorted(self.models)}
+
+
+def _make_handler(server: InferenceServer):
+    class Handler(BaseHTTPRequestHandler):
+        # one InferenceServer per handler class — closure, not global state
+        def _send(self, status: int, payload: Dict[str, Any]) -> None:
+            data = json.dumps(payload).encode()
+            self.send_response(status)
+            self.send_header("Content-Type", "application/json")
+            self.send_header("Content-Length", str(len(data)))
+            if status == 429 and "retry_after_ms" in payload:
+                # Retry-After is whole seconds; round up so clients never
+                # retry into the same overloaded window
+                self.send_header(
+                    "Retry-After",
+                    str(max(1, int(-(-payload["retry_after_ms"] // 1000)))),
+                )
+            self.end_headers()
+            self.wfile.write(data)
+
+        def do_GET(self):  # noqa: N802 — BaseHTTPRequestHandler API
+            try:
+                status, payload = server.handle_get(self.path)
+            except Exception as e:  # noqa: BLE001 — fail the request, not the server
+                status, payload = 500, {"error": str(e)}
+            self._send(status, payload)
+
+        def do_POST(self):  # noqa: N802 — BaseHTTPRequestHandler API
+            try:
+                length = int(self.headers.get("Content-Length", 0))
+                raw = self.rfile.read(length) if length else b"{}"
+                body = json.loads(raw or b"{}")
+                if not isinstance(body, dict):
+                    raise ValueError("body must be a JSON object")
+            except Exception as e:  # noqa: BLE001
+                self._send(400, {"error": f"bad request body: {e}"})
+                return
+            try:
+                status, payload = server.handle_post(self.path, body)
+            except Exception as e:  # noqa: BLE001
+                status, payload = 500, {"error": str(e)}
+            self._send(status, payload)
+
+        def log_message(self, fmt, *args):  # silence per-request stderr spam
+            pass
+
+    return Handler

@@ -1,0 +1,188 @@
+"""StreamingTrainer: the background half of the streaming inference
+service — posteriors that never go stale.
+
+The serve engine ships a frozen artifact; this closes the production loop
+around it:
+
+    data stream --> Prefetcher --> incremental SVI steps   (trainer thread)
+                                       | every ckpt_every steps
+                                       v
+                              AsyncCheckpointer.save_async
+                                       | on_commit(step)   (writer thread)
+                                       v
+                     restore_latest -> servable.refresh(params=...)
+                                       |
+                                       v
+                        live traffic sees the new posterior
+
+Hot-swap contract: the servable's params ride the engine's *traced* jit
+signature, so `refresh()` with a same-shaped tree swaps what every compiled
+bucket executable computes with — zero recompiles (``num_traces`` is
+unchanged) and zero dropped requests (in-flight batches finish on whichever
+params they were submitted against; there is no tear-down). The
+refresh-under-traffic test and `benchmarks/serve_bench.py` assert both.
+
+The trainer holds the SVI compile-once contract too: every step goes
+through `svi.update_jit` with same-shaped batches, so `svi.num_traces`
+stays 1 for the life of the stream.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Callable, Iterable, Optional
+
+import jax
+
+from ..checkpoint.store import AsyncCheckpointer, restore_latest
+from ..infer.svi import SVI, SVIState
+
+
+def hot_swap_on_commit(servable, directory: str,
+                       log: Optional[Callable[[str], None]] = None):
+    """The standard commit callback: restore the just-committed checkpoint
+    and hot-swap it into `servable` (an svi/checkpoint `ServableModel`).
+    Runs on the checkpoint writer thread, strictly after the manifest
+    rename, so the server can never observe a torn checkpoint."""
+
+    def on_commit(step: int) -> None:
+        _, tree = restore_latest(directory)
+        params = tree["params"] if isinstance(tree, dict) and "params" in tree else tree
+        servable.refresh(params=params)
+        servable.restored_step = step
+        if log is not None:
+            log(f"hot-swapped '{servable.name}' to checkpoint step {step}")
+
+    return on_commit
+
+
+class StreamingTrainer:
+    """Run incremental SVI steps over a batch stream on a background
+    thread, checkpointing asynchronously and firing ``on_commit`` after
+    each committed step (see `hot_swap_on_commit`).
+
+    Parameters
+    ----------
+    svi: the `SVI` engine (its `update_jit` is the hot loop).
+    stream: iterable of batch pytrees; each yields the positional argument
+        of one ``svi.update_jit(state, batch)`` call (wrap it in
+        `data.pipeline.Prefetcher` to overlap generation with the step).
+        A finite stream ends the trainer cleanly.
+    state: initial `SVIState` (from ``svi.init``); required.
+    directory: checkpoint directory (`checkpoint.store` layout).
+    ckpt_every: checkpoint cadence in steps; the final step always
+        checkpoints so a finite stream's last posterior is never lost.
+    on_commit: ``f(step)`` run on the writer thread after each commit.
+    max_steps: stop after this many steps even on an infinite stream.
+    """
+
+    def __init__(
+        self,
+        svi: SVI,
+        stream: Iterable[Any],
+        *,
+        state: SVIState,
+        directory: str,
+        ckpt_every: int = 50,
+        max_keep: int = 3,
+        on_commit: Optional[Callable[[int], None]] = None,
+        max_steps: Optional[int] = None,
+    ):
+        if ckpt_every < 1:
+            raise ValueError("ckpt_every must be >= 1")
+        self.svi = svi
+        self.stream = stream
+        self.state = state
+        self.directory = directory
+        self.ckpt_every = ckpt_every
+        self.on_commit = on_commit
+        self.max_steps = max_steps
+        self.checkpointer = AsyncCheckpointer(directory, max_keep=max_keep)
+        self.steps_done = 0
+        self.last_loss: Optional[float] = None
+        self.last_committed_step: Optional[int] = None
+        self.error: Optional[BaseException] = None
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    # -- lifecycle -----------------------------------------------------------
+    def start(self) -> "StreamingTrainer":
+        if self._thread is not None:
+            raise RuntimeError("trainer already started")
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self, timeout: Optional[float] = 30.0) -> None:
+        """Signal the loop to stop after the current step, then wait for the
+        final checkpoint to commit (idempotent)."""
+        self._stop.set()
+        self.join(timeout)
+
+    def join(self, timeout: Optional[float] = None) -> None:
+        if self._thread is not None:
+            self._thread.join(timeout)
+        if self.error is not None:
+            raise self.error
+
+    def wait_for_commit(self, step: Optional[int] = None,
+                        timeout: float = 30.0) -> int:
+        """Block until a checkpoint at >= `step` (default: any) has
+        committed; returns the committed step. Test/benchmark helper."""
+        deadline = time.perf_counter() + timeout
+        while time.perf_counter() < deadline:
+            done = self.last_committed_step
+            if done is not None and (step is None or done >= step):
+                return done
+            if self.error is not None:
+                raise self.error
+            time.sleep(0.005)
+        raise TimeoutError(
+            f"no checkpoint commit at step >= {step} within {timeout}s"
+        )
+
+    def __enter__(self) -> "StreamingTrainer":
+        return self.start()
+
+    def __exit__(self, *exc) -> bool:
+        self.stop()
+        return False
+
+    # -- the loop ------------------------------------------------------------
+    def _checkpoint(self, step: int) -> None:
+        # the servable consumes *unconstrained* optimizer params (what
+        # `ServableModel.from_svi` / `from_checkpoint` expect), nested under
+        # "params" so full-state checkpoints stay distinguishable
+        params = self.svi.optim.get_params(self.state.optim_state)
+
+        def commit(committed_step: int) -> None:
+            if self.on_commit is not None:
+                self.on_commit(committed_step)
+            self.last_committed_step = committed_step
+
+        self.checkpointer.save_async(step, {"params": params}, on_commit=commit)
+
+    def _run(self) -> None:
+        try:
+            stepped_since_ckpt = False
+            for batch in self.stream:
+                if self._stop.is_set():
+                    break
+                if self.max_steps is not None and self.steps_done >= self.max_steps:
+                    break
+                self.state, loss = self.svi.update_jit(self.state, batch)
+                self.steps_done += 1
+                stepped_since_ckpt = True
+                if self.steps_done % self.ckpt_every == 0:
+                    # block on the loss first: update_jit is async-dispatched,
+                    # and snapshotting params mid-donation would be a race
+                    self.last_loss = float(jax.block_until_ready(loss))
+                    self._checkpoint(self.steps_done)
+                    stepped_since_ckpt = False
+                else:
+                    self.last_loss = float(loss)
+            if stepped_since_ckpt:
+                self._checkpoint(self.steps_done)
+            self.checkpointer.wait()
+        except BaseException as e:  # noqa: BLE001 — surfaced via join()
+            self.error = e

@@ -123,7 +123,7 @@ run_docs() {
     python -m pytest -q --doctest-modules \
         src/repro/infer/mcmc.py src/repro/infer/diagnostics.py \
         src/repro/infer/predictive.py src/repro/infer/autoguide.py \
-        src/repro/serve/engine.py
+        src/repro/serve/engine.py src/repro/settings.py
     python -m doctest docs/inference.md docs/backends.md docs/enumeration.md \
         docs/kernels.md docs/serving.md
 }
@@ -136,6 +136,10 @@ run_examples() {
     python examples/eight_schools.py --chains 2 --warmup 300 --samples 300
     python examples/dmm.py --steps 2
     python -m repro.launch.serve posterior --smoke --requests 12
+    # streaming service end-to-end: background trainer + hot swaps under
+    # live HTTP traffic; exits nonzero if the zero-drop/zero-recompile
+    # contract breaks
+    python -m repro.launch.stream --smoke --deadline-ms 2000
 }
 
 run_bench() {

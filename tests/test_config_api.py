@@ -1,0 +1,158 @@
+"""The unified `repro.infer.config` annotation surface: identical traces to
+the legacy `config_enumerate`/`config_gaussian` wrappers, which survive as
+FutureWarning aliases.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import distributions as dist
+from repro.core import handlers
+from repro.core.handlers import config, config_enumerate, config_gaussian
+from repro.core import primitives as P
+from repro.infer import config as config_from_infer
+
+
+def mixed_model():
+    z = P.sample("z", dist.Categorical(probs=jnp.array([0.3, 0.7])))
+    x = P.sample("x", dist.Normal(jnp.float32(z), 1.0))
+    P.sample("obs", dist.Normal(x, 1.0), obs=jnp.float32(0.5))
+
+
+def get_trace(model):
+    return handlers.trace(
+        handlers.seed(model, jax.random.PRNGKey(0))
+    ).get_trace()
+
+
+def infer_annotations(tr):
+    return {
+        name: {k: v for k, v in site["infer"].items() if not k.startswith("_")}
+        for name, site in tr.nodes.items()
+        if site["type"] == "sample"
+    }
+
+
+class TestUnifiedConfig:
+    def test_exported_from_infer_and_core(self):
+        assert config_from_infer is config
+
+    def test_enumerate_annotates_discrete_sites_only(self):
+        tr = get_trace(config(mixed_model, enumerate=True))
+        ann = infer_annotations(tr)
+        assert ann["z"] == {"enumerate": "parallel"}
+        assert "enumerate" not in ann["x"]
+        assert ann["obs"] == {}
+
+    def test_marginalize_annotates_gaussian_sites_only(self):
+        tr = get_trace(config(mixed_model, marginalize="gaussian"))
+        ann = infer_annotations(tr)
+        assert ann["x"] == {"marginalize": "gaussian"}
+        assert "marginalize" not in ann["z"]
+        assert ann["obs"] == {}  # observed sites untouched
+
+    def test_combined_enumerate_and_marginalize(self):
+        tr = get_trace(config(mixed_model, enumerate=True, marginalize=True))
+        ann = infer_annotations(tr)
+        assert ann["z"] == {"enumerate": "parallel"}
+        assert ann["x"] == {"marginalize": "gaussian"}
+
+    def test_sites_restricts_annotation(self):
+        def two_normals():
+            P.sample("a", dist.Normal(0.0, 1.0))
+            P.sample("b", dist.Normal(0.0, 1.0))
+
+        tr = get_trace(config(two_normals, marginalize="gaussian", sites=["a"]))
+        ann = infer_annotations(tr)
+        assert ann["a"] == {"marginalize": "gaussian"}
+        assert ann["b"] == {}
+
+    def test_naming_non_gaussian_site_raises(self):
+        with pytest.raises(ValueError, match="Gaussian-marginalized"):
+            get_trace(config(mixed_model, marginalize="gaussian", sites=["z"]))
+
+    def test_decorator_form(self):
+        @config(enumerate=True)
+        def model():
+            P.sample("z", dist.Categorical(probs=jnp.array([0.5, 0.5])))
+
+        ann = infer_annotations(get_trace(model))
+        assert ann["z"] == {"enumerate": "parallel"}
+
+    def test_custom_config_fn_composes(self):
+        tr = get_trace(config(
+            mixed_model, enumerate=True,
+            config_fn=lambda msg: {"tag": msg["name"]},
+        ))
+        assert tr.nodes["x"]["infer"]["tag"] == "x"
+        assert tr.nodes["z"]["infer"]["enumerate"] == "parallel"
+
+    def test_requires_at_least_one_option(self):
+        with pytest.raises(ValueError, match="at least one"):
+            config(mixed_model)
+
+    def test_unknown_strategies_rejected(self):
+        with pytest.raises(NotImplementedError, match="sequential"):
+            config(mixed_model, enumerate="sequential")
+        with pytest.raises(NotImplementedError, match="laplace"):
+            config(mixed_model, marginalize="laplace")
+
+    def test_explicit_site_annotation_wins(self):
+        def model():
+            P.sample("z", dist.Categorical(probs=jnp.array([0.5, 0.5])),
+                     infer={"enumerate": "custom"})
+
+        tr = get_trace(config(model, enumerate=True))
+        assert tr.nodes["z"]["infer"]["enumerate"] == "custom"
+
+
+class TestDeprecatedAliases:
+    def test_config_enumerate_warns_and_matches(self):
+        with pytest.warns(FutureWarning, match="config_enumerate"):
+            legacy = config_enumerate(mixed_model)
+        new = config(mixed_model, enumerate=True)
+        assert infer_annotations(get_trace(legacy)) == infer_annotations(
+            get_trace(new)
+        )
+
+    def test_config_gaussian_warns_and_matches(self):
+        with pytest.warns(FutureWarning, match="config_gaussian"):
+            legacy = config_gaussian(mixed_model)
+        new = config(mixed_model, marginalize="gaussian")
+        assert infer_annotations(get_trace(legacy)) == infer_annotations(
+            get_trace(new)
+        )
+
+    def test_alias_decorator_forms(self):
+        with pytest.warns(FutureWarning):
+            @config_enumerate
+            def m1():
+                P.sample("z", dist.Categorical(probs=jnp.array([0.5, 0.5])))
+
+        with pytest.warns(FutureWarning):
+            @config_gaussian(sites=["x"])
+            def m2():
+                P.sample("x", dist.Normal(0.0, 1.0))
+
+        assert infer_annotations(get_trace(m1))["z"]["enumerate"] == "parallel"
+        assert infer_annotations(get_trace(m2))["x"]["marginalize"] == "gaussian"
+
+    def test_elbo_identical_through_alias_and_new_api(self):
+        """The regression that matters: identical traces -> identical ELBO."""
+        from repro.infer import SVI, Trace_ELBO, TraceEnum_ELBO, AutoNormal
+        from repro import optim
+
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", FutureWarning)
+            legacy = config_enumerate(mixed_model)
+        new = config(mixed_model, enumerate=True)
+        losses = []
+        for model in (legacy, new):
+            guide = AutoNormal(lambda: P.sample("x", dist.Normal(0.0, 1.0)))
+            svi = SVI(model, guide, optim.Adam(0.1), TraceEnum_ELBO())
+            state = svi.init(jax.random.PRNGKey(0))
+            losses.append(float(svi.evaluate(state)))
+        assert losses[0] == losses[1]

@@ -1,0 +1,59 @@
+"""`repro.retrace`: one `num_traces` contract shared by every compiled
+engine — SVI, MCMC, Predictive, CompiledServable, ServableModel."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import distributions as dist, optim
+from repro.core import primitives as P
+from repro.infer import SVI, AutoNormal, MCMC, NUTS, Predictive, Trace_ELBO
+from repro.retrace import RetraceCounted, assert_num_traces, num_traces
+from repro.serve import CompiledServable, ServableModel
+
+
+def model(x, y=None):
+    w = P.sample("w", dist.Normal(jnp.zeros(2), 1.0).to_event(1))
+    with P.plate("B", x.shape[0]):
+        P.sample("y", dist.Normal(x @ w, 0.1), obs=y)
+
+
+X = jnp.ones((4, 2))
+Y = jnp.zeros(4)
+
+
+def test_every_engine_satisfies_the_protocol():
+    guide = AutoNormal(model)
+    svi = SVI(model, guide, optim.Adam(0.1), Trace_ELBO())
+    engines = [
+        svi,
+        MCMC(NUTS(model), num_warmup=1, num_samples=1),
+        Predictive(model, guide=guide, params={}, num_samples=1),
+        CompiledServable(lambda key, batch: batch, max_batch=4),
+        ServableModel("t", lambda key, batch: batch, max_batch=4),
+    ]
+    for eng in engines:
+        assert isinstance(eng, RetraceCounted), type(eng).__name__
+        assert num_traces(eng) == 0  # nothing compiled yet
+
+
+def test_svi_counter_is_the_update_jit_cache():
+    svi = SVI(model, AutoNormal(model), optim.Adam(0.1), Trace_ELBO())
+    state = svi.init(jax.random.PRNGKey(0), X, y=Y)
+    assert svi.num_traces == 0
+    for _ in range(3):
+        state, _ = svi.update_jit(state, X, y=Y)
+    assert_num_traces(svi, 1, context="same-shaped steps")
+
+
+def test_assert_num_traces_message():
+    svi = SVI(model, AutoNormal(model), optim.Adam(0.1), Trace_ELBO())
+    with pytest.raises(AssertionError, match="recompiling"):
+        assert_num_traces(svi, 5)
+
+
+def test_num_traces_validates_type():
+    class Broken:
+        num_traces = "many"
+
+    with pytest.raises(TypeError, match="non-negative int"):
+        num_traces(Broken())

@@ -1,0 +1,619 @@
+"""Streaming inference service: prefetching pipeline, background trainer,
+hot-swap-under-traffic contract, deadline load shedding, and the HTTP
+front end. The tentpole property — refresh under live traffic drops zero
+requests and never recompiles — is asserted end-to-end here.
+"""
+import json
+import tempfile
+import threading
+import time
+import urllib.error
+import urllib.request
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.checkpoint.store import AsyncCheckpointer, restore_latest
+from repro.data.pipeline import (
+    Prefetcher,
+    RegressionStream,
+    RegressionStreamConfig,
+)
+from repro.infer import SVI, AutoDelta, Trace_ELBO
+from repro.launch.stream import _stream_model
+from repro.retrace import assert_num_traces
+from repro.serve import (
+    CompiledServable,
+    InferenceServer,
+    LoadShedError,
+    MicroBatcher,
+    ServableModel,
+    StreamingTrainer,
+    hot_swap_on_commit,
+)
+
+DIM = 4
+
+
+def make_stream(drift=0.0, batch=32, max_steps=None):
+    return RegressionStream(
+        RegressionStreamConfig(dim=DIM, batch=batch, drift=drift),
+        max_steps=max_steps,
+    )
+
+
+def make_svi_servable(name="stream-test", max_batch=16, steps=3):
+    """A small trained artifact: (svi, state, servable) triple."""
+    stream = make_stream()
+    guide = AutoDelta(_stream_model)
+    svi = SVI(_stream_model, guide, optim.Adam(0.05), Trace_ELBO())
+    state = svi.init(jax.random.PRNGKey(0), stream.batch(0))
+    for i in range(steps):
+        state, _ = svi.update_jit(state, stream.batch(i))
+    params = svi.optim.get_params(state.optim_state)
+    servable = ServableModel.from_svi(
+        name, _stream_model, guide, params,
+        num_samples=1, return_sites=["mu"], max_batch=max_batch,
+    )
+    return svi, state, servable
+
+
+def expected_mu(params, x):
+    """AutoDelta serving is deterministic: mu == x @ w_loc + b_loc."""
+    return np.asarray(x) @ np.asarray(params["auto_w_loc"]) + np.asarray(
+        params["auto_b_loc"]
+    )
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+
+class TestRegressionStream:
+    def test_deterministic_per_step(self):
+        a, b = make_stream(drift=0.01), make_stream(drift=0.01)
+        for step in (0, 3, 17):
+            np.testing.assert_array_equal(a.batch(step)["x"], b.batch(step)["x"])
+            np.testing.assert_array_equal(a.batch(step)["y"], b.batch(step)["y"])
+
+    def test_shapes_and_dtypes(self):
+        batch = make_stream(batch=8).batch(0)
+        assert batch["x"].shape == (8, DIM) and batch["x"].dtype == jnp.float32
+        assert batch["y"].shape == (8,) and batch["y"].dtype == jnp.float32
+
+    def test_drift_rotates_true_weights(self):
+        s = make_stream(drift=0.05)
+        w0, w100 = s.true_weights(0), s.true_weights(100)
+        assert not np.allclose(w0, w100)
+        # rotation: norm preserved, untouched coords identical
+        assert np.linalg.norm(w0) == pytest.approx(np.linalg.norm(w100), rel=1e-5)
+        np.testing.assert_array_equal(w0[2:], w100[2:])
+
+    def test_zero_drift_is_stationary(self):
+        s = make_stream(drift=0.0)
+        np.testing.assert_array_equal(s.true_weights(0), s.true_weights(500))
+
+    def test_finite_iteration(self):
+        assert len(list(make_stream(max_steps=5))) == 5
+
+
+class TestPrefetcher:
+    def test_yields_everything_in_order(self):
+        with Prefetcher(range(20), prefetch=3) as pf:
+            assert list(pf) == list(range(20))
+
+    def test_bounded_buffer_backpressures(self):
+        produced = []
+
+        def source():
+            for i in range(100):
+                produced.append(i)
+                yield i
+
+        pf = Prefetcher(source(), prefetch=2)
+        time.sleep(0.3)
+        # producer blocked on the bounded queue, not 100 items deep
+        assert len(produced) <= 4
+        pf.close()
+
+    def test_source_exception_reraises_on_consumer(self):
+        def bad():
+            yield 1
+            raise RuntimeError("stream died")
+
+        pf = Prefetcher(bad(), prefetch=2)
+        assert next(pf) == 1
+        with pytest.raises(RuntimeError, match="stream died"):
+            next(pf)
+
+    def test_close_unblocks_full_producer(self):
+        pf = Prefetcher(iter(int, 1), prefetch=1)  # infinite zeros
+        time.sleep(0.1)
+        pf.close()  # must not hang
+        with pytest.raises(StopIteration):
+            next(pf)
+
+    def test_prefetch_must_be_positive(self):
+        with pytest.raises(ValueError, match="prefetch"):
+            Prefetcher([1], prefetch=0)
+
+
+# ---------------------------------------------------------------------------
+# deadline-aware load shedding
+# ---------------------------------------------------------------------------
+
+
+def identity_engine(**kwargs):
+    def fn(key, batch):
+        return {"y": batch["x"] * 2.0}
+
+    return CompiledServable(fn, **kwargs)
+
+
+class TestLoadShedding:
+    def test_cold_queue_never_sheds(self):
+        with MicroBatcher(identity_engine(max_batch=8), max_wait_ms=5.0) as mb:
+            assert mb.projected_wait_ms() == 0.0
+            out = mb.predict({"x": jnp.zeros(2)}, timeout=30, deadline_ms=0.001)
+            assert out["y"].shape == (2,)
+        assert mb.stats.shed == 0
+
+    def test_sheds_when_projected_wait_exceeds_deadline(self):
+        mb = MicroBatcher(identity_engine(max_batch=8), max_wait_ms=5.0)
+        try:
+            # simulate a hot, backed-up batcher: 1s per batch, 32 rows queued
+            with mb._submit_lock:
+                mb._ewma_batch_s = 1.0
+                mb._pending_rows = 32
+            with pytest.raises(LoadShedError) as exc:
+                mb.submit({"x": jnp.zeros(2)}, deadline_ms=100.0)
+            err = exc.value
+            assert err.projected_wait_ms > err.deadline_ms == 100.0
+            assert err.retry_after_ms >= 1.0
+            assert mb.stats.shed == 1
+            assert mb.stats.summary()["shed_rate"] > 0
+            # no deadline -> always admitted, even under the same projection
+            with mb._submit_lock:
+                mb._pending_rows = 32  # reset (submit above didn't enqueue)
+            fut = mb.submit({"x": jnp.zeros(2)})
+            with mb._submit_lock:
+                mb._pending_rows = 2  # let the worker's accounting converge
+            assert fut.result(timeout=30)["y"].shape == (2,)
+        finally:
+            mb.close()
+
+    def test_projected_wait_scales_with_pending_rows(self):
+        mb = MicroBatcher(identity_engine(max_batch=8), max_wait_ms=2.0)
+        try:
+            with mb._submit_lock:
+                mb._ewma_batch_s = 0.1
+                mb._pending_rows = 8
+            low = mb.projected_wait_ms(1)
+            with mb._submit_lock:
+                mb._pending_rows = 80
+            high = mb.projected_wait_ms(1)
+            assert high > low > 0
+        finally:
+            with mb._submit_lock:
+                mb._pending_rows = 0
+            mb.close()
+
+    def test_pending_rows_return_to_zero_after_traffic(self):
+        with MicroBatcher(identity_engine(max_batch=8), max_wait_ms=2.0) as mb:
+            futs = [mb.submit({"x": jnp.zeros(3)}) for _ in range(6)]
+            for f in futs:
+                f.result(timeout=30)
+        assert mb._pending_rows == 0
+
+    def test_pending_rows_released_on_engine_error(self):
+        def bad(key, batch):
+            raise RuntimeError("kaboom")
+
+        with MicroBatcher(CompiledServable(bad, max_batch=8), max_wait_ms=2.0) as mb:
+            fut = mb.submit({"x": jnp.zeros(2)})
+            with pytest.raises(RuntimeError, match="kaboom"):
+                fut.result(timeout=30)
+            deadline = time.perf_counter() + 5.0
+            while mb._pending_rows and time.perf_counter() < deadline:
+                time.sleep(0.01)
+        assert mb._pending_rows == 0
+
+
+# ---------------------------------------------------------------------------
+# async checkpoint commit callback
+# ---------------------------------------------------------------------------
+
+
+class TestOnCommit:
+    def test_fires_after_commit_with_step(self):
+        committed = []
+        with tempfile.TemporaryDirectory() as d:
+            ck = AsyncCheckpointer(d)
+
+            def on_commit(step):
+                # the manifest rename happened strictly before this runs
+                got_step, tree = restore_latest(d)
+                committed.append((step, got_step, float(tree["v"])))
+
+            ck.save_async(7, {"v": jnp.float32(1.5)}, on_commit=on_commit)
+            ck.wait()
+        assert committed == [(7, 7, 1.5)]
+
+    def test_callback_error_surfaces_on_wait(self):
+        with tempfile.TemporaryDirectory() as d:
+            ck = AsyncCheckpointer(d)
+
+            def explode(step):
+                raise RuntimeError("commit hook failed")
+
+            ck.save_async(1, {"v": jnp.zeros(2)}, on_commit=explode)
+            with pytest.raises(RuntimeError, match="commit hook failed"):
+                ck.wait()
+
+
+# ---------------------------------------------------------------------------
+# streaming trainer
+# ---------------------------------------------------------------------------
+
+
+class TestStreamingTrainer:
+    def test_finite_stream_trains_and_commits(self):
+        svi, state, servable = make_svi_servable()
+        with tempfile.TemporaryDirectory() as d:
+            trainer = StreamingTrainer(
+                svi, make_stream(max_steps=25), state=state,
+                directory=d, ckpt_every=10,
+            )
+            trainer.start()
+            trainer.join(timeout=120)
+            assert trainer.steps_done == 25
+            assert trainer.last_loss is not None
+            # final partial window checkpointed too
+            step, tree = restore_latest(d)
+            assert step == 25
+            assert "params" in tree and "auto_w_loc" in tree["params"]
+            assert trainer.last_committed_step == 25
+        # the hot loop compiled exactly once across all 25 steps
+        assert_num_traces(svi, 1, context="trainer hot loop")
+
+    def test_hot_swap_on_commit_refreshes_servable(self):
+        svi, state, servable = make_svi_servable()
+        x = np.ones((2, DIM), np.float32)
+        before = servable(jax.random.PRNGKey(0), {"x": jnp.asarray(x)})
+        with tempfile.TemporaryDirectory() as d:
+            trainer = StreamingTrainer(
+                svi, make_stream(max_steps=20), state=state, directory=d,
+                ckpt_every=10, on_commit=hot_swap_on_commit(servable, d),
+            )
+            trainer.start()
+            committed = trainer.wait_for_commit(timeout=60)
+            assert committed >= 10
+            trainer.join(timeout=60)
+            assert servable.restored_step == 20
+            # served output now reflects the *trained* params exactly
+            _, tree = restore_latest(d)
+            after = servable(jax.random.PRNGKey(0), {"x": jnp.asarray(x)})
+            np.testing.assert_allclose(
+                np.asarray(after["mu"])[0], expected_mu(tree["params"], x),
+                rtol=1e-5,
+            )
+            assert not np.allclose(np.asarray(after["mu"]), np.asarray(before["mu"]))
+
+    def test_stop_mid_stream_checkpoints_final_state(self):
+        svi, state, _ = make_svi_servable()
+        with tempfile.TemporaryDirectory() as d:
+            trainer = StreamingTrainer(
+                svi, Prefetcher(make_stream(), prefetch=2), state=state,
+                directory=d, ckpt_every=10_000,  # never on cadence
+            )
+            with trainer:
+                deadline = time.perf_counter() + 30
+                while trainer.steps_done < 3 and time.perf_counter() < deadline:
+                    time.sleep(0.01)
+            assert trainer.steps_done >= 3
+            step, _ = restore_latest(d)
+            assert step == trainer.steps_done
+
+    def test_stream_error_raises_on_join(self):
+        svi, state, _ = make_svi_servable()
+
+        def bad():
+            yield make_stream().batch(0)
+            raise RuntimeError("pipeline died")
+
+        with tempfile.TemporaryDirectory() as d:
+            trainer = StreamingTrainer(svi, bad(), state=state, directory=d)
+            trainer.start()
+            with pytest.raises(RuntimeError, match="pipeline died"):
+                trainer.join(timeout=60)
+
+    def test_wait_for_commit_timeout(self):
+        svi, state, _ = make_svi_servable()
+        with tempfile.TemporaryDirectory() as d:
+            trainer = StreamingTrainer(
+                svi, make_stream(max_steps=0), state=state, directory=d,
+            )
+            with pytest.raises(TimeoutError):
+                trainer.wait_for_commit(timeout=0.05)
+
+    def test_ckpt_every_validated(self):
+        svi, state, _ = make_svi_servable()
+        with pytest.raises(ValueError, match="ckpt_every"):
+            StreamingTrainer(svi, [], state=state, directory="/tmp/x", ckpt_every=0)
+
+
+# ---------------------------------------------------------------------------
+# THE tentpole property: refresh under live traffic
+# ---------------------------------------------------------------------------
+
+
+class TestRefreshUnderTraffic:
+    def test_bucket_sized_weak_typed_batch_does_not_retrace(self):
+        """A request exactly at bucket size skips the pad copy; pad_leading
+        must still canonicalize its dtype (jnp.pad drops weak_type) so the
+        bucket's aval never depends on whether padding occurred."""
+        sv = CompiledServable(lambda key, batch: batch["x"] * 2.0, max_batch=8)
+        sv(jax.random.PRNGKey(0), {"x": jnp.ones((3, 2))})  # padded to bucket 4
+        assert sv.num_traces == 1
+        # weak-typed (python-scalar fill) batch already at bucket size
+        sv(jax.random.PRNGKey(1), {"x": jnp.full((4, 2), 7.0)})
+        assert_num_traces(sv, 1, context="weak-typed bucket-sized batch")
+
+    def test_zero_drops_zero_recompiles_and_new_params_serve(self):
+        """Concurrent clients hammer the batcher while refresh() hot-swaps
+        params mid-stream. Contract: every request completes (no drops, no
+        errors), nothing recompiles (num_traces is unchanged), and requests
+        after the swap serve the NEW posterior."""
+        _, _, servable = make_svi_servable(max_batch=16)
+        old_params = dict(servable.engine.state["params"])
+        new_params = {
+            "auto_w_loc": jnp.asarray(np.arange(DIM, dtype=np.float32)),
+            "auto_b_loc": jnp.float32(-3.0),
+        }
+        x = np.eye(DIM, dtype=np.float32)[:2]  # 2 rows, rank-revealing
+        mu_old = expected_mu(old_params, x)
+        mu_new = expected_mu(new_params, x)
+        assert not np.allclose(mu_old, mu_new)
+
+        n_clients, n_requests = 6, 12
+        results = [[None] * n_requests for _ in range(n_clients)]
+        errors = []
+        swapped = threading.Event()
+
+        with MicroBatcher(servable, max_wait_ms=1.0) as mb:
+            # warm every bucket the traffic can touch before the clock starts
+            for rows in range(1, n_clients * 2 + 1):
+                mb.predict({"x": jnp.zeros((rows, DIM))}, timeout=60)
+            traces_before = servable.num_traces
+
+            def client(cid):
+                for i in range(n_requests):
+                    try:
+                        out = mb.predict({"x": jnp.asarray(x)}, timeout=60)
+                        results[cid][i] = (swapped.is_set(), np.asarray(out["mu"])[0])
+                    except Exception as e:  # noqa: BLE001 — contract: none
+                        errors.append(e)
+
+            threads = [threading.Thread(target=client, args=(c,)) for c in range(n_clients)]
+            for t in threads:
+                t.start()
+            time.sleep(0.05)  # let traffic build up mid-flight
+            servable.refresh(params=new_params)
+            swapped.set()
+            for t in threads:
+                t.join()
+
+        assert errors == []
+        flat = [r for row in results for r in row]
+        assert all(r is not None for r in flat)  # zero drops
+        # zero recompiles across the swap
+        assert_num_traces(servable, traces_before, context="hot swap")
+        assert servable.num_traces == len(servable.buckets_touched)
+        # every response is exactly one of the two posteriors (never torn),
+        # and responses provably *after* the swap are the new one
+        for after_swap, mu in flat:
+            is_old = np.allclose(mu, mu_old, atol=1e-5)
+            is_new = np.allclose(mu, mu_new, atol=1e-5)
+            assert is_old or is_new
+        post_swap = [mu for after_swap, mu in flat if after_swap]
+        assert post_swap, "no requests observed after the swap"
+        np.testing.assert_allclose(post_swap[-1], mu_new, atol=1e-5)
+
+    def test_refresh_rejects_unknown_state_key(self):
+        _, _, servable = make_svi_servable()
+        with pytest.raises(KeyError, match="unknown state key"):
+            servable.refresh(samples={})
+
+
+# ---------------------------------------------------------------------------
+# concurrent tracing (the bug the thread-local handler stack fixes)
+# ---------------------------------------------------------------------------
+
+
+class TestConcurrentTracing:
+    def test_parallel_model_traces_do_not_interleave(self):
+        """Regression: with a process-global handler stack, concurrent
+        traces corrupt each other ("duplicate site name" errors). Each
+        thread must get its own Poutine stack."""
+        from repro.core import handlers
+
+        errors = []
+        barrier = threading.Barrier(8)
+
+        def worker(seed):
+            try:
+                barrier.wait(timeout=30)
+                for i in range(20):
+                    batch = make_stream().batch(i % 3)
+                    tr = handlers.trace(
+                        handlers.seed(_stream_model, jax.random.PRNGKey(seed))
+                    ).get_trace(batch)
+                    assert set(tr.nodes) >= {"w", "b", "mu", "y"}
+            except Exception as e:  # noqa: BLE001
+                errors.append(e)
+
+        threads = [threading.Thread(target=worker, args=(s,)) for s in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert errors == []
+
+
+# ---------------------------------------------------------------------------
+# HTTP front end
+# ---------------------------------------------------------------------------
+
+
+def http_post(address, path, payload, timeout=60.0):
+    req = urllib.request.Request(
+        address + path, data=json.dumps(payload).encode(),
+        headers={"Content-Type": "application/json"}, method="POST",
+    )
+    try:
+        with urllib.request.urlopen(req, timeout=timeout) as resp:
+            return resp.status, json.loads(resp.read()), dict(resp.headers)
+    except urllib.error.HTTPError as e:
+        return e.code, json.loads(e.read() or b"{}"), dict(e.headers)
+
+
+def http_get(address, path, timeout=30.0):
+    try:
+        with urllib.request.urlopen(address + path, timeout=timeout) as resp:
+            return resp.status, json.loads(resp.read())
+    except urllib.error.HTTPError as e:
+        return e.code, json.loads(e.read() or b"{}")
+
+
+@pytest.fixture(scope="module")
+def live_server():
+    _, _, servable = make_svi_servable(name="reg", max_batch=16)
+    server = InferenceServer({"reg": servable}, max_wait_ms=1.0)
+    with server:
+        yield server, servable
+
+
+class TestInferenceServer:
+    def test_healthz_and_registry(self, live_server):
+        server, _ = live_server
+        status, body = http_get(server.address, "/healthz")
+        assert status == 200 and body["ok"] and body["models"] == ["reg"]
+        status, body = http_get(server.address, "/v1/models")
+        assert status == 200
+        (info,) = body["models"]
+        assert info["name"] == "reg" and info["kind"] == "svi"
+        assert info["num_traces"] == len(info["buckets"]) or info["num_traces"] >= 0
+
+    def test_predict_roundtrip_deterministic(self, live_server):
+        server, servable = live_server
+        x = np.eye(DIM, dtype=np.float32)[:3]
+        status, body, _ = http_post(
+            server.address, "/v1/models/reg:predict", {"inputs": {"x": x.tolist()}}
+        )
+        assert status == 200
+        mu = np.asarray(body["outputs"]["mu"])[0]
+        np.testing.assert_allclose(
+            mu, expected_mu(servable.engine.state["params"], x), rtol=1e-5
+        )
+
+    def test_predict_bad_requests(self, live_server):
+        server, _ = live_server
+        status, body, _ = http_post(server.address, "/v1/models/reg:predict", {})
+        assert status == 400 and "inputs" in body["error"]
+        status, body, _ = http_post(
+            server.address, "/v1/models/nope:predict", {"inputs": [[0.0] * DIM]}
+        )
+        assert status == 404
+        # rows > max_batch -> split-client-side ValueError -> 400
+        big = np.zeros((64, DIM)).tolist()
+        status, body, _ = http_post(
+            server.address, "/v1/models/reg:predict", {"inputs": {"x": big}}
+        )
+        assert status == 400 and "max_batch" in body["error"]
+
+    def test_stats_route(self, live_server):
+        server, _ = live_server
+        status, body = http_get(server.address, "/v1/models/reg/stats")
+        assert status == 200
+        for key in ("requests", "p50_ms", "shed", "shed_rate", "num_traces",
+                    "projected_wait_ms"):
+            assert key in body
+
+    def test_deadline_shed_maps_to_429_with_retry_after(self, live_server):
+        server, _ = live_server
+        mb = server.batchers["reg"]
+        with mb._submit_lock:
+            saved = (mb._ewma_batch_s, mb._pending_rows)
+            mb._ewma_batch_s, mb._pending_rows = 5.0, 64
+        try:
+            status, body, headers = http_post(
+                server.address, "/v1/models/reg:predict",
+                {"inputs": {"x": [[0.0] * DIM]}, "deadline_ms": 10.0},
+            )
+        finally:
+            with mb._submit_lock:
+                mb._ewma_batch_s, mb._pending_rows = saved
+        assert status == 429
+        assert body["projected_wait_ms"] > body["deadline_ms"] == 10.0
+        assert int(headers["Retry-After"]) >= 1
+
+    def test_refresh_endpoint_hot_swaps_from_checkpoint(self, live_server):
+        server, servable = live_server
+        new_params = {
+            "auto_w_loc": jnp.ones(DIM) * 2.0,
+            "auto_b_loc": jnp.float32(1.0),
+        }
+        traces_before = servable.num_traces
+        with tempfile.TemporaryDirectory() as d:
+            ck = AsyncCheckpointer(d)
+            ck.save_async(42, {"params": new_params})
+            ck.wait()
+            status, body, _ = http_post(
+                server.address, "/admin/models/reg/refresh", {"directory": d}
+            )
+        assert status == 200
+        assert body["restored_step"] == 42
+        assert body["recompiled"] is False
+        assert body["num_traces"] == traces_before
+        x = np.ones((1, DIM), np.float32)
+        status, out, _ = http_post(
+            server.address, "/v1/models/reg:predict", {"inputs": {"x": x.tolist()}}
+        )
+        np.testing.assert_allclose(
+            np.asarray(out["outputs"]["mu"])[0], expected_mu(new_params, x), rtol=1e-5
+        )
+
+    def test_refresh_endpoint_empty_dir_is_409(self, live_server):
+        server, _ = live_server
+        with tempfile.TemporaryDirectory() as d:
+            status, body, _ = http_post(
+                server.address, "/admin/models/reg/refresh", {"directory": d}
+            )
+        assert status == 409
+
+    def test_device_loss_plan_and_507(self, live_server):
+        server, _ = live_server
+        status, body, _ = http_post(
+            server.address, "/admin/device-loss",
+            {"n_hosts_alive": 2, "chips_per_host": 4, "model_parallelism": 1},
+        )
+        assert status == 200
+        assert body["plan"]["chips_used"] <= 8
+        assert body["models"] == ["reg"]
+        # model parallelism wider than the survivors' chips: no viable mesh
+        status, body, _ = http_post(
+            server.address, "/admin/device-loss",
+            {"n_hosts_alive": 1, "chips_per_host": 2, "model_parallelism": 4},
+        )
+        assert status == 507
+        status, body, _ = http_post(server.address, "/admin/device-loss", {})
+        assert status == 400
+
+    def test_unknown_route_404(self, live_server):
+        server, _ = live_server
+        assert http_get(server.address, "/nope")[0] == 404
+        assert http_post(server.address, "/nope", {})[0] == 404
