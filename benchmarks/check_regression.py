@@ -69,12 +69,13 @@ def _knob_float(name: str, fallback: float) -> float:
 LOWER_BETTER = {"steady_ms", "step_ms", "p50_ms", "p99_ms",
                 "bucketed_ms_per_req", "swap_gap_ms"}
 HIGHER_BETTER = {"requests_per_sec", "rows_per_sec", "speedup_steady",
-                 "draws_per_sec", "ess_per_sec"}
+                 "draws_per_sec", "ess_per_sec", "steps_per_sec"}
 COLD_LOWER_BETTER = {"cold_s", "cold_compile_s", "viterbi_s"}
 # dimensionless [0,1] rates gated with a purely absolute slack — a relative
 # tolerance is meaningless when the baseline is 0.0 (zero requests shed)
 RATE_LOWER_BETTER = {"shed_rate"}
-IDENTITY_KEYS = ("T", "K", "dispatch", "bench", "chains", "mode", "scenario")
+IDENTITY_KEYS = ("T", "K", "dispatch", "bench", "chains", "mode", "scenario",
+                 "particles")
 
 
 def committed_baseline(name: str):

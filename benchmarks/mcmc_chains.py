@@ -6,8 +6,8 @@ single XLA call: `MCMC.num_traces` stays at 1 per run *regardless of
 num_samples* (no per-draw retracing, no per-draw host round-trip), and
 measures draws/sec as the chain count grows (vectorized chains are nearly
 free until the machine runs out of parallelism). Also asserts
-`chain_method="sharded"` is bit-identical to `"vectorized"` on the default
-mesh when it degenerates to one device.
+`mesh="auto"` (sharded chains) is bit-identical to `mesh=None` (local vmap)
+on the default mesh when it degenerates to one device.
 
 Run: PYTHONPATH=src python benchmarks/mcmc_chains.py [--smoke]
 (--smoke: CI-sized run — shorter warmup/collection, same retrace assertions)
@@ -77,7 +77,7 @@ def main(num_warmup: int = 200, smoke: bool = False, log=print):
     out = {}
     for method in ("vectorized", "sharded"):
         mcmc = MCMC(make_kernel(), num_warmup, 50 if smoke else 200, num_chains=4,
-                    chain_method=method)
+                    mesh=None if method == "vectorized" else "auto")
         mcmc.run(jax.random.PRNGKey(3), data)
         out[method] = mcmc.get_samples(group_by_chain=True)
     if jax.device_count() == 1:

@@ -6,7 +6,7 @@ which removes the funnel geometry that makes the centered version produce
 divergences, and run 4 NUTS chains with the multi-chain MCMC engine —
 warmup + collection compile to a single XLA call, and all chains step
 together through the fused batched driver (`REPRO_MCMC_FUSED=0` falls back
-to the per-chain vmap sampler; add `chain_method="sharded"` to spread
+to the per-chain vmap sampler; add `mesh="auto"` to spread
 chains across devices).
 
 Expected diagnostics for this setup (4 chains x 500 draws, seed 0, fused
@@ -62,7 +62,7 @@ def main(argv=None):
         num_warmup=args.warmup,
         num_samples=args.samples,
         num_chains=args.chains,
-        chain_method="sharded" if args.sharded else "vectorized",
+        mesh="auto" if args.sharded else None,
     )
     t0 = time.time()
     mcmc.run(jax.random.PRNGKey(0), Y, SIGMA)

@@ -289,7 +289,9 @@ class Multinomial(Distribution):
         raise NotImplementedError(
             "Multinomial support is combinatorially large (C(n+k-1, k-1) "
             "states) and cannot be enumerated; model the per-trial draws with "
-            "a plated Categorical instead."
+            "a plated Categorical instead, or — for sequential latents — "
+            "marginalize by sampling with `repro.infer.SMC` (particle "
+            "filtering does not need an enumerable support)."
         )
 
 
@@ -320,7 +322,8 @@ class Poisson(Distribution):
         raise NotImplementedError(
             "Poisson has countably infinite support and cannot be enumerated; "
             "truncate it to a Categorical over {0..N} (pick N from the rate's "
-            "tail mass) or marginalize by hand."
+            "tail mass), or marginalize by sampling — `repro.infer.SMC` "
+            "handles sequential discrete latents without enumeration."
         )
 
 
@@ -360,7 +363,9 @@ class Geometric(Distribution):
         raise NotImplementedError(
             "Geometric has countably infinite support {0, 1, 2, ...} and "
             "cannot be enumerated; truncate it to a Categorical over {0..N} "
-            "(N chosen so (1-p)^N is negligible) or marginalize by hand."
+            "(N chosen so (1-p)^N is negligible), or marginalize by sampling "
+            "— `repro.infer.SMC` handles sequential discrete latents "
+            "without enumeration."
         )
 
 
@@ -417,6 +422,7 @@ class NegativeBinomial(Distribution):
     def enumerate_support(self, expand=True):
         raise NotImplementedError(
             "NegativeBinomial has countably infinite support and cannot be "
-            "enumerated; truncate it to a Categorical over {0..N} or "
-            "marginalize by hand."
+            "enumerated; truncate it to a Categorical over {0..N}, or "
+            "marginalize by sampling — `repro.infer.SMC` handles sequential "
+            "discrete latents without enumeration."
         )

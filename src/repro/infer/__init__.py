@@ -16,11 +16,21 @@ from .traceenum_elbo import (
 )
 from .tracegraph_elbo import TraceGraph_ELBO
 from .importance import Importance
+from .combinators import (
+    ImportanceSampling,
+    compose,
+    extend,
+    primitive,
+    propose,
+    resample,
+)
 from .diagnostics import effective_sample_size, print_summary, split_rhat, summary
 from .mcmc import HMC, MCMC, NUTS
 from .predictive import Predictive
+from .smc import SMC, NestedVariational, SMCFilter, sequential_pair, smc_sweep
 from .svi import SVI, SVIRunner, SVIState
 from .util import initialize_model, log_density, potential_energy, substitute_params
+from ..retrace import InferenceEngine
 
 __all__ = [
     "AutoDelta",
@@ -43,10 +53,22 @@ __all__ = [
     "plan_cache_stats",
     "infer_discrete",
     "Importance",
+    "ImportanceSampling",
+    "InferenceEngine",
     "HMC",
     "MCMC",
     "NUTS",
+    "NestedVariational",
     "Predictive",
+    "SMC",
+    "SMCFilter",
+    "compose",
+    "extend",
+    "primitive",
+    "propose",
+    "resample",
+    "sequential_pair",
+    "smc_sweep",
     "SVI",
     "SVIRunner",
     "SVIState",

@@ -1,64 +1,39 @@
-"""Importance sampling with arbitrary guide proposals (paper §2: "Some
-inference algorithms in Pyro, such as SVI and importance sampling, can use
-arbitrary Pyro programs (called guides) as ... proposal distributions")."""
+"""Deprecated alias: importance sampling lives in `infer.combinators` now.
+
+`Importance` was the standalone engine; it is exactly the degenerate
+one-step `propose` of the combinator calculus, so the implementation moved
+to `combinators.ImportanceSampling` (same key structure, same weights,
+bit-for-bit — tests/test_engine_api.py pins the parity). This entry point
+survives as a FutureWarning alias; its `num_samples` kwarg maps onto the
+canonical `num_particles` spelling shared by the ELBOs and SMC.
+"""
 from __future__ import annotations
 
+import warnings
 from typing import Callable, Optional
 
-import jax
-import jax.numpy as jnp
-
-from ..core.handlers import replay, seed, trace
-from .util import log_mean_exp, substitute_params
+from .combinators import ImportanceSampling
 
 
-class Importance:
-    def __init__(self, model: Callable, guide: Optional[Callable] = None, num_samples: int = 100):
-        self.model = model
-        self.guide = guide
-        self.num_samples = num_samples
+class Importance(ImportanceSampling):
+    """Deprecated — use `repro.infer.ImportanceSampling`."""
 
-    def _single_weight(self, rng_key, params, args, kwargs):
-        if self.guide is not None:
-            key_g, key_m = jax.random.split(rng_key)
-            guide_tr = trace(seed(substitute_params(self.guide, params), key_g)).get_trace(
-                *args, **kwargs
-            )
-            model_tr = trace(
-                replay(seed(substitute_params(self.model, params), key_m), guide_tr)
-            ).get_trace(*args, **kwargs)
-            log_w = model_tr.log_prob_sum() - guide_tr.log_prob_sum(
-                lambda n, s: not s["is_observed"]
-            )
-        else:  # prior proposal: weight = likelihood
-            model_tr = trace(seed(substitute_params(self.model, params), rng_key)).get_trace(
-                *args, **kwargs
-            )
-            log_w = model_tr.log_prob_sum(lambda n, s: s["is_observed"])
-        latents = {
-            n: model_tr[n]["value"]
-            for n in model_tr.stochastic_nodes()
-        }
-        return log_w, latents
+    def __init__(
+        self,
+        model: Callable,
+        guide: Optional[Callable] = None,
+        num_samples: int = 100,
+        **kwargs,
+    ):
+        warnings.warn(
+            "Importance is deprecated; use repro.infer.ImportanceSampling"
+            "(model, guide, num_particles=...) — the one-step `propose` "
+            "combinator (see docs/inference.md).",
+            FutureWarning,
+            stacklevel=2,
+        )
+        super().__init__(model, guide, num_particles=num_samples, **kwargs)
 
-    def run(self, rng_key, *args, params=None, **kwargs):
-        params = params or {}
-        keys = jax.random.split(rng_key, self.num_samples)
-        log_weights, latents = jax.vmap(
-            lambda k: self._single_weight(k, params, args, kwargs)
-        )(keys)
-        self.log_weights = log_weights
-        self.latents = latents
-        return self
-
-    def log_evidence(self):
-        return log_mean_exp(self.log_weights)
-
-    def effective_sample_size(self):
-        log_norm = jax.scipy.special.logsumexp(self.log_weights)
-        w = jnp.exp(self.log_weights - log_norm)
-        return 1.0 / jnp.sum(w ** 2)
-
-    def resample(self, rng_key, num: int):
-        idx = jax.random.categorical(rng_key, self.log_weights, shape=(num,))
-        return jax.tree_util.tree_map(lambda x: x[idx], self.latents)
+    @property
+    def num_samples(self) -> int:
+        return self.num_particles

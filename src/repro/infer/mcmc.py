@@ -17,11 +17,13 @@ The `MCMC` driver runs `num_chains` chains initialized from split PRNG keys.
 Warmup (with windowed mass-matrix re-estimation) and collection each run
 inside a single `lax.scan`, so one `MCMC.run` issues a constant number of
 compiled calls regardless of `num_warmup`/`num_samples`
-(`benchmarks/mcmc_chains.py` asserts this). `chain_method="sharded"`
-additionally constrains the chain axis onto the mesh's data axes via
-`distributed.sharding.shard_chains`, which is a no-op transformation of the
-math — on a 1-device mesh the output is bit-for-bit identical to
-`"vectorized"`.
+(`benchmarks/mcmc_chains.py` asserts this). Passing `mesh=` (a Mesh, or
+``"auto"`` for the default 1-D device mesh) additionally constrains the
+chain axis onto the mesh's data axes via `distributed.sharding.shard_chains`,
+which is a no-op transformation of the math — on a 1-device mesh the output
+is bit-for-bit identical to the local-vmap default (`mesh=None`). The legacy
+`chain_method="vectorized"/"sharded"` spelling survives as a FutureWarning
+alias.
 
 Two interiors implement that contract. The default **fused** driver ravels
 all chains into one (num_chains, D) matrix and steps them together through
@@ -63,6 +65,7 @@ Example — two HMC chains on a conjugate model, grouped samples::
 from __future__ import annotations
 
 import math
+import warnings
 from functools import partial
 from typing import Any, Callable, NamedTuple, Optional, Tuple
 
@@ -839,13 +842,20 @@ class MCMC:
         over the chain axis, each chain adapts independently. Kept as the
         benchmark baseline.
 
-    chain_method:
-      * ``"vectorized"`` — chains ride a plain local `vmap` (default);
-      * ``"sharded"`` — identical computation, but the chain axis is
-        constrained onto the data axes of `mesh` (default: a 1-D mesh over
-        all local devices) via the PR-1 sharding rules, distributing chains
-        across devices. On a 1-device mesh this is bit-for-bit identical to
-        ``"vectorized"``.
+    mesh (the canonical sharding knob, shared with the ELBOs and SMC):
+      * ``None`` — chains ride a plain local `vmap` (default);
+      * ``"auto"`` — identical computation, but the chain axis is
+        constrained onto the data axes of a default 1-D mesh over all
+        local devices via the PR-1 sharding rules, distributing chains
+        across devices. On a 1-device mesh this is bit-for-bit identical
+        to ``mesh=None``;
+      * a `jax.sharding.Mesh` — same, on the given mesh.
+
+    chain_method (deprecated):
+      the pre-unification spelling. ``chain_method="vectorized"`` means
+      ``mesh=None``; ``chain_method="sharded"`` means ``mesh="auto"``
+      (or the explicitly passed mesh). Passing it emits a FutureWarning;
+      `self.chain_method` remains readable either way.
 
     Samples come back as ``{site: (num_chains, num_samples, ...)}`` via
     ``get_samples(group_by_chain=True)`` (flattened to
@@ -861,14 +871,35 @@ class MCMC:
         num_samples: int,
         num_chains: int = 1,
         thinning: int = 1,
-        chain_method: str = "vectorized",
+        chain_method: Optional[str] = None,
         mesh=None,
         fused: Optional[bool] = None,
     ):
-        if chain_method not in ("vectorized", "sharded"):
-            raise ValueError(
-                f"chain_method must be 'vectorized' or 'sharded', got {chain_method!r}"
+        if chain_method is not None:
+            warnings.warn(
+                "MCMC(chain_method=...) is deprecated; pass mesh= instead "
+                "(mesh=None for the local vmap, mesh='auto' or a "
+                "jax.sharding.Mesh to shard chains across devices).",
+                FutureWarning,
+                stacklevel=2,
             )
+            if chain_method not in ("vectorized", "sharded"):
+                raise ValueError(
+                    f"chain_method must be 'vectorized' or 'sharded', got {chain_method!r}"
+                )
+            if chain_method == "sharded":
+                mesh = "auto" if mesh is None else mesh
+            else:
+                # vectorized historically ignored any mesh argument
+                mesh = None
+        if isinstance(mesh, str):
+            if mesh != "auto":
+                raise ValueError(
+                    f"mesh must be None, 'auto', or a jax.sharding.Mesh, got {mesh!r}"
+                )
+            from ..distributed.sharding import default_mesh
+
+            mesh = default_mesh()
         if num_chains < 1:
             raise ValueError("num_chains must be >= 1")
         if fused is None:
@@ -881,12 +912,8 @@ class MCMC:
         self.num_samples = num_samples
         self.num_chains = num_chains
         self.thinning = thinning
-        self.chain_method = chain_method
-        if chain_method == "sharded" and mesh is None:
-            from ..distributed.sharding import default_mesh
-
-            mesh = default_mesh()
-        self.mesh = mesh if chain_method == "sharded" else None
+        self.mesh = mesh
+        self.chain_method = "sharded" if mesh is not None else "vectorized"
         self._samples = None  # {site: (C, S, ...)} constrained space
         self._extra_fields = None  # {field: (C, S)}
         self._last_state = None

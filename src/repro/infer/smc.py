@@ -1,0 +1,485 @@
+"""Sequential Monte Carlo over the sharded-particle substrate.
+
+The particle filter is a *composition* of the combinators in
+`infer.combinators`: the engine's one-step program is
+``resample(propose(primitive(step), primitive(proposal)))`` (or the bare
+``primitive(step)`` bootstrap filter when no proposal is given), and the
+sweep is a `lax.scan` of its population semantics. Particles ride the same
+`shard_particles`/``mesh=`` path the multi-particle ELBOs use — on a
+1-device mesh the sharded sweep is bit-for-bit the vectorized one.
+
+Model contract (the bootstrap-filter shape Pyro's SMCFilter uses):
+
+    init(xs_0, *args)        -> carry     # t = 0: prior + first observation
+    step(carry, xs_t, *args) -> carry     # t >= 1: transition + observation
+
+Both are ordinary repro programs; the returned carry (any array pytree) is
+the particle's state. Site names may repeat across time — every step runs
+in a fresh trace. Observations enter via ``obs=`` sites (their log-prob is
+the incremental weight) or explicit `P.factor` sites.
+
+Marginal likelihood: log Ẑ accumulates ``logsumexp(W) - log N`` at each
+resample event (where weights reset) plus a final flush, the standard
+adaptive-resampling estimator — unbiased in Ẑ for any ESS threshold.
+
+`NestedVariational` turns the same sweep into an SVI objective (maximize
+E[log Ẑ] over proposal parameters — the variational-SMC bound); SMC² needs
+no new machinery: keep an inner population in the outer carry and
+`P.factor` its per-step evidence increment (see tests/test_smc.py).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from ..core.messenger import Messenger
+from .combinators import (
+    Population,
+    Program,
+    StepAux,
+    effective_sample_size,
+    primitive,
+    propose,
+    resample,
+)
+from .elbo import ELBO
+
+
+class SMCResult(NamedTuple):
+    """One sweep's outcome: the final population, the marginal-likelihood
+    estimate, and the per-step history (a `StepAux` stacked over time —
+    leading axis T when the init row stacks with the step rows, else T-1
+    with ``includes_init=False``)."""
+
+    population: Population
+    log_evidence: jax.Array
+    history: StepAux
+    includes_init: bool
+
+
+def _build_programs(
+    model_init,
+    model_step,
+    proposal_init,
+    proposal_step,
+    ess_threshold,
+    resample_method,
+) -> Tuple[Program, Program]:
+    init_prog = (
+        propose(primitive(model_init), primitive(proposal_init))
+        if proposal_init is not None
+        else primitive(model_init)
+    )
+    inner = (
+        propose(primitive(model_step), primitive(proposal_step))
+        if proposal_step is not None
+        else primitive(model_step)
+    )
+    step_prog = resample(inner, ess_threshold=ess_threshold, method=resample_method)
+    return init_prog, step_prog
+
+
+def smc_sweep(
+    init_prog: Program,
+    step_prog: Program,
+    rng_key,
+    xs,
+    params=None,
+    args: Tuple = (),
+    *,
+    num_particles: int,
+    mesh=None,
+    particle_axis=None,
+) -> SMCResult:
+    """One full filtering sweep as a pure function (jit/vmap/grad-safe):
+    init on ``xs[0]``, then a `lax.scan` of the step program's population
+    semantics over ``xs[1:]``. Reused by the `SMC` engine, `SMCFilter`'s
+    offline path, and `NestedVariational`'s inner estimate."""
+    params = params or {}
+    leaves = jax.tree.leaves(xs)
+    if not leaves:
+        raise ValueError("xs must contain at least one observation array")
+    T = leaves[0].shape[0]
+    key_init, key_scan = jax.random.split(rng_key)
+    xs0 = jax.tree.map(lambda x: x[0], xs)
+    pop, aux0 = init_prog.init_population(
+        key_init,
+        params,
+        num_particles,
+        (xs0,) + tuple(args),
+        mesh=mesh,
+        particle_axis=particle_axis,
+    )
+
+    def body(carry, inp):
+        pop, log_z = carry
+        t, xs_t = inp
+        k = jax.random.fold_in(key_scan, t)
+        pop, aux = step_prog.run_population(
+            k,
+            params,
+            pop,
+            (xs_t,) + tuple(args),
+            mesh=mesh,
+            particle_axis=particle_axis,
+        )
+        return (pop, log_z + aux.log_z_incr), aux
+
+    ts = jnp.arange(1, T)
+    xs_rest = jax.tree.map(lambda x: x[1:], xs)
+    (pop, log_z), steps = jax.lax.scan(body, (pop, jnp.float32(0.0)), (ts, xs_rest))
+    log_evidence = (
+        log_z
+        + jax.scipy.special.logsumexp(pop.log_weights)
+        - jnp.log(jnp.float32(num_particles))
+    )
+    try:
+        # stack the t=0 row onto the scanned history when the init program
+        # produced the same latent structure as the steps (the bootstrap
+        # common case); heterogeneous inits keep a step-only history
+        history = jax.tree.map(lambda a, h: jnp.concatenate([a[None], h]), aux0, steps)
+        includes_init = True
+    except (ValueError, TypeError):
+        history, includes_init = steps, False
+    return SMCResult(pop, log_evidence, history, includes_init)
+
+
+def _weighted_means(latents, log_weights):
+    w = jax.nn.softmax(log_weights, axis=-1)
+
+    def mean(x):
+        # weights broadcast over trailing event dims: (..., N) x (..., N, E)
+        wx = w.reshape(w.shape + (1,) * (x.ndim - w.ndim)) * x
+        return jnp.sum(wx, axis=w.ndim - 1)
+
+    return jax.tree.map(mean, latents)
+
+
+class SMC:
+    """Particle-filter engine over the combinator calculus.
+
+    Parameters
+    ----------
+    model_init / model_step: the target programs (contract above).
+    proposal_init / proposal_step: optional learned/hand-built proposals;
+        each step becomes a `propose` instead of bootstrap prior sampling.
+    num_particles: population size N.
+    ess_threshold: resample when ESS < threshold * N (1.0 = always resample
+        on any weight imbalance — equal weights sit exactly at ESS == N and
+        never trigger; 0.0 = never resample).
+    resample_method: "systematic" (`ops.resample` kernel) or "multinomial";
+        default from the `REPRO_SMC_RESAMPLE` knob.
+    mesh / particle_axis: shard the particle axis like the ELBOs do.
+
+    The sweep compiles once (`num_traces == 1` across warmup + filtering for
+    same-shape observations — the MCMC/SVI retrace contract). Implements the
+    `InferenceEngine` protocol: `.run(key, xs, *args)` returns final-step
+    latent draws, `.get_samples(group_by_chain=...)` re-reads them, and the
+    weighted posterior lives in `.log_weights` / `.filtering_means()`.
+    """
+
+    def __init__(
+        self,
+        model_init: Callable,
+        model_step: Callable,
+        *,
+        proposal_init: Optional[Callable] = None,
+        proposal_step: Optional[Callable] = None,
+        num_particles: int = 1000,
+        ess_threshold: float = 0.5,
+        resample_method: Optional[str] = None,
+        mesh=None,
+        particle_axis=None,
+    ):
+        if num_particles < 1:
+            raise ValueError(f"num_particles must be >= 1, got {num_particles}")
+        self.num_particles = num_particles
+        self.mesh = mesh
+        self.particle_axis = particle_axis
+        self._init_prog, self._step_prog = _build_programs(
+            model_init, model_step, proposal_init, proposal_step,
+            ess_threshold, resample_method,
+        )
+        self.num_traces = 0
+        self._result: Optional[SMCResult] = None
+
+        def _sweep(key, xs, params, args):
+            self.num_traces += 1  # trace-time side effect (retrace detector)
+            return smc_sweep(
+                self._init_prog,
+                self._step_prog,
+                key,
+                xs,
+                params,
+                args,
+                num_particles=self.num_particles,
+                mesh=self.mesh,
+                particle_axis=self.particle_axis,
+            )
+
+        self._exec = jax.jit(_sweep)
+
+    def run(self, rng_key, xs, *args, params=None):
+        """Filter the observation sequence ``xs`` (pytree, leading axis T).
+        Returns `get_samples()` — final-step latent draws, particle axis
+        leading. Extra ``*args`` are forwarded to every program call and
+        must be jit-able (arrays / scalars)."""
+        self._result = self._exec(rng_key, xs, params or {}, tuple(args))
+        return self.get_samples()
+
+    # -- results -------------------------------------------------------------
+    @property
+    def result(self) -> SMCResult:
+        if self._result is None:
+            raise RuntimeError("no sweep yet — call .run(rng_key, xs) first")
+        return self._result
+
+    @property
+    def log_weights(self):
+        """Final-population log-weights (pair with `get_samples`)."""
+        return self.result.population.log_weights
+
+    def get_samples(self, group_by_chain: bool = False):
+        """Final-step latent draws, shaped (N, ...) — or (1, N, ...) with
+        ``group_by_chain=True`` (the particle axis as the draw axis of a
+        single 'chain', matching MCMC's convention). These are *weighted*
+        draws; weight by `log_weights` or resample for unweighted ones."""
+        latents = jax.tree.map(lambda x: x[-1], self.result.history.latents)
+        if group_by_chain:
+            return jax.tree.map(lambda x: x[None], latents)
+        return latents
+
+    def log_evidence(self):
+        return self.result.log_evidence
+
+    def effective_sample_size(self):
+        return effective_sample_size(self.log_weights)
+
+    def filtering_means(self):
+        """Per-step posterior filtering means: E[site_t | y_{0..t}] for every
+        latent site, weighted by that step's post-reweight weights. Leading
+        axis T (or T-1 when the init row could not be stacked)."""
+        h = self.result.history
+        return _weighted_means(h.latents, h.log_weights)
+
+    def ess_history(self):
+        return self.result.history.ess
+
+
+# ---------------------------------------------------------------------------
+# streaming filter (the serve-layer session object)
+# ---------------------------------------------------------------------------
+
+
+class FilterState(NamedTuple):
+    population: Population
+    log_z: jax.Array
+    t: jax.Array
+    rng_key: jax.Array
+
+
+class SMCFilter:
+    """Online particle filter: `init_state` once, then one `update` per
+    arriving observation — both compiled once, with the filter state an
+    explicit device-resident pytree (what a serving session holds between
+    requests). ``params`` is a traced argument of both, so a hot-swapped
+    checkpoint never recompiles (the serve-layer refresh contract).
+
+    >>> import jax, jax.numpy as jnp
+    >>> from repro.core import primitives as P
+    >>> from repro import distributions as dist
+    >>> def init(y):
+    ...     x = P.sample("x", dist.Normal(0.0, 1.0))
+    ...     P.sample("y", dist.Normal(x, 0.5), obs=y)
+    ...     return {"x": x}
+    >>> def step(carry, y):
+    ...     x = P.sample("x", dist.Normal(0.9 * carry["x"], 0.3))
+    ...     P.sample("y", dist.Normal(x, 0.5), obs=y)
+    ...     return {"x": x}
+    >>> f = SMCFilter(init, step, num_particles=256)
+    >>> state, info = f.init_state(jax.random.PRNGKey(0), jnp.float32(0.4))
+    >>> for y in (0.5, 0.1, -0.2):
+    ...     state, info = f.update(state, jnp.float32(y))
+    >>> int(state.t), f.num_traces  # 4 observations in, one compile
+    (4, 1)
+    >>> bool(abs(info["means"]["x"]) < 1.0)
+    True
+    """
+
+    def __init__(
+        self,
+        model_init: Callable,
+        model_step: Callable,
+        *,
+        proposal_init: Optional[Callable] = None,
+        proposal_step: Optional[Callable] = None,
+        num_particles: int = 1000,
+        ess_threshold: float = 0.5,
+        resample_method: Optional[str] = None,
+        mesh=None,
+        particle_axis=None,
+    ):
+        self.num_particles = num_particles
+        self.mesh = mesh
+        self.particle_axis = particle_axis
+        self._init_prog, self._step_prog = _build_programs(
+            model_init, model_step, proposal_init, proposal_step,
+            ess_threshold, resample_method,
+        )
+        self.num_traces = 0  # update-path retraces (the streaming hot loop)
+        self.num_init_traces = 0
+
+        def _init(key, y, params, args):
+            self.num_init_traces += 1
+            key_step, key0 = jax.random.split(key)
+            pop, aux = self._init_prog.init_population(
+                key0,
+                params,
+                self.num_particles,
+                (y,) + tuple(args),
+                mesh=self.mesh,
+                particle_axis=self.particle_axis,
+            )
+            state = FilterState(pop, jnp.float32(0.0), jnp.int32(1), key_step)
+            return state, self._info(state, aux)
+
+        def _update(state, y, params, args):
+            self.num_traces += 1
+            k = jax.random.fold_in(state.rng_key, state.t)
+            pop, aux = self._step_prog.run_population(
+                k,
+                params,
+                state.population,
+                (y,) + tuple(args),
+                mesh=self.mesh,
+                particle_axis=self.particle_axis,
+            )
+            state = FilterState(
+                pop, state.log_z + aux.log_z_incr, state.t + 1, state.rng_key
+            )
+            return state, self._info(state, aux)
+
+        self._init_exec = jax.jit(_init)
+        self._update_exec = jax.jit(_update)
+
+    def _info(self, state: FilterState, aux: StepAux) -> dict:
+        lw = state.population.log_weights
+        return {
+            "means": _weighted_means(aux.latents, aux.log_weights),
+            "ess": aux.ess,
+            "resampled": aux.resampled,
+            "log_evidence": state.log_z
+            + jax.scipy.special.logsumexp(lw)
+            - jnp.log(jnp.float32(self.num_particles)),
+        }
+
+    def init_state(self, rng_key, y0, *args, params=None):
+        return self._init_exec(rng_key, y0, params or {}, tuple(args))
+
+    def update(self, state: FilterState, y, *args, params=None):
+        """Advance one observation: (state, y) -> (state', info) with info =
+        {means, ess, resampled, log_evidence}."""
+        return self._update_exec(state, y, params or {}, tuple(args))
+
+
+# ---------------------------------------------------------------------------
+# nested variational objective (learned proposals)
+# ---------------------------------------------------------------------------
+
+
+class _scope(Messenger):
+    """Prefix sample-site names (params untouched) — lets `sequential_pair`
+    run init and step in one trace without site-name collisions."""
+
+    def __init__(self, fn, prefix: str):
+        self.prefix = prefix
+        super().__init__(fn)
+
+    def process_message(self, msg):
+        if msg["type"] == "sample":
+            msg["name"] = self.prefix + msg["name"]
+
+
+def sequential_pair(init: Callable, step: Callable) -> Callable:
+    """Fuse an (init, step) pair into one plain repro program running t=0
+    and t=1 with scoped site names. `SVI` traces it to discover `P.param`
+    sites (`NestedVariational` itself runs the real sweep from the pair it
+    was constructed with); also handy for prior simulation smoke checks."""
+
+    def fn(xs, *args, **kwargs):
+        leaves = jax.tree.leaves(xs)
+        T = leaves[0].shape[0] if leaves else 1
+        carry = _scope(init, "t0/")(
+            jax.tree.map(lambda x: x[0], xs), *args, **kwargs
+        )
+        if T > 1:
+            carry = _scope(step, "t1/")(
+                carry, jax.tree.map(lambda x: x[1], xs), *args, **kwargs
+            )
+        return carry
+
+    return fn
+
+
+class NestedVariational(ELBO):
+    """Variational SMC: the loss is ``-E[log Ẑ]`` where Ẑ is an inner
+    ``num_inner``-particle sweep with the learned proposals — a lower bound
+    on log Z that tightens as the proposals approach the locally optimal
+    ones (Naesseth et al.; the nested-variational composition of Stites &
+    Zimmermann §4). Reuses the shared `ELBO` engine: ``num_particles``
+    outer replications ride `vectorize_particles`/``mesh=``, and SVI's
+    compile-once `update_jit` keeps ``num_traces == 1``.
+
+    Construct with the target/proposal pairs; give `SVI` the fused
+    `sequential_pair` programs (param discovery only):
+
+        loss = NestedVariational(init, step, proposal_init=pi, proposal_step=ps)
+        svi = SVI(sequential_pair(init, step), sequential_pair(pi, ps), optim, loss)
+        state = svi.init(key, xs)        # xs: (T, ...) observations
+
+    Gradients flow through reparameterized proposal draws; ancestor
+    selection is zero-derivative by `ops.resample`'s custom VJP (the
+    standard biased-resampling VSMC gradient). Score-function terms for
+    non-reparameterizable proposal sites are not added — use reparameterized
+    proposals."""
+
+    def __init__(
+        self,
+        model_init: Callable,
+        model_step: Callable,
+        *,
+        proposal_init: Optional[Callable] = None,
+        proposal_step: Optional[Callable] = None,
+        num_inner: int = 8,
+        ess_threshold: float = 0.5,
+        resample_method: Optional[str] = None,
+        num_particles: int = 1,
+        mesh=None,
+        particle_axis=None,
+    ):
+        super().__init__(num_particles, mesh=mesh, particle_axis=particle_axis)
+        if num_inner < 1:
+            raise ValueError(f"num_inner must be >= 1, got {num_inner}")
+        self.num_inner = num_inner
+        self._init_prog, self._step_prog = _build_programs(
+            model_init, model_step, proposal_init, proposal_step,
+            ess_threshold, resample_method,
+        )
+
+    def _single_particle(self, rng_key, params, model, guide, args, kwargs):
+        # model/guide are SVI's discovery programs; the sweep runs the
+        # combinator programs this loss was constructed with
+        del model, guide, kwargs
+        xs, extra = args[0], tuple(args[1:])
+        result = smc_sweep(
+            self._init_prog,
+            self._step_prog,
+            rng_key,
+            xs,
+            params,
+            extra,
+            num_particles=self.num_inner,
+        )
+        return result.log_evidence, result.log_evidence

@@ -30,6 +30,7 @@ from .categorical_logprob import categorical_logprob_flat
 from .flash_attention import flash_attention_gqa
 from .gaussian import gaussian_combine_pairs
 from .leapfrog import leapfrog_fused
+from .resample import resample_counts_tiled
 from .semiring import SEMIRINGS, semiring_matmul_tiled
 from .ssd_scan import ssd_scan_chunked
 
@@ -80,6 +81,7 @@ _SUPPORT = {
     "leapfrog": ("tpu", "interpret", "reference"),
     "gaussian_combine": ("tpu", "interpret", "reference"),
     "gaussian_scan": ("tpu", "interpret", "reference"),
+    "resample": ("tpu", "interpret", "reference"),
 }
 
 
@@ -250,6 +252,72 @@ def semiring_matmul(
     return _semiring_matmul(
         a, b, semiring=semiring, block=block, backend=resolve_backend(backend)
     )
+
+
+# -- systematic resampling (SMC hot path) -------------------------------------
+
+
+# Resampling is piecewise-constant in the weights: perturbing a log-weight
+# moves an ancestor index only at the measure-zero cell boundaries, so the
+# true derivative is zero almost everywhere. The custom VJP makes that
+# explicit (zero cotangents to the cumsum and the grid) instead of leaving
+# the int32 output's differentiability to ambient float0 plumbing — the
+# standard stop-gradient-through-ancestry estimator variational SMC uses;
+# `infer.smc.NestedVariational` differentiates through the selected
+# particles' continuous values, never through the selection itself.
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _resample_counts_kernel(c, u, block, backend):
+    counts = resample_counts_tiled(
+        c, u, block_u=block, block_c=block, interpret=(backend == "interpret")
+    )
+    # the clip lives inside the VJP boundary so no int arithmetic is ever
+    # differentiated downstream of the kernel
+    return jnp.minimum(counts, c.shape[-1] - 1)
+
+
+def _resample_counts_kernel_fwd(c, u, block, backend):
+    return _resample_counts_kernel(c, u, block, backend), (c, u)
+
+
+def _resample_counts_kernel_bwd(block, backend, res, g):
+    c, u = res
+    return jnp.zeros_like(c), jnp.zeros_like(u)
+
+
+_resample_counts_kernel.defvjp(_resample_counts_kernel_fwd, _resample_counts_kernel_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "backend"))
+def _resample(log_weights, u0, *, block, backend):
+    if backend == "reference":
+        return ref.systematic_resample_ref(log_weights, u0)
+    n = log_weights.shape[-1]
+    # cumsum/grid construction is shared with the oracle, so reference and
+    # kernel backends count the exact same comparisons bit-for-bit
+    c = ref.resample_inputs_ref(log_weights)
+    u = ref.resample_grid_ref(u0, n)
+    return _resample_counts_kernel(c, u, block, backend)
+
+
+def resample(log_weights, u0, *, block: int = 256, backend: Optional[str] = None):
+    """Systematic resampling: ancestor indices for an SMC particle population.
+
+    log_weights: (N,) unnormalized particle log-weights (``-inf`` = dead
+    particle, never selected; an all ``-inf`` population degenerates to
+    uniform). u0: scalar uniform draw in [0, 1), shared by the whole sorted
+    grid u_i = (u0 + i)/N — one random number per resample event is what
+    makes systematic resampling lower-variance than multinomial. Returns (N,)
+    int32 ancestor indices, sorted (a free by-product of the sorted-grid
+    formulation). Gradients: zero (see `_resample_counts_kernel`)."""
+    log_weights = jnp.asarray(log_weights)
+    if log_weights.ndim != 1:
+        raise ValueError(
+            f"log_weights must be 1-D (the particle axis), got shape "
+            f"{log_weights.shape}; vmap over batch dims instead"
+        )
+    if log_weights.shape[0] < 1:
+        raise ValueError("need at least one particle to resample")
+    return _resample(log_weights, u0, block=block, backend=resolve_backend(backend))
 
 
 # -- fused HMC leapfrog (MCMC hot path) ---------------------------------------

@@ -205,6 +205,50 @@ def gaussian_scan_ref(factors):
     return out
 
 
+def resample_inputs_ref(log_weights) -> jax.Array:
+    """Normalized-weight cumsum for systematic resampling, shared by the
+    oracle and the kernel dispatch so both backends see bit-identical inputs.
+
+    Degenerate populations (every log-weight ``-inf``, so the normalizer is
+    ``-inf`` and self-normalization is 0/0) fall back to uniform weights:
+    when every particle is impossible, resampling keeps them all rather than
+    propagating NaN through the sweep."""
+    lw = jnp.asarray(log_weights, jnp.float32)
+    n = lw.shape[-1]
+    norm = jax.scipy.special.logsumexp(lw, axis=-1, keepdims=True)
+    finite = jnp.isfinite(norm)
+    w = jnp.where(
+        finite,
+        jnp.exp(lw - jnp.where(finite, norm, 0.0)),
+        jnp.float32(1.0 / n),
+    )
+    return jnp.cumsum(w, axis=-1)
+
+
+def resample_grid_ref(u0, n: int) -> jax.Array:
+    """The sorted systematic grid u_i = (u0 + i)/n, u0 ~ U[0, 1)."""
+    u0 = jnp.asarray(u0, jnp.float32)
+    return (u0 + jnp.arange(n, dtype=jnp.float32)) / n
+
+
+def systematic_resample_ref(log_weights, u0) -> jax.Array:
+    """Systematic-resampling oracle for `ops.resample`: ancestor indices for
+    n particles from unnormalized `log_weights` (n,) and one shared uniform
+    draw ``u0`` in [0, 1).
+
+    With c the normalized-weight cumsum and u_i = (u0 + i)/n the sorted
+    systematic grid, ancestor i is ``#{j : c_j <= u_i}`` — i.e.
+    ``searchsorted(c, u, side="right")`` — clipped to n-1 against float
+    rounding in the final cumsum entry. Zero-weight particles produce flat
+    cumsum runs and are never selected; all-equal weights reproduce the
+    identity permutation exactly (u0 < 1 keeps every u_i strictly inside its
+    own cumsum cell)."""
+    c = resample_inputs_ref(log_weights)
+    u = resample_grid_ref(u0, c.shape[-1])
+    idx = jnp.searchsorted(c, u, side="right")
+    return jnp.minimum(idx, c.shape[-1] - 1).astype(jnp.int32)
+
+
 def hmm_scan_ref(factors, *, semiring: str = "logsumexp") -> jax.Array:
     """Sequential left-fold oracle for `ops.hmm_scan`: the ordered semiring
     product F_0 ⊗ F_1 ⊗ ... ⊗ F_{T-1} of a (..., T, K, K) stack of log-factors,

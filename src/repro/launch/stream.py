@@ -219,6 +219,11 @@ def main(argv=None) -> int:
         for t in threads:
             t.join()
         wall = time.time() - t0
+        # warm the post-swap probe's 1-row bucket: under load the coalescer
+        # may never have produced it, and its first compile would otherwise
+        # be misread below as a swap-caused recompile
+        _post(server.address, "/v1/models/regression-stream:predict",
+              {"inputs": {"x": [[0.1] * _DIM]}})
         traces_after_traffic = servable.num_traces
         # ensure at least one hot swap happened while the server is live
         trainer.wait_for_commit(timeout=60.0)

@@ -20,10 +20,23 @@ each site inventing its own convention:
 `RetraceCounted` is the structural protocol (``isinstance`` works via
 ``runtime_checkable``); `assert_num_traces` is the shared test/bench
 helper that failure-messages consistently.
+
+`InferenceEngine` extends the contract to the sample-producing engines
+(MCMC, SMC, ImportanceSampling): one surface — ``run(key, *args)`` to
+execute, ``get_samples(group_by_chain=...)`` to read draws with a uniform
+(chains/populations, draws, ...) axis convention, ``num_traces`` to assert
+compile stability — so drivers, benches, and serving adapters can treat
+"an inference engine" as a type instead of special-casing each algorithm.
+The canonical kwarg spellings shared across engines (PR-9 config
+playbook): ``num_samples`` counts posterior draws, ``num_particles``
+counts i.i.d. particle replications, and ``mesh=``/``particle_axis=``
+name the sharding; legacy spellings (`Importance(num_samples=...)` as a
+particle count, `MCMC(chain_method=...)`) survive as FutureWarning
+aliases with parity-pinned tests.
 """
 from __future__ import annotations
 
-from typing import Protocol, runtime_checkable
+from typing import Any, Protocol, runtime_checkable
 
 
 @runtime_checkable
@@ -32,6 +45,20 @@ class RetraceCounted(Protocol):
 
     @property
     def num_traces(self) -> int: ...
+
+
+@runtime_checkable
+class InferenceEngine(Protocol):
+    """A sample-producing inference engine: run it, read draws, audit its
+    compile stability. Structural — MCMC, SMC, and ImportanceSampling all
+    satisfy it without inheriting anything."""
+
+    @property
+    def num_traces(self) -> int: ...
+
+    def run(self, rng_key, *args, **kwargs) -> Any: ...
+
+    def get_samples(self, group_by_chain: bool = False) -> Any: ...
 
 
 def num_traces(obj: RetraceCounted) -> int:

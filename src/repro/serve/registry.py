@@ -27,6 +27,12 @@ Artifact constructors:
   `checkpoint.store` directory (optionally resharded onto a serving mesh)
   and serve it via `from_svi`; the restored step is kept on
   ``servable.restored_step``.
+* `ServableModel.from_smc(name, model_init, model_step)` — online state
+  estimation: each request row is an observation *window* (row axis x time
+  axis) filtered by an independent SMC sweep, returning per-step filtering
+  means and the window's marginal likelihood. The servable also carries
+  ``.filter_engine`` (an `SMCFilter`), which `serve/server.py` drives for
+  the streaming per-session ``:filter`` route.
 
 The serving contract for the wrapped model: it takes ONE positional
 argument, the request batch pytree, whose leading dim is the batch.
@@ -57,6 +63,7 @@ class ServableModel:
         self.kind = kind
         self.meta = meta or {}
         self.restored_step: Optional[int] = None
+        self.filter_engine = None  # SMCFilter for `from_smc` servables
         self.engine = CompiledServable(fn, **engine_kwargs)
 
     def predict(self, rng_key, batch: Any) -> Any:
@@ -164,6 +171,67 @@ class ServableModel:
         return cls(name, fn, kind="discrete",
                    state={"data": dict(data or {})},
                    meta={"temperature": temperature}, **engine_kwargs)
+
+    @classmethod
+    def from_smc(cls, name: str, model_init: Callable, model_step: Callable, *,
+                 proposal_init: Optional[Callable] = None,
+                 proposal_step: Optional[Callable] = None,
+                 params: Optional[Dict] = None,
+                 num_particles: int = 1000,
+                 ess_threshold: float = 0.5,
+                 resample_method: Optional[str] = None,
+                 **engine_kwargs) -> "ServableModel":
+        """Serve filtering posteriors for online state estimation.
+
+        Batched (``:predict``) traffic: each request row is one observation
+        window — leading axis rows, second axis time — and every row runs an
+        independent `smc_sweep` (vmapped, so the whole batch is one compiled
+        call per bucket). The response per row is ``{"means": per-step
+        filtering means, "log_evidence": the window's log-marginal
+        likelihood}``.
+
+        ``params`` (e.g. `NestedVariational`-trained proposal parameters)
+        ride the traced signature; ``refresh(params=...)`` hot-swaps them
+        with no recompile — the same contract as `from_svi`.
+
+        Streaming traffic: the returned servable carries ``.filter_engine``,
+        an `SMCFilter` over the same programs, which `InferenceServer`'s
+        per-session ``:filter`` route advances one observation at a time
+        (the filter state lives server-side between requests)."""
+        from ..infer.smc import (
+            SMCFilter, _build_programs, _weighted_means, smc_sweep,
+        )
+
+        init_prog, step_prog = _build_programs(
+            model_init, model_step, proposal_init, proposal_step,
+            ess_threshold, resample_method,
+        )
+
+        def fn(key, batch, state):
+            rows = jax.tree_util.tree_leaves(batch)[0].shape[0]
+            keys = jax.random.split(key, rows)
+
+            def one(k, xs):
+                r = smc_sweep(
+                    init_prog, step_prog, k, xs, state["params"],
+                    num_particles=num_particles,
+                )
+                means = _weighted_means(r.history.latents, r.history.log_weights)
+                return {"means": means, "log_evidence": r.log_evidence}
+
+            return jax.vmap(one)(keys, batch)
+
+        servable = cls(name, fn, kind="smc",
+                       state={"params": dict(params or {})},
+                       meta={"num_particles": num_particles},
+                       **engine_kwargs)
+        servable.filter_engine = SMCFilter(
+            model_init, model_step,
+            proposal_init=proposal_init, proposal_step=proposal_step,
+            num_particles=num_particles, ess_threshold=ess_threshold,
+            resample_method=resample_method,
+        )
+        return servable
 
     @classmethod
     def from_checkpoint(cls, name: str, model: Callable, directory: str, *,

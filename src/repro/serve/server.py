@@ -14,8 +14,17 @@ Routes (all JSON):
     GET  /v1/models/<name>                 one model's metadata
     GET  /v1/models/<name>/stats           ServeStats summary + num_traces
     POST /v1/models/<name>:predict         {"inputs": ..., "deadline_ms": ...}
+    POST /v1/models/<name>:filter          {"session": ..., "observation": ...}
     POST /admin/models/<name>/refresh      hot-swap from a checkpoint dir
     POST /admin/device-loss                plan_remesh for surviving hosts
+
+The ``:filter`` route is the streaming traffic pattern for `from_smc`
+servables: each ``session`` holds a device-resident `SMCFilter` state
+server-side, advanced one observation per request (first request — or
+``"reset": true`` — initializes it). Responses carry the session's step
+count, per-site filtering means, ESS, and running log-evidence. Unlike
+``:predict``, filter requests are ordered per session, so they bypass the
+micro-batcher; the compiled `SMCFilter.update` is the whole cost.
 
 Request deadline precedence: per-request ``deadline_ms`` in the body >
 the ``REPRO_SERVE_DEADLINE_MS`` knob > no deadline (requests always
@@ -84,6 +93,9 @@ class InferenceServer:
         self.default_deadline_ms = default_deadline_ms
         self.chips_per_host = chips_per_host
         self.model_parallelism = model_parallelism
+        # streaming filter sessions: (model, session id) -> FilterState
+        self._filter_states: Dict[tuple, Any] = {}
+        self._filter_lock = threading.Lock()
         self._httpd = ThreadingHTTPServer((host, port), _make_handler(self))
         self._httpd.daemon_threads = True
         self._thread: Optional[threading.Thread] = None
@@ -160,6 +172,11 @@ class InferenceServer:
             if name not in self.models:
                 return 404, {"error": f"no model '{name}'"}
             return self._predict(name, body)
+        if path.startswith("/v1/models/") and path.endswith(":filter"):
+            name = path[len("/v1/models/"):-len(":filter")]
+            if name not in self.models:
+                return 404, {"error": f"no model '{name}'"}
+            return self._filter(name, body)
         if path.startswith("/admin/models/") and path.endswith("/refresh"):
             name = path[len("/admin/models/"):-len("/refresh")]
             if name not in self.models:
@@ -189,6 +206,48 @@ class InferenceServer:
         except ValueError as e:
             return 400, {"error": str(e)}
         return 200, {"outputs": _to_json(out)}
+
+    def _filter(self, name: str, body: Dict[str, Any]) -> tuple:
+        """Streaming SMC: advance one observation through the session's
+        server-side filter state. The first request for a session (or
+        ``"reset": true``) initializes the filter from the observation; the
+        session key is derived deterministically from the session id, so a
+        replayed stream reproduces bit-for-bit."""
+        import zlib
+
+        servable = self.models[name]
+        if servable.filter_engine is None:
+            return 400, {
+                "error": f"model '{name}' is not an SMC servable "
+                         f"(kind={servable.kind!r}; build it with "
+                         "ServableModel.from_smc for streaming filtering)"
+            }
+        if "observation" not in body:
+            return 400, {"error": "missing 'observation'"}
+        session = str(body.get("session", "default"))
+        try:
+            y = _to_batch(body["observation"])
+        except Exception as e:  # noqa: BLE001 — malformed client payload
+            return 400, {"error": f"bad observation: {e}"}
+        eng = servable.filter_engine
+        params = (servable.engine.state or {}).get("params", {})
+        skey = (name, session)
+        with self._filter_lock:
+            state = None if body.get("reset") else self._filter_states.get(skey)
+            if state is None:
+                rng = jax.random.PRNGKey(zlib.crc32(session.encode()) & 0x7FFFFFFF)
+                state, info = eng.init_state(rng, y, params=params)
+            else:
+                state, info = eng.update(state, y, params=params)
+            self._filter_states[skey] = state
+        return 200, {
+            "session": session,
+            "t": int(state.t),
+            "means": _to_json(info["means"]),
+            "ess": float(info["ess"]),
+            "resampled": bool(info["resampled"]),
+            "log_evidence": float(info["log_evidence"]),
+        }
 
     def _refresh(self, name: str, body: Dict[str, Any]) -> tuple:
         """Hot-swap `name` from a committed checkpoint directory. The swap is

@@ -105,6 +105,12 @@ _KNOB_ROWS = [
          "`0`/`off`/`none` disables"),
     Knob("REPRO_COMPILATION_CACHE_MIN_COMPILE_S", "0.5", "float",
          "only compilations slower than this persist to the cache"),
+    Knob("REPRO_SMC_RESAMPLE", "systematic", "str",
+         "default SMC resampling scheme: `systematic` (the `ops.resample` "
+         "sorted-uniform kernel, one shared uniform per event) or "
+         "`multinomial` (`jax.random.categorical`, N independent draws — "
+         "higher variance, kept for A/B checks)",
+         choices=("systematic", "multinomial")),
     Knob("REPRO_SERVE_DEADLINE_MS", None, "float",
          "default per-request deadline for the HTTP serving front end "
          "(`serve/server.py`); requests whose projected queue wait exceeds "

@@ -25,12 +25,13 @@
 #                 exactly the way users run them (installed package path,
 #                 no sys.path hacks)
 #   bench       - smoke-mode benchmarks; writes BENCH_enum.json,
-#                 BENCH_serve.json, BENCH_mcmc.json and BENCH_gaussian.json
-#                 (uploaded as workflow
+#                 BENCH_serve.json, BENCH_mcmc.json, BENCH_gaussian.json and
+#                 BENCH_smc.json (uploaded as workflow
 #                 artifacts) and FAILS on any retrace-counter regression, if
 #                 the bucketed serve path drops under its 5x-vs-naive floor,
-#                 or if the fused MCMC driver drops under 2x the legacy
-#                 sampler's draws/sec at 1024 chains
+#                 if the fused MCMC driver drops under 2x the legacy
+#                 sampler's draws/sec at 1024 chains, or if the SMC logZ
+#                 estimator stops converging on its exact Kalman target
 #   bench-gate  - bench-regression gate: diffs the freshly written
 #                 BENCH_*.json steady-state numbers against the committed
 #                 (HEAD) baselines; >25% regression fails (tune with
@@ -48,10 +49,10 @@ export JAX_PLATFORMS=cpu
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 
 # Coverage floor (percent). Calibrated with tools/coverage_floor.py on the
-# engine suite (74.2% measured at the fused-MCMC PR), minus ~5 points of
+# engine suite (76.9% measured at the SMC PR), minus ~5 points of
 # margin for coverage.py-vs-estimator methodology and the 3.10/3.12 matrix.
 # Ratchet UP as coverage grows; never lower it to land code.
-REPRO_COV_FLOOR="${REPRO_COV_FLOOR:-69}"
+REPRO_COV_FLOOR="${REPRO_COV_FLOOR:-71}"
 
 STEP="${1:-all}"
 if [[ $# -gt 0 ]]; then shift; fi
@@ -123,6 +124,7 @@ run_docs() {
     python -m pytest -q --doctest-modules \
         src/repro/infer/mcmc.py src/repro/infer/diagnostics.py \
         src/repro/infer/predictive.py src/repro/infer/autoguide.py \
+        src/repro/infer/smc.py \
         src/repro/serve/engine.py src/repro/settings.py
     python -m doctest docs/inference.md docs/backends.md docs/enumeration.md \
         docs/kernels.md docs/serving.md
@@ -156,6 +158,7 @@ run_bench() {
     python benchmarks/serve_bench.py --smoke --json BENCH_serve.json
     python benchmarks/mcmc_bench.py --smoke --json BENCH_mcmc.json
     python benchmarks/gaussian_ve.py --smoke --json BENCH_gaussian.json
+    python benchmarks/smc_bench.py --smoke --json BENCH_smc.json
     python - <<'PY'
 from repro.launch.compile_cache import compilation_cache_stats
 from repro.infer import plan_cache_stats
@@ -165,7 +168,7 @@ PY
 }
 
 run_bench_gate() {
-    python benchmarks/check_regression.py BENCH_enum.json BENCH_serve.json BENCH_mcmc.json BENCH_gaussian.json
+    python benchmarks/check_regression.py BENCH_enum.json BENCH_serve.json BENCH_mcmc.json BENCH_gaussian.json BENCH_smc.json
 }
 
 case "$STEP" in

@@ -213,10 +213,9 @@ def test_thinning_shapes():
 def test_sharded_matches_vectorized_on_one_device_mesh():
     mesh = jax.make_mesh((1,), ("data",))
     runs = {}
-    for method, kw in (("vectorized", {}), ("sharded", {"mesh": mesh})):
+    for method, kw in (("vectorized", {"mesh": None}), ("sharded", {"mesh": mesh})):
         mcmc = MCMC(
-            small_hmc(), num_warmup=60, num_samples=50, num_chains=2,
-            chain_method=method, **kw,
+            small_hmc(), num_warmup=60, num_samples=50, num_chains=2, **kw,
         )
         mcmc.run(jax.random.PRNGKey(0), DATA)
         runs[method] = (
@@ -230,8 +229,10 @@ def test_sharded_matches_vectorized_on_one_device_mesh():
 
 
 def test_chain_method_validation():
-    with pytest.raises(ValueError):
+    with pytest.warns(FutureWarning), pytest.raises(ValueError):
         MCMC(small_hmc(), 10, 10, chain_method="pmap")
+    with pytest.raises(ValueError):
+        MCMC(small_hmc(), 10, 10, mesh="tpu")
 
 
 def test_fused_sharded_matches_vectorized_with_kernels(monkeypatch):
@@ -241,10 +242,10 @@ def test_fused_sharded_matches_vectorized_with_kernels(monkeypatch):
     monkeypatch.setenv("REPRO_KERNEL_BACKEND", "interpret")
     mesh = jax.make_mesh((1,), ("data",))
     runs = {}
-    for method, kw in (("vectorized", {}), ("sharded", {"mesh": mesh})):
+    for method, kw in (("vectorized", {"mesh": None}), ("sharded", {"mesh": mesh})):
         mcmc = MCMC(
             small_hmc(), num_warmup=40, num_samples=30, num_chains=2,
-            chain_method=method, fused=True, **kw,
+            fused=True, **kw,
         )
         mcmc.run(jax.random.PRNGKey(0), DATA)
         runs[method] = (mcmc.get_samples(group_by_chain=True), mcmc.get_extra_fields())

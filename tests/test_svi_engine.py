@@ -307,6 +307,7 @@ def test_backend_support_matrix_complete():
         "leapfrog",
         "gaussian_combine",
         "gaussian_scan",
+        "resample",
     }
     for row in m.values():
         assert set(row) == set(ops.BACKENDS)
